@@ -1,0 +1,80 @@
+"""Shared benchmark machinery: load generation, scheme table, CSV output.
+
+Benchmarks run on the SIMULATION engine pool (latency profiles calibrated
+to the paper's 3090-class measurements, divided by REPRO_SIM_SPEED so the
+suite fits in container time — ratios between schemes are preserved; see
+engines/sim_engines.py). Table 3 uses the REAL JAX engines.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+
+import numpy as np
+
+from repro.core.apps import ALL_APPS
+from repro.core.teola import AutoGenLike, LlamaDist, LlamaDistPC, Teola
+from repro.engines.sim_engines import SPEED, build_sim_engines
+from repro.training.data import doc_corpus
+
+QUESTIONS = [
+    "what is fact 3 about optics",
+    "tell me fact 7 about finance",
+    "which value belongs to fact 12 about llm systems",
+    "what is fact 5 about biology",
+    "explain fact 9 about chess",
+    "what is fact 2 about espresso",
+    "summarize fact 4 about sailing",
+    "give the value of fact 8 about volcanoes",
+]
+
+SCHEMES = {
+    # name -> (orchestrator class, engine scheduling policy)
+    "LlamaDist-PO": (LlamaDist, "po"),
+    "LlamaDist-TO": (LlamaDist, "to"),
+    "LlamaDistPC-TO": (LlamaDistPC, "to"),
+    "AutoGen-TO": (AutoGenLike, "to"),
+    "Teola": (Teola, "topo"),
+}
+
+
+def make_queries(n: int, num_docs: int = 3, seed: int = 0):
+    rng = random.Random(seed)
+    docs = doc_corpus(num_docs)
+    return [{"question": rng.choice(QUESTIONS), "docs": docs}
+            for _ in range(n)]
+
+
+def run_one(app_factory, scheme: str, query: dict, **app_kw):
+    engines = build_sim_engines()
+    app = app_factory(engines, **app_kw)
+    cls, policy = SCHEMES[scheme]
+    orch = cls(app, engines, policy=policy)
+    out, ctx = orch.query(dict(query), timeout=300)
+    orch.shutdown()
+    return ctx
+
+
+def run_load(app_factory, scheme: str, queries, rate_per_s: float,
+             seed: int = 0, timeout: float = 300, **app_kw):
+    """Poisson arrivals at `rate_per_s` (wall-clock; the sim SPEED factor
+    applies to rates and service times alike). Returns per-query latencies."""
+    engines = build_sim_engines()
+    app = app_factory(engines, **app_kw)
+    cls, policy = SCHEMES[scheme]
+    orch = cls(app, engines, policy=policy)
+    rng = np.random.default_rng(seed)
+    ctxs = []
+    for q in queries:
+        ctxs.append(orch.submit(dict(q)))
+        time.sleep(float(rng.exponential(1.0 / (rate_per_s * SPEED))))
+    for c in ctxs:
+        c.done.wait(timeout)
+    lats = [c.latency for c in ctxs if c.t_done]
+    orch.shutdown()
+    return np.array(lats), engines
+
+
+def fmt_row(*cols):
+    return ",".join(str(c) for c in cols)

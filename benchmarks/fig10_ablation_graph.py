@@ -1,0 +1,47 @@
+"""Paper Fig. 10: graph-optimization ablation on advanced-RAG QA.
+Parallelization = Pass 1 (pruning) + Pass 3 (prefill split);
+Pipelining     = Pass 2 (stage decomposition) + Pass 4 (decode pipeline).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import fmt_row, make_queries
+from repro.core.apps import advanced_rag
+from repro.core.teola import Teola
+from repro.engines.sim_engines import build_sim_engines
+
+VARIANTS = {
+    "no_opt": (),
+    "parallel_only": ("prune", "prefill_split"),
+    "pipeline_only": ("prune", "stage", "decode_pipeline"),
+    "full": ("prune", "stage", "prefill_split", "decode_pipeline"),
+}
+# note: pipelining passes require pruned data edges to act on, so 'prune'
+# is included; 'no_opt' is the raw p-graph (template edges intact).
+
+
+def _single(passes, n=3):
+    lats = []
+    for i in range(n):
+        engines = build_sim_engines()
+        app = advanced_rag(engines)
+        orch = Teola(app, engines, passes=passes)
+        q = make_queries(1, seed=i)[0]
+        _, ctx = orch.query(q, timeout=300)
+        lats.append(ctx.latency)
+        orch.shutdown()
+    return float(np.mean(lats))
+
+
+def run():
+    print("variant,avg_single_query_ms,speedup_vs_no_opt")
+    base = None
+    for name, passes in VARIANTS.items():
+        avg = _single(passes)
+        base = base or avg
+        print(fmt_row(name, round(avg * 1000, 1), round(base / avg, 2)))
+
+
+if __name__ == "__main__":
+    run()

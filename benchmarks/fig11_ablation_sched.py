@@ -1,0 +1,31 @@
+"""Paper Fig. 11: runtime-scheduling ablation — topology-aware batching
+vs blind FIFO batching (policy 'to') for Teola's e-graphs, single-query
+and under multi-query load."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import fmt_row, make_queries, run_load
+from repro.core.apps import advanced_rag
+
+
+def run(n_queries: int = 8):
+    print("setting,policy,avg_ms,speedup")
+    for setting, rate in (("single", 0.2), ("load_r2", 2.0)):
+        res = {}
+        for scheme_policy in ("to", "topo"):
+            queries = make_queries(1 if setting == "single" else n_queries)
+            # reuse the Teola orchestrator with a swapped engine policy
+            from benchmarks.common import SCHEMES
+            SCHEMES["_tmp"] = (SCHEMES["Teola"][0], scheme_policy)
+            lats, _ = run_load(advanced_rag, "_tmp", queries, rate)
+            del SCHEMES["_tmp"]
+            res[scheme_policy] = float(np.mean(lats))
+        print(fmt_row(setting, "blind_TO", round(res["to"] * 1000, 1), 1.0))
+        print(fmt_row(setting, "topology_aware",
+                      round(res["topo"] * 1000, 1),
+                      round(res["to"] / res["topo"], 2)))
+
+
+if __name__ == "__main__":
+    run()

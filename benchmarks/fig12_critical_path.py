@@ -1,0 +1,42 @@
+"""Paper Fig. 12: breakdown of Teola's execution critical path — graph
+optimization overhead, queueing, and execution time."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import fmt_row, make_queries
+from repro.core.apps import advanced_rag
+from repro.core.pgraph import graph_transform
+from repro.core.passes import graph_opt
+from repro.core.teola import Teola
+from repro.engines.sim_engines import build_sim_engines
+
+
+def run(n: int = 4):
+    engines = build_sim_engines()
+    app = advanced_rag(engines)
+    orch = Teola(app, engines)
+    opt_times, e2e, exec_times = [], [], []
+    for i in range(n):
+        q = make_queries(1, seed=i)[0]
+        t0 = time.time()
+        g = graph_transform(app, q)
+        g = graph_opt(g, app.engines)
+        opt_times.append(time.time() - t0)
+        _, ctx = orch.query(q, timeout=300)
+        e2e.append(ctx.latency)
+        busy = sum((b or a) - a for a, b in ctx.node_spans.values())
+        exec_times.append(busy)
+    orch.shutdown()
+    print("metric,ms,share_pct")
+    opt = float(np.mean(opt_times))
+    tot = float(np.mean(e2e))
+    print(fmt_row("graph_optimization", round(opt * 1000, 2),
+                  round(100 * opt / tot, 2)))
+    print(fmt_row("end_to_end", round(tot * 1000, 2), 100.0))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Paper Fig. 1: latency breakdown by task module under module-level
+orchestration (LlamaDist) — shows non-LLM modules' share of end-to-end
+time, the paper's motivating observation."""
+from __future__ import annotations
+
+from collections import defaultdict
+
+from benchmarks.common import fmt_row, make_queries, run_one
+from repro.core.apps import (advanced_rag, contextual_retrieval, naive_rag,
+                             search_gen)
+
+
+def run():
+    print("app,component,share_pct,ms")
+    for name, factory in [("search_gen", search_gen),
+                          ("naive_rag", naive_rag),
+                          ("advanced_rag", advanced_rag),
+                          ("contextual_retrieval", contextual_retrieval)]:
+        q = make_queries(1)[0]
+        ctx = run_one(factory, "LlamaDist-TO", q)
+        per_comp = defaultdict(float)
+        for pid, (a, b) in ctx.node_spans.items():
+            comp = ctx.graph.nodes[pid].component
+            per_comp[comp] += (b or a) - a
+        total = sum(per_comp.values()) or 1.0
+        llm_share = 0.0
+        for comp, t in sorted(per_comp.items(), key=lambda kv: -kv[1]):
+            print(fmt_row(name, comp, round(100 * t / total, 1),
+                          round(t * 1000, 1)))
+            if "synthesize" in comp or "expansion" in comp:
+                llm_share += t / total
+        print(fmt_row(name, "NON_LLM_TOTAL",
+                      round(100 * (1 - llm_share), 1), ""))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Paper Fig. 8: end-to-end latency of the four applications under each
+scheme at low and high request rates."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SCHEMES, fmt_row, make_queries, run_load
+from repro.core.apps import (advanced_rag, contextual_retrieval, naive_rag,
+                             search_gen)
+
+APPS = [("search_gen", search_gen), ("naive_rag", naive_rag),
+        ("advanced_rag", advanced_rag),
+        ("contextual_retrieval", contextual_retrieval)]
+RATES = [("low", 1.0), ("high", 3.0)]
+
+
+def run(n_queries: int = 10, quick: bool = False):
+    rows = []
+    apps = APPS[:2] if quick else APPS
+    for app_name, factory in apps:
+        base = {}
+        for rate_name, rate in RATES:
+            queries = make_queries(n_queries)
+            for scheme in SCHEMES:
+                lats, _ = run_load(factory, scheme, queries, rate)
+                avg = float(np.mean(lats)) if len(lats) else float("nan")
+                p99 = float(np.percentile(lats, 99)) if len(lats) else 0
+                base.setdefault(rate_name, avg)
+                rows.append((app_name, rate_name, scheme,
+                             round(avg * 1000, 1), round(p99 * 1000, 1),
+                             round(base[rate_name] / avg, 2)))
+    print("app,rate,scheme,avg_ms,p99_ms,speedup_vs_first")
+    for r in rows:
+        print(fmt_row(*r))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Paper Fig. 9: co-located applications (naive + advanced RAG QA sharing
+one engine pool) — Teola vs the stronger baseline LlamaDistPC."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import SCHEMES, fmt_row, make_queries
+from repro.core.apps import advanced_rag, naive_rag
+from repro.engines.sim_engines import SPEED, build_sim_engines
+
+
+def _run(scheme: str, n_per_app: int = 6, rate: float = 1.5):
+    engines = build_sim_engines()
+    cls, policy = SCHEMES[scheme]
+    apps = {"naive": naive_rag(engines), "advanced": advanced_rag(engines)}
+    orchs = {k: cls(a, engines, policy=policy) for k, a in apps.items()}
+    rng = np.random.default_rng(0)
+    ctxs = {"naive": [], "advanced": []}
+    for i in range(n_per_app):
+        for k in ("naive", "advanced"):
+            q = make_queries(1, seed=i)[0]
+            ctxs[k].append(orchs[k].submit(q))
+            time.sleep(float(rng.exponential(1.0 / (rate * SPEED))))
+    out = {}
+    for k, cs in ctxs.items():
+        for c in cs:
+            c.done.wait(300)
+        out[k] = float(np.mean([c.latency for c in cs if c.t_done]))
+    for o in orchs.values():
+        o.shutdown()
+    return out
+
+
+def run():
+    print("app,scheme,avg_ms,speedup")
+    pc = _run("LlamaDistPC-TO")
+    te = _run("Teola")
+    for k in ("naive", "advanced"):
+        print(fmt_row(k, "LlamaDistPC-TO", round(pc[k] * 1000, 1), 1.0))
+        print(fmt_row(k, "Teola", round(te[k] * 1000, 1),
+                      round(pc[k] / te[k], 2)))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""LLM engine instance scaling (paper §7.1 testbed provisions 2 LLM
+instances) + e-graph cache overhead: extensions beyond the core figures.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import fmt_row, make_queries
+from repro.core.apps import advanced_rag
+from repro.core.teola import Teola
+from repro.engines.sim_engines import SPEED, build_sim_engines
+
+
+def run(n_queries: int = 8, rate: float = 3.0):
+    print("study,config,avg_ms,speedup")
+    base = None
+    for inst in (1, 2):
+        engines = build_sim_engines(llm_instances=inst)
+        app = advanced_rag(engines)
+        orch = Teola(app, engines)
+        rng = np.random.default_rng(0)
+        ctxs = []
+        for q in make_queries(n_queries):
+            ctxs.append(orch.submit(q))
+            time.sleep(float(rng.exponential(1.0 / (rate * SPEED))))
+        for c in ctxs:
+            c.done.wait(300)
+        avg = float(np.mean([c.latency for c in ctxs if c.t_done]))
+        base = base or avg
+        print(fmt_row("llm_instances", f"x{inst}", round(avg * 1000, 1),
+                      round(base / avg, 2)))
+        orch.shutdown()
+
+    # e-graph cache: build time cold vs hot
+    engines = build_sim_engines()
+    app = advanced_rag(engines)
+    orch = Teola(app, engines)
+    q = make_queries(1)[0]
+    t0 = time.time()
+    orch.build_egraph(dict(q), use_cache=False)
+    cold = (time.time() - t0) * 1000
+    orch.build_egraph(dict(q))           # populate
+    t0 = time.time()
+    orch.build_egraph(dict(q))
+    hot = (time.time() - t0) * 1000
+    print(fmt_row("egraph_cache", "cold_build", round(cold, 3), 1.0))
+    print(fmt_row("egraph_cache", "cached", round(hot, 3),
+                  round(cold / max(hot, 1e-6), 1)))
+    orch.shutdown()
+
+
+if __name__ == "__main__":
+    run()

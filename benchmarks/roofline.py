@@ -1,0 +1,50 @@
+"""Roofline table: reads the dry-run artifacts (experiments/dryrun/*.json)
+and prints per-(arch x shape x mesh) compute/memory/collective terms,
+dominant bottleneck, and useful-FLOPs ratio — deliverable (g)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import fmt_row
+
+
+def load(out_dir="experiments/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def run(out_dir: str = "experiments/dryrun"):
+    recs = load(out_dir)
+    if not recs:
+        print("roofline,no dry-run artifacts found (run "
+              "`python -m repro.launch.dryrun --all` first)")
+        return
+    print("arch,shape,mesh,compute_ms,memory_ms,collective_ms,dominant,"
+          "useful_flops_ratio,args_GiB,temp_GiB")
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        t = r["roofline_terms_s"]
+        mem = r.get("memory_analysis", {})
+        print(fmt_row(
+            r["arch"], r["shape"], r["mesh"],
+            round(t["compute_s"] * 1e3, 3),
+            round(t["memory_s"] * 1e3, 3),
+            round(t["collective_s"] * 1e3, 3),
+            r["dominant_term"],
+            round(r.get("useful_flops_ratio") or 0.0, 3),
+            round(mem.get("argument_size_in_bytes", 0) / 2 ** 30, 2),
+            round(mem.get("temp_size_in_bytes", 0) / 2 ** 30, 2)))
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    for r in skipped:
+        print(fmt_row(r["arch"], r["shape"], r["mesh"], "skip", "", "",
+                      r.get("skip_reason", ""), "", "", ""))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Benchmark aggregator: one section per paper table/figure, CSV output.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only SECTION]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller query counts / app subset")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (fig1_breakdown, fig4_batching, fig8_end_to_end,
+                            fig9_colocation, fig10_ablation_graph,
+                            fig11_ablation_sched, fig12_critical_path,
+                            instances_scaling, roofline, table3_prefill)
+
+    sections = [
+        ("fig1_breakdown", lambda: fig1_breakdown.run()),
+        ("fig4_batching", lambda: fig4_batching.run()),
+        ("fig8_end_to_end", lambda: fig8_end_to_end.run(
+            n_queries=6 if args.quick else 10, quick=args.quick)),
+        ("fig9_colocation", lambda: fig9_colocation.run()),
+        ("fig10_ablation_graph", lambda: fig10_ablation_graph.run()),
+        ("fig11_ablation_sched", lambda: fig11_ablation_sched.run()),
+        ("fig12_critical_path", lambda: fig12_critical_path.run()),
+        ("table3_prefill", lambda: table3_prefill.run()),
+        ("instances_scaling", lambda: instances_scaling.run()),
+        ("roofline", lambda: roofline.run()),
+    ]
+    failed = []
+    for name, fn in sections:
+        if args.only and args.only != name:
+            continue
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append(name)
+        print(f"----- {name} done in {time.time() - t0:.1f}s -----")
+    if failed:
+        print(f"\nFAILED sections: {failed}")
+        sys.exit(1)
+    print("\nall benchmark sections completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Quickstart: build an app from the template API, optimize one query's
+graph, and run it end-to-end on REAL JAX engines (CPU).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+from repro.core.apps import build_engines, naive_rag
+from repro.core.teola import Teola
+from repro.training.data import doc_corpus
+
+
+def main():
+    print("building engines (tiny JAX models on CPU)...")
+    engines = build_engines()
+    app = naive_rag(engines)
+    teola = Teola(app, engines)
+
+    query = {"question": "what is fact 3 about optics",
+             "docs": doc_corpus(2)}
+
+    g = teola.build_egraph(query)
+    print(f"\noptimized e-graph: {len(g.nodes)} primitives")
+    for n in sorted(g.nodes.values(), key=lambda n: -n.depth):
+        print(f"  depth={n.depth:2d} {n.op:20s} engine={n.engine:10s} "
+              f"component={n.component}")
+
+    print("\nwarmup (jit compilation)...")
+    teola.query(dict(query), timeout=300)
+
+    t0 = time.time()
+    answer, ctx = teola.query(dict(query), timeout=300)
+    print(f"\nanswer tokens: {answer!r}")
+    print(f"end-to-end latency: {(time.time() - t0) * 1000:.1f} ms")
+    print(f"retrieved context: "
+          f"{[c['text'][:40] for c in ctx.store.get('retrieved', [])][:2]}")
+    teola.shutdown()
+
+
+if __name__ == "__main__":
+    main()

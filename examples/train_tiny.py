@@ -1,0 +1,51 @@
+"""Training-substrate driver: train the engine-scale core LLM for a few
+hundred steps on the synthetic pipeline with checkpointing.
+
+  PYTHONPATH=src python examples/train_tiny.py [steps]
+"""
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.models.transformer import init_params
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.data import SyntheticLM
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train_step import make_train_step
+
+
+def main(steps=200):
+    cfg = get_config("tiny-core-llm")
+    params = init_params(cfg, jax.random.key(0))
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"model {cfg.name}: {n_params / 1e6:.1f}M params")
+
+    oc = AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=steps)
+    opt = init_opt_state(oc, params)
+    step_fn = jax.jit(make_train_step(cfg, oc, num_microbatches=2,
+                                      compute_dtype=jnp.float32,
+                                      q_block=64))
+    data = SyntheticLM(cfg.vocab_size, batch=8, seq_len=64)
+    t0 = time.time()
+    for i, batch in enumerate(data):
+        if i >= steps:
+            break
+        batch = {"tokens": jnp.asarray(batch["tokens"])}
+        params, opt, m = step_fn(params, opt, batch)
+        if i % 20 == 0 or i == steps - 1:
+            print(f"step {i:4d}  ce={float(m['ce']):.4f}  "
+                  f"gnorm={float(m['gnorm']):.3f}  "
+                  f"{(time.time() - t0):.1f}s")
+    data.close()
+    save_checkpoint("/tmp/repro_ckpt", params, step=steps)
+    restored = load_checkpoint("/tmp/repro_ckpt", params)
+    assert jax.tree.all(jax.tree.map(
+        lambda a, b: bool(jnp.allclose(a, b)), params, restored))
+    print(f"checkpoint round-trip OK; final ce={float(m['ce']):.4f}")
+
+
+if __name__ == "__main__":
+    main(int(sys.argv[1]) if len(sys.argv) > 1 else 200)

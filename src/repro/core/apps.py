@@ -1,0 +1,135 @@
+"""The paper's application workflows (Figure 2) built on the template API,
+plus a shared engine pool factory.
+
+(a) search engine-empowered generation   (judge LLM -> search -> core LLM)
+(c) document QA with naive RAG           (index ∥ query-embed -> search ->
+                                          tree-mode synthesis)
+(d) document QA with advanced RAG        (+ query expansion, rerank,
+                                          refine-mode synthesis)
+(e) contextual retrieval (Anthropic)     (chunk contextualization before
+                                          indexing + rerank)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core.workflow import APP, EngineSpec, Node
+from repro.engines.encoder_engines import EmbeddingEngine, RerankEngine
+from repro.engines.llm_engine import LLMEngine
+from repro.engines.model_free import (ChunkerEngine, SearchAPIEngine,
+                                      VectorDBEngine)
+
+
+def build_engines(*, seed: int = 0, llm_max_batch: int = 4,
+                  emb_max_batch: int = 16):
+    """One shared pool (the paper co-locates apps on shared engines)."""
+    return {
+        "core_llm": LLMEngine("core_llm", get_config("tiny-core-llm"),
+                              seed=seed, max_batch=llm_max_batch),
+        "lite_llm": LLMEngine("lite_llm", get_config("tiny-lite-llm"),
+                              seed=seed + 1, max_batch=llm_max_batch * 2),
+        "embedding": EmbeddingEngine(max_batch=emb_max_batch),
+        "rerank": RerankEngine(max_batch=emb_max_batch),
+        "vectordb": VectorDBEngine(),
+        "chunker": ChunkerEngine(),
+        "search_api": SearchAPIEngine(),
+    }
+
+
+def _register_common(app: APP, engines):
+    for name, eng in engines.items():
+        inst = eng[0] if isinstance(eng, list) else eng
+        app.register_engine(EngineSpec(
+            name=name, kind=getattr(inst, "kind", "misc"),
+            max_batch=getattr(inst, "max_batch", 8),
+            instances=len(eng) if isinstance(eng, list) else 1))
+    app.register_engine(EngineSpec(name="control", kind="control",
+                                   max_batch=1 << 30))
+
+
+def naive_rag(engines, *, num_chunks: int = 32, top_k: int = 3,
+              tree_k: int = 3) -> APP:
+    app = APP.init("doc_qa_naive_rag")
+    _register_common(app, engines)
+    chunk = Node("chunk", "chunker")
+    index = Node("index", "embedding", name="indexing",
+                 anno="batchable", config={"num_chunks": num_chunks})
+    qemb = Node("query_embed", "embedding", name="query_embedding")
+    search = Node("vector_search", "vectordb",
+                  config={"top_k": top_k, "num_queries": 1})
+    gen = Node("llm_generate", "core_llm", name="synthesize",
+               config={"mode": "tree", "num_context": tree_k,
+                       "context_key": "retrieved"})
+    chunk >> index >> qemb >> search >> gen
+    app.update_template([chunk, index, qemb, search, gen])
+    return app
+
+
+def advanced_rag(engines, *, num_chunks: int = 32, num_expanded: int = 3,
+                 search_k: int = 8, top_k: int = 3) -> APP:
+    app = APP.init("doc_qa_advanced_rag")
+    _register_common(app, engines)
+    chunk = Node("chunk", "chunker")
+    index = Node("index", "embedding", name="indexing",
+                 anno="batchable", config={"num_chunks": num_chunks})
+    expand = Node("llm_expand", "core_llm", name="query_expansion",
+                  anno="splittable", config={"num_expanded": num_expanded,
+                                             "max_new": 24})
+    qemb = Node("query_embed", "embedding", name="query_embedding",
+                config={"in_key": "expanded_queries",
+                        "num_queries": num_expanded})
+    search = Node("vector_search", "vectordb",
+                  config={"top_k": search_k, "num_queries": num_expanded})
+    rerank = Node("rerank", "rerank",
+                  config={"top_k": top_k,
+                          "num_candidates": search_k * num_expanded})
+    gen = Node("llm_generate", "core_llm", name="synthesize",
+               config={"mode": "refine", "num_context": top_k,
+                       "context_key": "top_chunks"})
+    chunk >> index >> expand >> qemb >> search >> rerank >> gen
+    app.update_template([chunk, index, expand, qemb, search, rerank, gen])
+    return app
+
+
+def search_gen(engines, *, web_k: int = 4) -> APP:
+    app = APP.init("search_engine_generation")
+    _register_common(app, engines)
+    judge = Node("llm_judge", "lite_llm", name="proxy_judge",
+                 config={"max_new": 8})
+    sapi = Node("search_api", "search_api", config={"top_k": web_k})
+    gen = Node("llm_generate", "core_llm", name="synthesize",
+               config={"mode": "oneshot", "context_key": "web_results",
+                       "max_new": 32})
+    judge >> sapi >> gen
+    app.update_template([judge, sapi, gen])
+    return app
+
+
+def contextual_retrieval(engines, *, num_chunks: int = 32, search_k: int = 8,
+                         top_k: int = 3) -> APP:
+    app = APP.init("contextual_retrieval")
+    _register_common(app, engines)
+    chunk = Node("chunk", "chunker")
+    ctx = Node("contextualize", "lite_llm", anno="batchable",
+               config={"num_chunks": num_chunks, "max_new": 8})
+    index = Node("index", "embedding", name="indexing", anno="batchable",
+                 config={"num_chunks": num_chunks, "in_key": "ctx_chunks"})
+    qemb = Node("query_embed", "embedding", name="query_embedding")
+    search = Node("vector_search", "vectordb",
+                  config={"top_k": search_k, "num_queries": 1})
+    rerank = Node("rerank", "rerank",
+                  config={"top_k": top_k, "num_candidates": search_k})
+    gen = Node("llm_generate", "core_llm", name="synthesize",
+               config={"mode": "oneshot", "context_key": "top_chunks"})
+    chunk >> ctx >> index >> qemb >> search >> rerank >> gen
+    app.update_template([chunk, ctx, index, qemb, search, rerank, gen])
+    return app
+
+
+ALL_APPS = {
+    "naive_rag": naive_rag,
+    "advanced_rag": advanced_rag,
+    "search_gen": search_gen,
+    "contextual_retrieval": contextual_retrieval,
+}

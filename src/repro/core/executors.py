@@ -1,0 +1,276 @@
+"""Primitive executors: resolve a batch of NodeTasks against the per-query
+object stores, invoke the engine op, and write outputs back."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core import primitives as P
+
+
+def _textify(v) -> str:
+    if v is None:
+        return ""
+    if isinstance(v, str):
+        return v
+    if isinstance(v, dict):
+        return v.get("text", str(v))
+    if isinstance(v, (list, tuple)):
+        return " ".join(_textify(x) for x in v)
+    return str(v)
+
+
+def _items(store, prim):
+    data = store[prim.config["items_key"]]
+    rng = prim.config.get("item_range")
+    if rng:
+        data = data[rng[0]:rng[1]]
+    return data
+
+
+def _out_key(prim):
+    # primary produced key (excluding state keys and per-slot keys)
+    cands = [k for k in prim.produces if not k.startswith("state:")]
+    plain = [k for k in cands if "#" not in k]
+    if plain:
+        return plain[0]
+    return cands[0] if cands else next(iter(prim.produces))
+
+
+def _write_slots(store, prim, main_key, result_list):
+    """Publish per-slot keys 'main#i' a downstream consumer asked for."""
+    for k in prim.produces:
+        if k.startswith(main_key + "#") and "#s" not in k:
+            i = int(k.rsplit("#", 1)[1])
+            if result_list:
+                store[k] = [result_list[min(i, len(result_list) - 1)]]
+            else:
+                store[k] = []
+
+
+def _sid(prim, ctx, item=None):
+    base = f"{ctx.qid}:{prim.config['sid']}" if "sid" in prim.config \
+        else f"{ctx.qid}:{prim.pid}"
+    sid = base if item is None else f"{base}:{item}"
+    ctx.sids.add(sid)
+    return sid
+
+
+def _prompt_text(prim, store) -> str:
+    pieces = []
+    for name, key in prim.config.get("parts", []):
+        if key is None:
+            pieces.append(prim.config.get("instruction", ""))
+        else:
+            pieces.append(_textify(store.get(key)))
+    return " ".join(x for x in pieces if x)
+
+
+# ---------------------------------------------------------------------------
+
+def execute_batch(engine, tasks: List):
+    op = tasks[0].prim.op
+    kind = getattr(engine, "kind", "")
+    if op == P.CHUNKING:
+        payload = [{"docs": t.ctx.store["docs"],
+                    "chunk_size": t.prim.config.get("chunk_size", 48),
+                    "overlap": t.prim.config.get("overlap", 8)}
+                   for t in tasks]
+        res = engine.op_chunk(payload)
+        for t, r in zip(tasks, res):
+            t.ctx.store[_out_key(t.prim)] = r
+        return
+
+    if op == P.EMBEDDING:
+        payload = []
+        for t in tasks:
+            items = _items(t.ctx.store, t.prim)
+            if isinstance(items, (str, dict)):
+                items = [items]
+            payload.append({"texts": [_textify(x) for x in items],
+                            "_items": items})
+        res = engine.op_embed(payload)
+        for t, r, pl in zip(tasks, res, payload):
+            t.ctx.store[_out_key(t.prim)] = {
+                "vectors": r, "meta": [x if isinstance(x, dict)
+                                       else {"text": _textify(x)}
+                                       for x in pl["_items"]]}
+        return
+
+    if op == P.INGESTION:
+        payload = []
+        for t in tasks:
+            src = t.ctx.store[next(iter(t.prim.consumes))]
+            payload.append({"collection": t.ctx.qid,
+                            "vectors": src["vectors"], "meta": src["meta"]})
+        engine.op_ingest(payload)
+        for t in tasks:
+            t.ctx.store[_out_key(t.prim)] = True
+        return
+
+    if op == P.SEARCHING:
+        payload, spans = [], []
+        for t in tasks:
+            qsrc = t.ctx.store[t.prim.config["items_key"]
+                               if t.prim.config.get("items_key") in
+                               t.ctx.store else
+                               next(k for k in t.prim.consumes
+                                    if k.startswith("query_vecs"))]
+            vecs = qsrc["vectors"] if isinstance(qsrc, dict) else qsrc
+            vecs = np.atleast_2d(np.asarray(vecs))
+            spans.append((len(payload), len(payload) + len(vecs)))
+            for v in vecs:
+                payload.append({"collection": t.ctx.qid, "query_vec": v,
+                                "top_k": t.prim.config.get("top_k", 3)})
+        res = engine.op_search(payload)
+        for t, (a, b) in zip(tasks, spans):
+            hits = [h for r in res[a:b] for h in r]
+            main = _out_key(t.prim)
+            t.ctx.store[main] = hits
+            _write_slots(t.ctx.store, t.prim, main, hits)
+        return
+
+    if op == P.RERANKING:
+        payload = []
+        for t in tasks:
+            cands = []
+            for k in t.prim.consumes:
+                if k.startswith("retrieved"):
+                    cands.extend(t.ctx.store.get(k) or [])
+            # dedup by text
+            seen, uniq = set(), []
+            for c in cands:
+                if c["text"] not in seen:
+                    seen.add(c["text"])
+                    uniq.append(c)
+            payload.append({"question": t.ctx.store.get("question", ""),
+                            "candidates": uniq,
+                            "top_k": t.prim.config.get("top_k", 3)})
+        res = engine.op_rerank(payload)
+        for t, r in zip(tasks, res):
+            main = _out_key(t.prim)
+            t.ctx.store[main] = r
+            _write_slots(t.ctx.store, t.prim, main, r)
+        return
+
+    if op == P.SEARCH_API:
+        payload = [{"question": t.ctx.store.get("question", ""),
+                    "top_k": t.prim.config.get("top_k", 4)}
+                   for t in tasks
+                   if t.ctx.store.get("need_search", True)]
+        res = engine.op_search(payload) if payload else []
+        it = iter(res)
+        for t in tasks:
+            if t.ctx.store.get("need_search", True):
+                t.ctx.store[_out_key(t.prim)] = next(it)
+            else:
+                t.ctx.store[_out_key(t.prim)] = []
+        return
+
+    if op in (P.PREFILL, P.PARTIAL_PREFILL, P.FULL_PREFILL):
+        payload = []
+        for t in tasks:
+            prim, store = t.prim, t.ctx.store
+            if prim.config.get("per_item_seq"):
+                items = _items(store, prim)
+                for i, it_ in enumerate(items):
+                    rng = prim.config.get("item_range", (0, 0))
+                    text = (prim.config.get("instruction", "") + " "
+                            + _textify(it_))
+                    payload.append({"sid": _sid(prim, t.ctx, rng[0] + i),
+                                    "text": text})
+            else:
+                payload.append({"sid": _sid(prim, t.ctx),
+                                "text": _prompt_text(prim, store)})
+        engine.op_prefill(payload)
+        for t in tasks:
+            for k in t.prim.produces:
+                t.ctx.store[k] = True
+        return
+
+    if op in (P.DECODE, P.PARTIAL_DECODE):
+        payload, spans = [], []
+        for t in tasks:
+            prim, store = t.prim, t.ctx.store
+            if prim.config.get("per_item_seq"):
+                # items decoded on their own sequences (contextualize)
+                src_prefill_range = prim.config.get("item_range")
+                n_items = prim.num_requests
+                lo = src_prefill_range[0] if src_prefill_range else 0
+                spans.append((len(payload), len(payload) + n_items))
+                for i in range(n_items):
+                    payload.append({"sid": _sid(prim, t.ctx, lo + i),
+                                    "max_new": prim.config.get("max_new",
+                                                               12)})
+            else:
+                spans.append((len(payload), len(payload) + 1))
+                payload.append({"sid": _sid(prim, t.ctx),
+                                "max_new": prim.config.get("max_new", 24)})
+        res = engine.op_decode(payload)
+        for t, (a, b) in zip(tasks, spans):
+            prim, store = t.prim, t.ctx.store
+            texts = res[a:b]
+            key = prim.config.get("out_key", _out_key(prim))
+            if prim.config.get("per_item_seq"):
+                store[key] = [{"text": x} for x in texts]
+            elif prim.op == P.DECODE and prim.config.get("num_items", 1) > 1:
+                # unsplit decode of a multi-item output: divide evenly
+                words = texts[0].split()
+                k = prim.config["num_items"]
+                per = max(1, len(words) // k)
+                store[key] = [" ".join(words[i * per:(i + 1) * per])
+                              for i in range(k)]
+            else:
+                store[key] = texts[0]
+            if prim.config.get("also_aggregate"):
+                agg = prim.config["also_aggregate"]
+                parts = [store.get(f"{agg}#{i}", "")
+                         for i in range(prim.config.get("num_items", 1))]
+                store[agg] = [p for p in parts]
+            for k2 in prim.produces:
+                if k2.startswith("state:"):
+                    store[k2] = True
+        return
+
+    raise ValueError(f"no executor for op {op} on engine kind {kind}")
+
+
+# ---------------------------------------------------------------------------
+
+def run_control(prim, ctx):
+    store = ctx.store
+    if prim.op == P.CONDITION:
+        pred = prim.config.get("predicate", "always_true")
+        if pred == "always_true":
+            val = True
+        elif pred == "never":
+            val = False
+        elif callable(pred):
+            val = bool(pred(store))
+        else:
+            val = True
+        store[_out_key(prim)] = val
+        return
+    if prim.op == P.AGGREGATE:
+        out = _out_key(prim)
+        if "concat_of" in prim.config:
+            base = prim.config["concat_of"]
+            keys = sorted((k for k in prim.consumes),
+                          key=lambda s: int(s.rsplit("#s", 1)[1])
+                          if "#s" in s else 0)
+            vals = [store.get(k) for k in keys]
+            if all(isinstance(v, dict) and "vectors" in v for v in vals):
+                store[out] = {
+                    "vectors": np.concatenate([v["vectors"] for v in vals]),
+                    "meta": sum((v["meta"] for v in vals), [])}
+            elif all(isinstance(v, list) for v in vals):
+                store[out] = sum(vals, [])
+            elif all(v is True for v in vals):
+                store[out] = True
+            else:
+                store[out] = vals
+        else:
+            store[out] = [store.get(k) for k in sorted(prim.consumes)]
+        return
+    raise ValueError(f"unknown control op {prim.op}")

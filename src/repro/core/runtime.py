@@ -1,0 +1,319 @@
+"""Two-tier runtime (paper §5).
+
+Upper tier — GraphScheduler: tracks each query's e-graph, dispatches
+primitives whose in-degree reaches zero to the per-engine schedulers, and
+manages the per-query object store.
+
+Lower tier — EngineScheduler (one thread per engine): fuses primitive
+requests from concurrent queries into engine batches under one of three
+policies:
+  'po'   per-invocation oriented — one query's bundle at a time (baseline)
+  'to'   throughput oriented    — FIFO dynamic batching to max batch
+  'topo' topology-aware batching — Algorithm 2: bucket by query, order by
+         reverse-topological depth, earliest-arrival buckets first.
+
+Control primitives (Condition/Aggregate) run inline on the graph
+scheduler thread. Dependent pre-scheduling (§6, communication mitigation)
+is modeled by resolving payloads lazily at execution time from the shared
+object store, so a parent's output is visible to its pre-issued child
+without an extra scheduler round-trip.
+"""
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import primitives as P
+from repro.core.primitives import Graph, Primitive
+
+_qid = itertools.count()
+
+
+class QueryContext:
+    def __init__(self, graph: Graph, inputs: Dict[str, Any],
+                 output_key: str = "answer", priority: int = 0):
+        self.qid = f"q{next(_qid)}"
+        self.graph = graph
+        self.store: Dict[str, Any] = dict(inputs)
+        self.output_key = output_key
+        self.priority = priority    # higher = served first (paper §7.2)
+        self.done = threading.Event()
+        self.t_submit = time.time()
+        self.t_done: Optional[float] = None
+        self.node_spans: Dict[str, tuple] = {}     # pid -> (t0, t1)
+        self.sids: set = set()
+        self.lock = threading.Lock()
+        self.error: Optional[Exception] = None
+
+    @property
+    def latency(self):
+        return (self.t_done or time.time()) - self.t_submit
+
+    def result(self, timeout=120):
+        self.done.wait(timeout)
+        if self.error:
+            raise self.error
+        return self.store.get(self.output_key)
+
+
+@dataclass
+class NodeTask:
+    prim: Primitive
+    ctx: QueryContext
+    t_arrival: float = field(default_factory=time.time)
+    managed: bool = True     # False: baseline orchestrators drive progress
+
+    @property
+    def depth(self):
+        return self.prim.depth
+
+
+# ---------------------------------------------------------------------------
+
+class EngineScheduler(threading.Thread):
+    def __init__(self, engine, executor, policy: str = "topo",
+                 period: float = 0.002):
+        super().__init__(daemon=True)
+        self.engine = engine
+        self.executor = executor
+        self.policy = policy
+        self.period = period
+        self.pending: List[NodeTask] = []
+        self.cv = threading.Condition()
+        self.running = True
+        self.on_complete = None        # set by Runtime
+        self.batches = []              # (size_requests, op) log
+
+    def submit(self, task: NodeTask):
+        with self.cv:
+            self.pending.append(task)
+            self.cv.notify()
+
+    def stop(self):
+        self.running = False
+        with self.cv:
+            self.cv.notify()
+
+    # -- batch formation ----------------------------------------------------
+    def _form_batch(self) -> List[NodeTask]:
+        if not self.pending:
+            return []
+        max_bs = getattr(self.engine, "max_batch", 8)
+        if self.policy == "po":
+            # bundle = same (query, component) as the head task, FIFO
+            head = min(self.pending, key=lambda t: t.t_arrival)
+            bundle = [t for t in self.pending
+                      if t.ctx is head.ctx
+                      and t.prim.component == head.prim.component
+                      and t.prim.op == head.prim.op]
+            return bundle[:max_bs]
+        if self.policy == "to":
+            self.pending.sort(key=lambda t: t.t_arrival)
+            op = self.pending[0].prim.op
+            batch, slots = [], max_bs
+            for t in self.pending:
+                if t.prim.op != op:
+                    continue
+                if t.prim.num_requests > slots and batch:
+                    break
+                batch.append(t)
+                slots -= t.prim.num_requests
+                if slots <= 0:
+                    break
+            return batch
+        # 'topo' — Algorithm 2: bucket pending nodes by query; buckets
+        # ordered by (priority desc, earliest arrival); round-robin over
+        # buckets taking the HIGHEST-DEPTH node of each bucket per round
+        # (Fig. 7 batches the most graph-advancing primitive of each
+        # query together). Priority implements the paper's §7.2
+        # app-priority discussion as primitive metadata.
+        buckets: Dict[str, List[NodeTask]] = {}
+        for t in self.pending:
+            buckets.setdefault(t.ctx.qid, []).append(t)
+        ordered = sorted(buckets.values(),
+                         key=lambda b: (-max(t.ctx.priority for t in b),
+                                        min(t.t_arrival for t in b)))
+        for b in ordered:
+            b.sort(key=lambda t: -t.prim.depth)
+        batch, slots, op = [], max_bs, None
+        while slots > 0:
+            took = False
+            for b in ordered:
+                if slots <= 0:
+                    break
+                for t in b:
+                    if op is not None and t.prim.op != op:
+                        continue
+                    if t.prim.num_requests > slots and batch:
+                        continue
+                    op = op or t.prim.op
+                    batch.append(t)
+                    b.remove(t)
+                    slots -= t.prim.num_requests
+                    took = True
+                    break
+            if not took:
+                break
+        return batch
+
+    def run(self):
+        while self.running:
+            with self.cv:
+                if not self.pending:
+                    self.cv.wait(timeout=0.1)
+                    continue
+                batch = self._form_batch()
+                for t in batch:
+                    self.pending.remove(t)
+            if not batch:
+                time.sleep(self.period)
+                continue
+            self.batches.append((sum(t.prim.num_requests for t in batch),
+                                 batch[0].prim.op))
+            try:
+                self.executor(self.engine, batch)
+            except Exception as e:  # noqa: BLE001
+                for t in batch:
+                    t.ctx.error = e
+                    t.ctx.done.set()
+                continue
+            for t in batch:
+                self.on_complete(t)
+
+
+# ---------------------------------------------------------------------------
+
+class EngineGroup:
+    """Multiple instances of one engine behind a load-balancing router
+    (paper §6/§7.1: each LLM provisioned with two instances; load metric
+    = outstanding requests, with sequence->instance AFFINITY for LLM ops
+    since the KV state lives on one instance)."""
+
+    def __init__(self, scheds: List[EngineScheduler]):
+        self.scheds = scheds
+        self.affinity: Dict[tuple, EngineScheduler] = {}
+        self._lock = threading.Lock()
+
+    def _load(self, s: EngineScheduler) -> int:
+        with s.cv:
+            return sum(t.prim.num_requests for t in s.pending)
+
+    def submit(self, task: NodeTask):
+        sid = task.prim.config.get("sid")
+        if sid is not None:
+            key = (task.ctx.qid, sid)
+            with self._lock:
+                s = self.affinity.get(key)
+                if s is None:
+                    s = min(self.scheds, key=self._load)
+                    self.affinity[key] = s
+        else:
+            s = min(self.scheds, key=self._load)
+        s.submit(task)
+
+    @property
+    def batches(self):
+        return [b for s in self.scheds for b in s.batches]
+
+    def stop(self):
+        for s in self.scheds:
+            s.stop()
+
+
+class Runtime:
+    """Graph scheduler + engine scheduler pool over a set of engines.
+    An engines-dict value may be a LIST of replicas -> EngineGroup."""
+
+    def __init__(self, engines: Dict[str, Any], policy: str = "topo"):
+        from repro.core.executors import execute_batch
+        self.engines = engines
+        self.policy = policy
+        self.scheds: Dict[str, Any] = {}
+        for name, eng in engines.items():
+            replicas = eng if isinstance(eng, list) else [eng]
+            group = []
+            for inst in replicas:
+                s = EngineScheduler(inst, execute_batch, policy)
+                s.on_complete = self._on_complete
+                group.append(s)
+                s.start()
+            self.scheds[name] = (EngineGroup(group) if len(group) > 1
+                                 else group[0])
+        self.queries: List[QueryContext] = []
+        self._lock = threading.Lock()
+
+    def submit(self, graph: Graph, inputs: Dict[str, Any],
+               output_key: str = "answer",
+               priority: int = 0) -> QueryContext:
+        ctx = QueryContext(graph, inputs, output_key, priority=priority)
+        with self._lock:
+            self.queries.append(ctx)
+        ctx.indegree = {pid: len(n.parents)
+                        for pid, n in graph.nodes.items()}
+        for n in graph.roots():
+            self._dispatch(n, ctx)
+        if not graph.nodes:
+            self._finish(ctx)
+        return ctx
+
+    def _dispatch(self, prim: Primitive, ctx: QueryContext):
+        ctx.node_spans.setdefault(prim.pid, (time.time(), None))
+        if prim.engine == "control":
+            self._run_control(prim, ctx)
+            self._complete_node(prim, ctx)
+            return
+        self.scheds[prim.engine].submit(NodeTask(prim, ctx))
+
+    def _run_control(self, prim: Primitive, ctx: QueryContext):
+        from repro.core.executors import run_control
+        run_control(prim, ctx)
+
+    def _on_complete(self, task: NodeTask):
+        if not task.managed:
+            t0 = task.ctx.node_spans.get(task.prim.pid,
+                                         (task.t_arrival, None))[0]
+            task.ctx.node_spans[task.prim.pid] = (t0, time.time())
+            return
+        self._complete_node(task.prim, task.ctx)
+
+    def _complete_node(self, prim: Primitive, ctx: QueryContext):
+        t0 = ctx.node_spans.get(prim.pid, (time.time(), None))[0]
+        ctx.node_spans[prim.pid] = (t0, time.time())
+        ready = []
+        with ctx.lock:
+            for cpid in prim.children:
+                ctx.indegree[cpid] -= 1
+                if ctx.indegree[cpid] == 0:
+                    ready.append(ctx.graph.nodes[cpid])
+            remaining = sum(1 for v in ctx.indegree.values() if v > 0)
+        for n in ready:
+            self._dispatch(n, ctx)
+        # finished when every node has been completed
+        if all(v <= 0 for v in ctx.indegree.values()) and \
+                all(ctx.node_spans.get(pid, (0, None))[1] is not None
+                    for pid in ctx.graph.nodes):
+            self._finish(ctx)
+
+    def _finish(self, ctx: QueryContext):
+        if ctx.done.is_set():
+            return
+        ctx.t_done = time.time()
+        ctx.done.set()
+        # release LLM sequence state on every instance
+        for name, eng in self.engines.items():
+            for inst in (eng if isinstance(eng, list) else [eng]):
+                if hasattr(inst, "release"):
+                    for sid in ctx.sids:
+                        inst.release(sid)
+                if hasattr(inst, "drop"):
+                    inst.drop(ctx.qid)
+
+    def shutdown(self):
+        for s in self.scheds.values():
+            s.stop()

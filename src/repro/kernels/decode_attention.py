@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: batched GQA decode attention (flash-decode style).
+
+One new token per sequence attends to a KV cache of up to T tokens with a
+*dynamic* per-batch valid length (scalar-prefetched, so block index maps
+could skip past-the-end blocks on real hardware). GQA native: all H query
+heads for a sequence stay resident in VMEM while KV blocks stream by.
+
+Grid (B, T/bk); scratch: fp32 accumulator (H, hd) + running max/denom.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale, window, cap, bk, G):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    length = len_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(j * bk < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                  # (H, hd)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bk, hd) per kv-head? no:
+        # k_ref block is (1, K, bk, hd) -> use full K
+        kf = k_ref[0].astype(jnp.float32)                 # (K, bk, hd)
+        vf = v_ref[0].astype(jnp.float32)
+        H, hd = q.shape
+        K = kf.shape[0]
+        qg = q.reshape(K, G, hd)
+        s = jax.lax.dot_general(
+            qg, kf, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * scale    # (K, G, bk)
+        if cap is not None:
+            s = cap * jnp.tanh(s / cap)
+        k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (K, G, bk), 2)
+        mask = k_pos < length
+        if window is not None:
+            mask &= k_pos > (length - 1 - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        sh = s.reshape(H, bk)
+        m_prev = m_ref[...]                               # (H,1)
+        m_new = jnp.maximum(m_prev, jnp.max(sh, axis=1, keepdims=True))
+        p = jnp.exp(sh - m_new)                           # (H, bk)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(
+            p.reshape(K, G, bk), vf, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)           # (K, G, hd)
+        acc_ref[...] = acc_ref[...] * alpha + pv.reshape(H, hd)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, length, *, window=None, cap=None, scale=None,
+                     bk: int = 128, interpret: bool = True):
+    """q (B,H,hd); k,v (B,T,K,hd); length (B,) int32 valid lengths.
+    Returns (B,H,hd)."""
+    B, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    if scale is None:
+        scale = hd ** -0.5
+    bk = min(bk, T)
+    assert T % bk == 0
+
+    kh = jnp.moveaxis(k, 2, 1)      # (B,K,T,hd)
+    vh = jnp.moveaxis(v, 2, 1)
+    grid = (B, T // bk)
+    kernel = functools.partial(_kernel, scale=scale, window=window, cap=cap,
+                               bk=bk, G=G)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, H, hd), lambda b, j, L: (b, 0, 0)),
+                pl.BlockSpec((1, K, bk, hd), lambda b, j, L: (b, 0, j, 0)),
+                pl.BlockSpec((1, K, bk, hd), lambda b, j, L: (b, 0, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, H, hd), lambda b, j, L: (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((H, hd), jnp.float32),
+                pltpu.VMEM((H, 1), jnp.float32),
+                pltpu.VMEM((H, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(length.astype(jnp.int32), q, kh, vh)
+    return out

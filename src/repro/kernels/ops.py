@@ -1,0 +1,50 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels run in interpret mode (the Pallas body
+executed in Python for correctness validation); on TPU set
+``REPRO_PALLAS_INTERPRET=0`` (or pass interpret=False) to compile the real
+Mosaic kernels.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.flash_prefill import flash_prefill as _prefill
+from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv
+
+
+def default_interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("prefix_len", "window", "cap", "scale",
+                                   "total_len", "bq", "bk", "interpret"))
+def flash_prefill(q, k, v, *, prefix_len=0, window=None, cap=None,
+                  scale=None, total_len=None, bq=128, bk=128,
+                  interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _prefill(q, k, v, prefix_len=prefix_len, window=window, cap=cap,
+                    scale=scale, total_len=total_len, bq=bq, bk=bk,
+                    interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("window", "cap", "scale", "bk",
+                                   "interpret"))
+def decode_attention(q, k, v, length, *, window=None, cap=None, scale=None,
+                     bk=128, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _decode(q, k, v, length, window=window, cap=cap, scale=scale,
+                   bk=bk, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, w, u, state0, *, chunk=64, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _rwkv(r, k, v, w, u, state0, chunk=chunk, interpret=interpret)

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (independent, naive
+implementations used by the allclose test sweeps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_prefill_ref(q, k, v, *, prefix_len=0, window=None, cap=None,
+                      scale=None, total_len=None):
+    """q (B,Sq,H,hd); k,v (B,T,K,hd). Naive masked attention."""
+    B, Sq, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    if scale is None:
+        scale = hd ** -0.5
+    if total_len is None:
+        total_len = prefix_len + Sq
+    kr = jnp.repeat(k, G, axis=2).astype(jnp.float32)   # (B,T,H,hd)
+    vr = jnp.repeat(v, G, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32), kr) * scale
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    q_pos = prefix_len + jnp.arange(Sq)
+    k_pos = jnp.arange(T)
+    mask = (k_pos[None, :] <= q_pos[:, None]) & (k_pos[None, :] < total_len)
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhst,bthd->bshd", p, vr)
+    return o.astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, length, *, window=None, cap=None,
+                         scale=None):
+    """q (B,H,hd); k,v (B,T,K,hd); length (B,) valid cache lengths
+    (the new token's KV must already be written at length-1)."""
+    B, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    if scale is None:
+        scale = hd ** -0.5
+    kr = jnp.repeat(k, G, axis=2).astype(jnp.float32)
+    vr = jnp.repeat(v, G, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32), kr) * scale
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    k_pos = jnp.arange(T)[None, :]                       # (1,T)
+    mask = k_pos < length[:, None]
+    if window is not None:
+        mask &= k_pos > (length[:, None] - 1 - window)
+    s = jnp.where(mask[:, None, :], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bht,bthd->bhd", p, vr).astype(q.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, w, u, state0):
+    """r,k,v,w (B,S,H,hd); u (H,hd); state0 (B,H,hd,hd) fp32.
+    Sequential reference recurrence:
+      y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S + k v^T
+    Returns (y (B,S,H,hd) fp32, final state)."""
+    rf, kf, vf, wf = [a.astype(jnp.float32) for a in (r, k, v, w)]
+    uf = u.astype(jnp.float32)
+
+    def step(st, xs):
+        r_t, k_t, v_t, w_t = xs
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, st + uf[..., None] * kv)
+        st = w_t[..., None] * st + kv
+        return st, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    state, y = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return jnp.moveaxis(y, 0, 1), state

@@ -1,0 +1,37 @@
+"""Beyond-paper optimization flags for the perf hillclimb (§Perf).
+
+The paper-faithful baseline runs with NO flags. Each flag is one
+hypothesis-driven change, recorded before/after in EXPERIMENTS.md:
+
+  resident_weights  — serving/small-model layout: drop FSDP ('data')
+                      sharding of weights so they stay resident per
+                      device instead of being re-all-gathered every
+                      decode step / microbatch (kills the dominant
+                      collective term for serve and small-model train).
+  ep_all_axes       — MoE expert parallelism over ('model','data')
+                      jointly (DeepSeek-style EP-256): experts fully
+                      resident at 1/device, all_to_all spans both axes;
+                      required to fit 671B serving with resident weights.
+  microbatches=N    — override the train gradient-accumulation depth
+                      (fewer microbatch loop trips => fewer FSDP
+                      gathers, more activation memory).
+"""
+from __future__ import annotations
+
+ACTIVE: set = set()
+
+
+def set_flags(flags):
+    ACTIVE.clear()
+    ACTIVE.update(f for f in flags if f)
+
+
+def has(flag: str) -> bool:
+    return flag in ACTIVE
+
+
+def get_int(prefix: str, default: int) -> int:
+    for f in ACTIVE:
+        if f.startswith(prefix + "="):
+            return int(f.split("=", 1)[1])
+    return default

@@ -1,0 +1,265 @@
+"""Analytic roofline cost model + loop-aware HLO collective correction.
+
+Why analytic: XLA's HloCostAnalysis counts each while-loop body ONCE, and
+our production steps nest lax.scan (stages × microbatches × attention
+q-blocks), so raw `compiled.cost_analysis()` undercounts FLOPs/bytes by
+the loop trip products (~100-1000x). We therefore:
+
+  - compute the compute & memory terms ANALYTICALLY from the config and
+    input shape, mirroring what the implemented program actually does
+    (e.g. full S^2 masked attention — not the causal half — until the
+    block-skipping optimization lands; absorbed-MLA score FLOPs at the
+    kv_lora rank),
+  - correct HLO-parsed collective bytes per computation: collectives in
+    the ENTRY computation count once; collectives inside loop-body
+    computations are multiplied by the known trip product (layers x
+    microbatches for train, layers for serve),
+  - keep the raw HLO numbers in the record for transparency.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+def _attn_flops_per_layer(cfg: ModelConfig, spec, B, Sq, Skv):
+    """Score+context matmul FLOPs for ONE layer (fwd), as implemented:
+    full Skv attended (masked), no causal block skipping."""
+    hd = cfg.resolved_head_dim
+    H = cfg.num_heads
+    if cfg.attention_kind == "mla":
+        m = cfg.mla
+        r, p = m.kv_lora_rank, m.qk_rope_head_dim
+        # absorbed: q_eff einsum + scores(r) + rope scores(p) + ctx(r) +
+        # out einsum
+        return 2 * B * Sq * H * (m.qk_nope_head_dim * r        # q_eff
+                                 + Skv * (r + p)               # scores
+                                 + Skv * r                     # ctx
+                                 + r * m.v_head_dim)           # out_h
+    if spec.kind == "rwkv":
+        s = cfg.ssm
+        heads = cfg.d_model // s.head_dim
+        # per-step state update + readout: ~4 * hd^2 per head per token
+        return 4 * B * Sq * heads * s.head_dim * s.head_dim * 2
+    from repro.launch import optflags
+    win = spec.window
+    eff_kv = min(Skv, win) if win else Skv
+    if optflags.has("causal_skip") and Sq == Skv and not win:
+        eff_kv = Skv * 0.5 + 256            # lower-triangular blocks only
+    fl = 2 * B * H * Sq * eff_kv * hd * 2       # QK^T and PV
+    if spec.kind == "hybrid":
+        s = cfg.ssm
+        fl += 6 * B * Sq * cfg.d_model * s.state_dim  # selective scan
+    return fl
+
+
+def linear_flops(cfg: ModelConfig, tokens: int) -> float:
+    """Matmul-parameter FLOPs (2*N_active_linear per token), excluding the
+    embedding gather but including the LM head."""
+    n = cfg.active_param_count()
+    n -= cfg.vocab_size * cfg.d_model       # embedding lookup isn't matmul
+    if cfg.tie_embeddings:
+        n += cfg.vocab_size * cfg.d_model   # tied head still multiplies
+    return 2.0 * n * tokens
+
+
+def analytic_flops(cfg: ModelConfig, ishape: InputShape) -> float:
+    """Global forward(+backward) FLOPs for one step, as implemented."""
+    B, S = ishape.global_batch, ishape.seq_len
+    if ishape.mode == "decode":
+        Sq, Skv, tokens = 1, S, B
+    else:
+        Sq, Skv, tokens = S, S, B * S
+    total = linear_flops(cfg, tokens)
+    for st in cfg.stages:
+        for spec in st.pattern:
+            total += st.repeat * _attn_flops_per_layer(cfg, spec, B, Sq,
+                                                       Skv)
+    if ishape.mode == "train":
+        total *= 3.0                        # fwd + bwd
+    return total
+
+
+def param_bytes(cfg: ModelConfig, dtype_bytes: int) -> float:
+    return cfg.param_count() * dtype_bytes
+
+
+def analytic_bytes(cfg: ModelConfig, ishape: InputShape,
+                   n_devices: int) -> float:
+    """Per-DEVICE HBM traffic estimate for one step.
+    serve: sharded weights read once + KV cache read/write + activations.
+    train: fp32 master + bf16 compute copies + grads + 2x moments r/w,
+    weights re-read in backward, activations saved+reread (remat'd layer
+    inputs only)."""
+    from repro.serving.kv_cache import cache_bytes
+    B, S = ishape.global_batch, ishape.seq_len
+    d = cfg.d_model
+    L = cfg.num_layers
+    act_elem = 2                                     # bf16 activations
+    if ishape.mode == "decode":
+        w = param_bytes(cfg, 2) / n_devices          # bf16 weights
+        kv = cache_bytes(cfg, B, S) / n_devices      # read full cache
+        act = B * d * L * 12 * act_elem / n_devices
+        return w + kv + act
+    if ishape.mode == "prefill":
+        w = param_bytes(cfg, 2) / n_devices
+        kv = cache_bytes(cfg, B, S) / n_devices      # write cache
+        act = B * S * d * L * 12 * act_elem / n_devices
+        return w + kv + act
+    # train
+    wmaster = param_bytes(cfg, 4) / n_devices
+    wbf16 = param_bytes(cfg, 2) / n_devices
+    moments = 2 * param_bytes(cfg, 2) / n_devices    # bf16 m, v r+w -> x2
+    grads = param_bytes(cfg, 4) / n_devices
+    act = B * S * d * L * (12 + 12) * act_elem / n_devices  # fwd + remat
+    return 2 * wmaster + 2 * wbf16 + 2 * moments + 2 * grads + act
+
+
+# ---------------------------------------------------------------------------
+# Loop-aware collective correction
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+                "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1,
+                "u8": 1, "pred": 1}
+_COLL_RE = re.compile(
+    r"=\s*(.{0,400}?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for x in dims.split(","):
+            if x:
+                n *= int(x)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_corrected(hlo_text: str, loop_mult: float):
+    """Legacy flat correction: entry-computation collectives x1, any
+    loop-body collective x loop_mult. Superseded by
+    collective_bytes_nested (kept for comparison in the perf log)."""
+    per_type: dict = {}
+    in_entry = False
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            in_entry = True
+        elif line and not line[0].isspace() and "{" in line:
+            in_entry = False
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        b = _type_bytes(m.group(1)) * (1.0 if in_entry else loop_mult)
+        per_type[m.group(2)] = per_type.get(m.group(2), 0.0) + b
+    return per_type, sum(per_type.values())
+
+
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*)?\{")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_CALL_RE = re.compile(
+    r"(?:calls|to_apply|condition|branch_computations)=%?\{?([\w.\-, %]+)")
+
+
+def collective_bytes_nested(hlo_text: str, trips_by_depth):
+    """Nested-loop-aware collective accounting.
+
+    Builds the computation call graph from while-op ``body=`` references;
+    a collective inside a while body nested at depth d is multiplied by
+    prod(trips_by_depth[:d]) (e.g. train: [microbatches, layers,
+    inner-blocks]). Non-while calls (fusions, conditionals, scatter
+    to_apply) inherit their caller's multiplier."""
+    comp_colls: dict = {}          # comp -> {type: bytes}
+    while_children: dict = {}      # comp -> set of while-body comps
+    call_children: dict = {}       # comp -> set of plain-called comps
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace():
+            m = _COMP_START_RE.match(line)
+            if m:
+                cur = m.group(1)
+                if line.startswith("ENTRY"):
+                    entry = cur
+                comp_colls.setdefault(cur, {})
+                while_children.setdefault(cur, set())
+                call_children.setdefault(cur, set())
+            continue
+        if cur is None:
+            continue
+        for wb in _WHILE_BODY_RE.findall(line):
+            while_children[cur].add(wb)
+        for grp in _CALL_RE.findall(line):
+            for name in grp.replace("%", "").replace("{", "").split(","):
+                name = name.strip()
+                if name:
+                    call_children[cur].add(name)
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if m:
+            d = comp_colls[cur]
+            d[m.group(2)] = d.get(m.group(2), 0) + _type_bytes(m.group(1))
+
+    # propagate multipliers from entry
+    mult: dict = {}
+
+    def visit(comp, m, depth):
+        if comp not in comp_colls:
+            return
+        if comp in mult and mult[comp] >= m:
+            return
+        mult[comp] = max(mult.get(comp, 0.0), m)
+        for c in call_children.get(comp, ()):  # same multiplier
+            visit(c, m, depth)
+        trip = trips_by_depth[min(depth, len(trips_by_depth) - 1)] \
+            if trips_by_depth else 1.0
+        for w in while_children.get(comp, ()):
+            visit(w, m * trip, depth + 1)
+
+    if entry is not None:
+        visit(entry, 1.0, 0)
+    per_type: dict = {}
+    for comp, colls in comp_colls.items():
+        f = mult.get(comp, 0.0)    # unreachable comps contribute nothing
+        for t, b in colls.items():
+            per_type[t] = per_type.get(t, 0.0) + b * f
+    return per_type, sum(per_type.values())
+
+
+def trips_for_case(cfg: ModelConfig, ishape: InputShape, microbatches: int,
+                   q_block: int = 512):
+    """trips_by_depth for collective_bytes_nested. Depth 1 is the
+    outermost loop body: the microbatch scan for train, the layer scan
+    for serve. Inner-most covers attention q-blocks / SSM chunk scans."""
+    # layer-scan trip count = the stage repeat (a multi-element pattern
+    # runs len(pattern) layers per iteration); dominant stage's repeat is
+    # the best single estimate when stages differ.
+    L = max(st.repeat for st in cfg.stages)
+    S = ishape.seq_len if ishape.mode != "decode" else 1
+    inner = max(1, S // q_block)
+    if cfg.family in ("ssm", "hybrid"):
+        inner = max(inner, S // 128)
+    if ishape.mode == "train":
+        return [float(max(1, microbatches)), float(L), float(inner),
+                float(inner)]
+    return [float(L), float(inner), float(inner)]
+
+
+def loop_multiplier(cfg: ModelConfig, ishape: InputShape,
+                    microbatches: int) -> float:
+    """Trip product of the loops that contain the per-layer collectives:
+    the layer scan (avg stage repeat) x the microbatch scan (train)."""
+    L = cfg.num_layers
+    if ishape.mode == "train":
+        return float(L * max(1, microbatches))
+    return float(L)

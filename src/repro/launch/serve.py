@@ -1,0 +1,69 @@
+"""Serving launcher: stand up an app (all four of the paper's workflows)
+on the engine pool and serve queries.
+
+  PYTHONPATH=src python -m repro.launch.serve --app advanced_rag \
+      --queries 4 [--sim] [--scheme Teola|LlamaDist-TO|...]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.apps import ALL_APPS, build_engines
+from repro.core.teola import AutoGenLike, LlamaDist, LlamaDistPC, Teola
+from repro.training.data import doc_corpus
+
+SCHEMES = {
+    "Teola": (Teola, "topo"),
+    "LlamaDist-PO": (LlamaDist, "po"),
+    "LlamaDist-TO": (LlamaDist, "to"),
+    "LlamaDistPC-TO": (LlamaDistPC, "to"),
+    "AutoGen-TO": (AutoGenLike, "to"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--app", default="advanced_rag", choices=ALL_APPS)
+    ap.add_argument("--scheme", default="Teola", choices=SCHEMES)
+    ap.add_argument("--queries", type=int, default=4)
+    ap.add_argument("--rate", type=float, default=2.0)
+    ap.add_argument("--sim", action="store_true",
+                    help="paper-calibrated latency-profile engines")
+    args = ap.parse_args()
+
+    if args.sim:
+        from repro.engines.sim_engines import build_sim_engines
+        engines = build_sim_engines()
+    else:
+        engines = build_engines()
+    app = ALL_APPS[args.app](engines)
+    cls, policy = SCHEMES[args.scheme]
+    orch = cls(app, engines, policy=policy)
+
+    docs = doc_corpus(2)
+    print(f"[serve] {args.app} via {args.scheme} "
+          f"({'sim' if args.sim else 'real'} engines); warmup...")
+    orch.query({"question": "warmup question", "docs": docs}, timeout=600)
+
+    rng = np.random.default_rng(0)
+    ctxs = []
+    t0 = time.time()
+    for i in range(args.queries):
+        ctxs.append(orch.submit({
+            "question": f"what is fact {i} about optics", "docs": docs}))
+        time.sleep(float(rng.exponential(1.0 / args.rate)))
+    for c in ctxs:
+        c.done.wait(600)
+    wall = time.time() - t0
+    lats = [c.latency for c in ctxs if c.t_done]
+    print(f"[serve] {len(lats)}/{args.queries} queries in {wall:.1f}s; "
+          f"avg latency {np.mean(lats) * 1000:.0f}ms "
+          f"p90 {np.percentile(lats, 90) * 1000:.0f}ms")
+    orch.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,224 @@
+"""Parameter & cache PartitionSpec assignment.
+
+Logical layout:
+  - 'fsdp' -> 'data'   (weights/optimizer sharded over the data axis,
+                        all-gathered at use — ZeRO-3 style)
+  - 'tp'   -> 'model'  (tensor parallel: head/ffn/vocab dims)
+  - batch  -> ('pod', 'data')
+Expert weights are expert-sharded over 'model' + FSDP over 'data' on the
+d axis — these specs MUST match moe.routed_ep's shard_map in_specs.
+
+An axis is only sharded when divisible by the mesh axis OR large enough
+that GSPMD's implicit padding waste is negligible (>= 4096).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# last-path-component name -> logical spec for the UNSTACKED param
+_RULES = {
+    # embeddings / head. The table is vocab-sharded over 'model' ONLY:
+    # GSPMD's gather partitioner handles single-axis vocab sharding (mask +
+    # all-reduce) but chokes on (vocab x d) 2-D sharded lookups, and for
+    # tied heads this layout gives vocab-TP logits for free.
+    "embed": ("tp", None),
+    "pos_embed": (None, None),
+    "lm_head": ("fsdp", "tp"),
+    # attention
+    "wq": ("fsdp", "tp"),
+    "wk": ("fsdp", "tp"),
+    "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    "bq": ("tp",), "bk": ("tp",), "bv": ("tp",),
+    # mla
+    "wq_a": ("fsdp", "tp"),
+    "wq_b": ("fsdp", "tp"),
+    "wkv_a": ("fsdp", None),
+    "wkv_b": ("fsdp", "tp"),
+    # dense ffn / shared experts
+    "w_gate": ("fsdp", "tp"),
+    "w_up": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),
+    # moe (expert-stacked: handled by rank-3 override below)
+    "router": (None, None),
+    # rwkv
+    "wr": ("fsdp", "tp"),
+    "mix_w1": ("fsdp", None),
+    "mix_w2": (None, None, "tp"),
+    "w_w1": ("fsdp", None),
+    "w_w2": (None, "tp"),
+    # mamba
+    "w_in": ("fsdp", "tp"),
+    "w_x": ("fsdp", None),
+    "w_dt": (None, "tp"),
+    "A_log": ("tp", None),
+    "conv_w": (None, "tp"),
+    "head": (None, None),
+    "w1": (None, None), "w2": (None, None),
+}
+
+# MoE expert-stacked weights (E, d, f) / (E, f, d)
+_MOE_RULES = {
+    "w_gate": ("ep", "fsdp", None),
+    "w_up": ("ep", "fsdp", None),
+    "w_down": ("ep", None, "fsdp"),
+}
+
+
+def ep_axes(mesh):
+    """Expert-parallel axes: 'model' by default; ('model','data') under
+    the ep_all_axes opt flag (experts fully resident, DeepSeek-style
+    wide EP). MUST match moe.routed_ep's shard_map specs."""
+    from repro.launch import optflags
+    if optflags.has("ep_all_axes"):
+        return tuple(a for a in ("model", "data") if a in mesh.axis_names)
+    return ("model",) if "model" in mesh.axis_names else ()
+
+
+def fsdp_axes(mesh):
+    """FSDP spans the data axis, extended across pods when present, so
+    e.g. 671B-scale optimizer state keeps shrinking with pod count.
+    With the 'resident_weights' opt flag, FSDP is disabled: weights stay
+    resident (TP-sharded only) instead of being re-gathered per step."""
+    from repro.launch import optflags
+    if optflags.has("resident_weights"):
+        return ()
+    return tuple(a for a in ("data", "pod") if a in mesh.axis_names)
+
+
+def _translate(logical, axes, shape, mesh):
+    parts = []
+    for l, dim in zip(logical, shape):
+        if l is None:
+            parts.append(None)
+            continue
+        from repro.launch import optflags
+        if optflags.has("flat_dp"):
+            # pure DP: weights FSDP-shard one dim over every axis, no
+            # tensor parallelism ('tp'/'ep' dims stay unsharded)
+            group = (tuple(a for a in ("data", "model", "pod")
+                           if a in axes) if l == "fsdp" else ())
+        elif l == "fsdp":
+            group = fsdp_axes(mesh)
+        elif l == "ep":
+            group = ep_axes(mesh)
+        elif optflags.has("tp2d"):
+            # 2-D resident tensor parallelism: TP dims shard over BOTH
+            # axes (weights never re-gathered; small activations move)
+            group = tuple(a for a in ("model", "data") if a in axes)
+        else:
+            group = ("model",)
+        group = tuple(a for a in group if a in axes)
+        n = 1
+        for a in group:
+            n *= mesh.shape[a]
+        # jit argument shardings must divide evenly
+        if group and dim % n == 0:
+            parts.append(group if len(group) > 1 else group[0])
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def param_spec(path, shape, mesh) -> P:
+    """path: tuple of keys from tree_flatten_with_path."""
+    keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+    name = next((k for k in reversed(keys) if isinstance(k, str)), None)
+    axes = mesh.axis_names
+    in_moe = "moe" in keys
+    rank = len(shape)
+
+    if name in ("m", "v", "step"):
+        # optimizer moments mirror their parameter (path continues past m/v)
+        name = next((k for k in reversed(keys[:keys.index(name)])
+                     if isinstance(k, str)), name)
+
+    if in_moe and name in _MOE_RULES and rank >= 3:
+        logical = _MOE_RULES[name]
+    elif name in _RULES:
+        logical = _RULES[name]
+    else:
+        logical = ()
+
+    logical = tuple(logical[-rank:]) if logical else ()
+    if len(logical) < rank:  # stacked leading dims (stage repeat) -> None
+        logical = (None,) * (rank - len(logical)) + logical
+    return _translate(logical, axes, shape, mesh)
+
+
+def tree_shardings(tree, mesh):
+    """NamedSharding pytree for a (possibly abstract) param/opt tree."""
+    def one(path, leaf):
+        return NamedSharding(mesh, param_spec(path, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def with_shardings(abstract_tree, mesh):
+    """Attach shardings to a ShapeDtypeStruct tree."""
+    def one(path, leaf):
+        return jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype,
+            sharding=NamedSharding(mesh, param_spec(path, leaf.shape, mesh)))
+    return jax.tree_util.tree_map_with_path(one, abstract_tree)
+
+
+# ---------------------------------------------------------------------------
+# KV cache / activations
+
+def batch_axes(mesh):
+    """Batch shards over (pod, data); under the flat_dp opt flag the
+    'model' axis joins them (pure 256/512-way data parallelism — the
+    right regime for small models where TP activation all-reduces
+    dominate)."""
+    from repro.launch import optflags
+    axes = ("pod", "data", "model") if optflags.has("flat_dp") \
+        else ("pod", "data")
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def cache_spec(name: str, shape, mesh, *, batch: int) -> P:
+    """Cache arrays have a leading stage-repeat dim. Sequence dim is
+    sharded over 'model' (flash-decode layout); if the batch cannot use
+    the data axis (e.g. long_500k B=1) the sequence takes both axes."""
+    axes = mesh.axis_names
+    ba = batch_axes(mesh)
+    dp = 1
+    for a in ba:
+        dp *= mesh.shape[a]
+    b_shardable = batch % dp == 0
+    bspec = ba if b_shardable else None
+
+    def seq_axes():
+        if b_shardable:
+            return "model" if "model" in axes else None
+        both = tuple(a for a in ("data", "model") if a in axes)
+        return both if both else None
+
+    if name in ("k", "v"):          # (R,B,T,K,hd)
+        return P(None, bspec, seq_axes(), None, None)
+    if name in ("ckv", "krope"):    # (R,B,T,r)
+        return P(None, bspec, seq_axes(), None)
+    if name == "state":             # (R,B,H,dk,dv)
+        H = shape[2]
+        tp = "model" if ("model" in axes
+                         and H % mesh.shape["model"] == 0) else None
+        return P(None, bspec, tp, None, None)
+    if name == "ssm_h":             # (R,B,dI,N)
+        return P(None, bspec, "model" if "model" in axes else None, None)
+    if name == "ssm_conv":          # (R,B,cw-1,dI)
+        return P(None, bspec, None, None)
+    if name in ("sx_tm", "sx_cm"):  # (R,B,d)
+        return P(None, bspec, None)
+    return P(*([None] * len(shape)))
+
+
+def data_spec(mesh, shape, *, batch_dim: int = 0) -> P:
+    ba = batch_axes(mesh)
+    parts = [None] * len(shape)
+    dp = 1
+    for a in ba:
+        dp *= mesh.shape[a]
+    if shape[batch_dim] % dp == 0:
+        parts[batch_dim] = ba
+    return P(*parts)

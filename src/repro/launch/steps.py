@@ -1,0 +1,159 @@
+"""Step builders + abstract input specs for every (arch × input-shape):
+the bridge between model substrate and the multi-pod dry-run / launchers.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.launch import shard_rules as sr
+from repro.models.transformer import apply_model, param_shapes
+from repro.serving import kv_cache as kvc
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train_step import make_train_step
+
+
+def sds(shape, dtype, mesh=None, spec=None):
+    sharding = NamedSharding(mesh, spec) if mesh is not None else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def long_context_supported(cfg: ModelConfig) -> bool:
+    """long_500k runs only for sub-quadratic archs: every layer must be
+    windowed-attention, SSM, or hybrid (see DESIGN.md skip notes).
+    Pure full-attention archs are skipped. gemma2 qualifies via its
+    local/global alternation (global layers decode at O(S) with the
+    model-sharded cache)."""
+    if cfg.family in ("ssm", "hybrid"):
+        return True
+    if cfg.name.startswith("gemma2"):
+        return True
+    return False
+
+
+def case_supported(cfg: ModelConfig, ishape: InputShape):
+    if ishape.name == "long_500k" and not long_context_supported(cfg):
+        return False, "pure full-attention arch; long_500k skipped (DESIGN.md)"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+
+def num_microbatches(cfg: ModelConfig, ishape: InputShape, mesh) -> int:
+    from repro.launch import optflags
+    dp = 1
+    for a in sr.batch_axes(mesh):
+        dp *= mesh.shape[a]
+    b_local = max(1, ishape.global_batch // dp)
+    # target: ~1 sequence per device per microbatch at 4k train
+    m = b_local
+    while ishape.global_batch % m:
+        m -= 1
+    return optflags.get_int("microbatches", max(1, m))
+
+
+def abstract_params(cfg: ModelConfig, mesh, dtype):
+    tree = param_shapes(cfg, dtype)
+    return sr.with_shardings(tree, mesh)
+
+
+def abstract_cache(cfg: ModelConfig, mesh, batch: int, max_len: int,
+                   chunk: int = 256):
+    def shardings(name, shape):
+        return NamedSharding(mesh,
+                             sr.cache_spec(name, shape, mesh, batch=batch))
+    return kvc.init_cache(cfg, batch, max_len, chunk=chunk, abstract=True,
+                          shardings=shardings)
+
+
+def build_case(cfg: ModelConfig, ishape: InputShape, mesh, *,
+               q_block: int = 512):
+    """Returns (step_fn, args_abstract: tuple, meta: dict).
+    step_fn(*args) is what the dry-run lowers and compiles."""
+    B, S = ishape.global_batch, ishape.seq_len
+    stub = cfg.embed_stub is not None
+    bspec = sr.data_spec(mesh, (B,))
+
+    if ishape.mode == "train":
+        params = abstract_params(cfg, mesh, jnp.float32)   # fp32 master
+        opt_cfg = AdamWConfig(moment_dtype="bfloat16")
+        opt = sr.with_shardings(
+            jax.eval_shape(lambda p: init_opt_state(opt_cfg, p), params),
+            mesh)
+        nmb = num_microbatches(cfg, ishape, mesh)
+        step = make_train_step(cfg, opt_cfg, num_microbatches=nmb,
+                               compute_dtype=jnp.bfloat16, q_block=q_block,
+                               stub=stub)
+        if stub:
+            batch = {
+                "embeds": sds((B, S, cfg.d_model), jnp.bfloat16, mesh,
+                              sr.data_spec(mesh, (B, S, cfg.d_model))),
+                "targets": sds((B, S), jnp.int32, mesh,
+                               sr.data_spec(mesh, (B, S))),
+            }
+        else:
+            batch = {"tokens": sds((B, S + 1), jnp.int32, mesh,
+                                   sr.data_spec(mesh, (B, S + 1)))}
+        return step, (params, opt, batch), {"microbatches": nmb,
+                                            "donate": (0, 1)}
+
+    params = abstract_params(cfg, mesh, jnp.bfloat16)
+    # prefill writes the whole prompt in one chunk; decode writes 1 token
+    cache = abstract_cache(cfg, mesh, B, S,
+                           chunk=(S if ishape.mode == "prefill" else 1))
+    pos = sds((), jnp.int32, mesh, P())
+
+    if ishape.mode == "prefill":
+        from repro.launch import optflags
+        chunk = optflags.get_int("chunked_prefill", 0)
+
+        if chunk and S % chunk == 0:
+            # chunked prefill (the substrate-level form of Teola's
+            # Partial/Full Prefilling): process the prompt in chunks so
+            # transient activations / MoE dispatch buffers scale with the
+            # chunk, not the prompt. fori_loop reuses buffers per chunk.
+            def prefill(params, inputs, cache, pos):
+                def body(i, cache):
+                    sl = jax.lax.dynamic_slice_in_dim(inputs, i * chunk,
+                                                      chunk, axis=1)
+                    _, cache, _ = apply_model(cfg, params, sl, cache,
+                                              pos + i * chunk,
+                                              q_block=q_block, remat=False,
+                                              logits_slice=1)
+                    return cache
+                cache = jax.lax.fori_loop(0, S // chunk - 1, body, cache)
+                last = jax.lax.dynamic_slice_in_dim(inputs, S - chunk,
+                                                    chunk, axis=1)
+                logits, cache, _ = apply_model(cfg, params, last, cache,
+                                               pos + S - chunk,
+                                               q_block=q_block, remat=False,
+                                               logits_slice=1)
+                return logits, cache
+        else:
+            def prefill(params, inputs, cache, pos):
+                logits, cache, _ = apply_model(cfg, params, inputs, cache,
+                                               pos, q_block=q_block,
+                                               remat=False, logits_slice=1)
+                return logits, cache
+        if stub:
+            inp = sds((B, S, cfg.d_model), jnp.bfloat16, mesh,
+                      sr.data_spec(mesh, (B, S, cfg.d_model)))
+        else:
+            inp = sds((B, S), jnp.int32, mesh, sr.data_spec(mesh, (B, S)))
+        return prefill, (params, inp, cache, pos), {"donate": (2,)}
+
+    # decode: ONE new token against a seq_len KV cache
+    def decode(params, inputs, cache, pos):
+        logits, cache, _ = apply_model(cfg, params, inputs, cache, pos,
+                                       q_block=q_block, remat=False)
+        return logits, cache
+    if stub:
+        inp = sds((B, 1, cfg.d_model), jnp.bfloat16, mesh,
+                  sr.data_spec(mesh, (B, 1, cfg.d_model)))
+    else:
+        inp = sds((B, 1), jnp.int32, mesh, sr.data_spec(mesh, (B, 1)))
+    return decode, (params, inp, cache, pos), {"donate": (2,)}

@@ -1,0 +1,79 @@
+"""Training launcher.
+
+Local (this container): reduced variant of any assigned arch on CPU:
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --steps 50 --reduced
+
+Production: builds the pjit train step on the 16x16 / 2x16x16 mesh — on a
+real pod this executes; here use launch.dryrun for the AOT compile proof.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import INPUT_SHAPES, get_config
+from repro.models.transformer import init_params
+from repro.training.checkpoint import save_checkpoint
+from repro.training.data import SyntheticLM
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train_step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the smoke-scale variant on CPU")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if cfg.embed_stub and not args.reduced:
+        raise SystemExit("stub-frontend archs train via embeds; use "
+                         "--reduced for the local driver")
+
+    params = init_params(cfg, jax.random.key(0))
+    n = sum(p.size for p in jax.tree.leaves(params))
+    print(f"[train] {cfg.name}: {n / 1e6:.1f}M params, "
+          f"{jax.device_count()} device(s)")
+    oc = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=args.steps)
+    opt = init_opt_state(oc, params)
+    stub = cfg.embed_stub is not None
+    step_fn = jax.jit(make_train_step(
+        cfg, oc, num_microbatches=args.microbatches,
+        compute_dtype=jnp.float32, q_block=64, stub=stub))
+    data = SyntheticLM(cfg.vocab_size, batch=args.batch, seq_len=args.seq)
+    t0 = time.time()
+    for i, batch in enumerate(data):
+        if i >= args.steps:
+            break
+        toks = jnp.asarray(batch["tokens"])
+        if stub:
+            emb = jax.nn.one_hot(toks[:, :-1] % cfg.d_model, cfg.d_model)
+            b = {"embeds": emb.astype(jnp.float32),
+                 "targets": toks[:, 1:]}
+        else:
+            b = {"tokens": toks}
+        params, opt, m = step_fn(params, opt, b)
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"[train] step {i:4d} ce={float(m['ce']):.4f} "
+                  f"({time.time() - t0:.1f}s)")
+    data.close()
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, step=args.steps)
+        print(f"[train] checkpoint saved to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Shared building blocks: norms, activations, RoPE, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def group_norm_heads(x, scale, eps: float = 1e-5):
+    """Per-head group norm over the last dim. x: (..., H, hd)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def softcap(x, cap):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+def rope_freqs(head_dim: int, theta: float, rotary_dim: int | None = None):
+    rd = rotary_dim if rotary_dim is not None else head_dim
+    inv = 1.0 / (theta ** (jnp.arange(0, rd, 2, dtype=jnp.float32) / rd))
+    return inv  # (rd/2,)
+
+
+def apply_rope(x, positions, theta: float, kind: str = "neox"):
+    """x: (B, S, H, hd) or (B, S, hd); positions: (S,) or (B, S) int32.
+
+    kind: 'neox' rotates the full head dim (half-split layout),
+          'half' rotates only the first half of head dims (ChatGLM 2D RoPE),
+          'none' is identity.
+    """
+    if kind == "none":
+        return x
+    hd = x.shape[-1]
+    rd = hd if kind == "neox" else hd // 2
+    inv = rope_freqs(hd, theta, rd)
+    positions = jnp.asarray(positions)
+    if positions.ndim == 1:
+        positions = positions[None]     # (1, S)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (B|1, S, rd/2)
+    if x.ndim == 4:                     # head axis present
+        ang = ang[..., None, :]         # (B|1, S, 1, rd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    rot, rest = x[..., :rd], x[..., rd:]
+    x1, x2 = rot[..., : rd // 2], rot[..., rd // 2:]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    return jnp.concatenate([r1.astype(x.dtype), r2.astype(x.dtype), rest],
+                           axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    std = (scale if scale is not None else 1.0) / (fan_in ** 0.5)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))

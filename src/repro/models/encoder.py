@@ -1,0 +1,87 @@
+"""Bidirectional encoder models for the embedding and reranking engines
+(BERT-family stand-ins for bge-large-en / bge-reranker-large)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (act_fn, dense_init, embed_init, rms_norm,
+                                 split_keys)
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    name: str = "tiny-embedder"
+    vocab_size: int = 4096
+    d_model: int = 128
+    num_heads: int = 4
+    d_ff: int = 384
+    num_layers: int = 2
+    max_len: int = 512
+    out_dim: int = 128          # embedding dim (embedder) / 1 (reranker)
+    pooling: str = "mean"       # mean | cls_score
+    norm_eps: float = 1e-6
+
+
+EMBEDDER = EncoderConfig(name="tiny-embedder", out_dim=128, pooling="mean")
+RERANKER = EncoderConfig(name="tiny-reranker", out_dim=1,
+                         pooling="cls_score")
+
+
+def init_encoder_params(cfg: EncoderConfig, key, dtype=jnp.float32):
+    ks = split_keys(key, 3 + cfg.num_layers)
+    params = {
+        "embed": embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype),
+        "pos_embed": embed_init(ks[1], (cfg.max_len, cfg.d_model), dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "head": dense_init(ks[2], (cfg.d_model, cfg.out_dim), dtype),
+        "layers": [],
+    }
+    hd = cfg.d_model // cfg.num_heads
+    for i in range(cfg.num_layers):
+        lk = split_keys(ks[3 + i], 7)
+        params["layers"].append({
+            "ln1": jnp.zeros((cfg.d_model,), dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "wq": dense_init(lk[0], (cfg.d_model, cfg.d_model), dtype),
+            "wk": dense_init(lk[1], (cfg.d_model, cfg.d_model), dtype),
+            "wv": dense_init(lk[2], (cfg.d_model, cfg.d_model), dtype),
+            "wo": dense_init(lk[3], (cfg.d_model, cfg.d_model), dtype),
+            "w1": dense_init(lk[4], (cfg.d_model, cfg.d_ff), dtype),
+            "w2": dense_init(lk[5], (cfg.d_ff, cfg.d_model), dtype),
+        })
+    return params
+
+
+def apply_encoder(cfg: EncoderConfig, params, tokens, mask=None):
+    """tokens (B,S) int32; mask (B,S) 1=real, 0=pad. Returns:
+    pooling=='mean': L2-normalized embeddings (B, out_dim)
+    pooling=='cls_score': relevance scores (B,)"""
+    B, S = tokens.shape
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    mask = mask.astype(jnp.float32)
+    x = params["embed"][tokens] + params["pos_embed"][:S]
+    hd = cfg.d_model // cfg.num_heads
+    for lp in params["layers"]:
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q = (h @ lp["wq"]).reshape(B, S, cfg.num_heads, hd)
+        k = (h @ lp["wk"]).reshape(B, S, cfg.num_heads, hd)
+        v = (h @ lp["wv"]).reshape(B, S, cfg.num_heads, hd)
+        s = jnp.einsum("bshd,bthd->bhst", q, k) * hd ** -0.5
+        s = jnp.where(mask[:, None, None, :] > 0, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhst,bthd->bshd", p, v).reshape(B, S, cfg.d_model)
+        x = x + o @ lp["wo"]
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + jax.nn.gelu(h @ lp["w1"]) @ lp["w2"]
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.pooling == "mean":
+        pooled = jnp.sum(x * mask[..., None], axis=1) / (
+            jnp.sum(mask, axis=1, keepdims=True) + 1e-6)
+        emb = pooled @ params["head"]
+        return emb / (jnp.linalg.norm(emb, axis=-1, keepdims=True) + 1e-6)
+    # reranker: score from first token
+    return (x[:, 0] @ params["head"]).squeeze(-1)

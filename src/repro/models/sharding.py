@@ -1,0 +1,84 @@
+"""Trace-time sharding hints.
+
+Model code calls ``hint(x, 'batch', None, 'model', None)`` on activations.
+When a mesh context is active (set by the launcher / dry-run before
+tracing), this becomes ``with_sharding_constraint``; otherwise it is a
+no-op, so the same model code runs untouched on a single CPU device in
+tests and in the Teola engines.
+
+Logical axes:
+  'batch'  -> all batch-ish mesh axes present: ('pod', 'data')
+  'model'  -> tensor-parallel axis 'model'
+  None     -> unsharded
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _axes():
+    return getattr(_state, "axes", None)
+
+
+def _mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh):
+    """Activate sharding hints for model code traced inside this block."""
+    prev_axes, prev_mesh = _axes(), _mesh()
+    _state.axes = tuple(mesh.axis_names)
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.axes = prev_axes
+        _state.mesh = prev_mesh
+
+
+def logical_to_spec(logical, axes=None) -> P:
+    axes = axes if axes is not None else _axes()
+    parts = []
+    for l in logical:
+        if l is None or axes is None:
+            parts.append(None)
+        elif l == "batch":
+            from repro.launch import optflags
+            names = (("pod", "data", "model")
+                     if optflags.has("flat_dp") else ("pod", "data"))
+            have = tuple(a for a in names if a in axes)
+            parts.append(have if have else None)
+        elif l == "model":
+            from repro.launch import optflags
+            if optflags.has("flat_dp"):    # model axis belongs to batch
+                parts.append(None)
+            else:
+                parts.append("model" if "model" in axes else None)
+        else:
+            raise ValueError(f"unknown logical axis {l!r}")
+    return P(*parts)
+
+
+def hint(x, *logical):
+    """Apply a sharding constraint if a mesh context is active."""
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def active_mesh():
+    return _mesh()
+
+
+def axis_present(name: str) -> bool:
+    axes = _axes()
+    return axes is not None and name in axes

@@ -1,0 +1,210 @@
+"""Recurrent sequence mixers: RWKV-6 (Finch) time/channel mix and a
+Mamba-style selective SSM branch (used by Hymba's hybrid heads).
+
+Both use the same chunked-scan execution strategy: an outer lax.scan over
+fixed-size chunks carrying the recurrent state, with a checkpointed inner
+sequential scan, so the backward pass only stores chunk-boundary states
+(Mamba-2-style chunking; the Pallas `rwkv6_scan` kernel implements the
+intra-chunk part with VMEM-resident state on TPU).
+
+Decode (S==1) is a single O(1) state update — this is what makes the
+long_500k shape tractable for these families.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (act_fn, dense_init, group_norm_heads,
+                                 split_keys)
+
+CHUNK = 128
+
+
+def _chunked_scan(step_fn, state, xs, chunk=CHUNK):
+    """xs: pytree of (B, S, ...) arrays. step_fn(state, x_t) -> (state, y_t)
+    with x_t (B, ...). Returns (state, ys (B,S,...))."""
+    S = jax.tree_util.tree_leaves(xs)[0].shape[1]
+
+    def scan_time(state, xs_c):
+        # xs_c: (B, C, ...) -> time-major scan
+        xs_t = jax.tree.map(lambda a: jnp.moveaxis(a, 1, 0), xs_c)
+        state, ys = jax.lax.scan(step_fn, state, xs_t)
+        return state, jax.tree.map(lambda a: jnp.moveaxis(a, 0, 1), ys)
+
+    if S <= chunk or S % chunk != 0:
+        return scan_time(state, xs)
+
+    nc = S // chunk
+    xs_chunks = jax.tree.map(
+        lambda a: jnp.moveaxis(
+            a.reshape(a.shape[0], nc, chunk, *a.shape[2:]), 1, 0), xs)
+    inner = jax.checkpoint(scan_time)
+    state, ys = jax.lax.scan(inner, state, xs_chunks)
+    ys = jax.tree.map(
+        lambda a: jnp.moveaxis(a, 0, 1).reshape(
+            a.shape[1], nc * chunk, *a.shape[3:]), ys)
+    return state, ys
+
+
+def _token_shift(x, sx):
+    """x (B,S,d), sx (B,d) last token of previous chunk -> previous-token
+    tensor (B,S,d) and new sx."""
+    prev = jnp.concatenate([sx[:, None, :], x[:, :-1, :]], axis=1)
+    return prev, x[:, -1, :]
+
+
+# ===========================================================================
+# RWKV-6
+
+def init_rwkv_params(key, cfg, dtype):
+    d = cfg.d_model
+    s = cfg.ssm
+    H = d // s.head_dim
+    L = s.lora_rank
+    ks = split_keys(key, 12)
+    return {
+        "tm": {
+            "mix_base": (jax.random.uniform(ks[0], (5, d), jnp.float32)
+                         ).astype(dtype),
+            "mix_w1": dense_init(ks[1], (d, 5 * L), dtype),
+            "mix_w2": dense_init(ks[2], (5, L, d), dtype, scale=0.1),
+            "wr": dense_init(ks[3], (d, d), dtype),
+            "wk": dense_init(ks[4], (d, d), dtype),
+            "wv": dense_init(ks[5], (d, d), dtype),
+            "wg": dense_init(ks[6], (d, d), dtype),
+            "wo": dense_init(ks[7], (d, d), dtype),
+            "w_base": jnp.full((d,), -4.0, jnp.float32),
+            "w_w1": dense_init(ks[8], (d, L), dtype),
+            "w_w2": dense_init(ks[9], (L, d), dtype, scale=0.1),
+            "u": jnp.zeros((H, s.head_dim), jnp.float32),
+            "gn_scale": jnp.ones((H, s.head_dim), jnp.float32),
+        },
+        "cm": {
+            "mix_k": jnp.full((d,), 0.5, dtype),
+            "mix_r": jnp.full((d,), 0.5, dtype),
+            "wk": dense_init(ks[10], (d, cfg.d_ff), dtype),
+            "wv": dense_init(ks[11], (cfg.d_ff, d), dtype),
+            "wr": dense_init(ks[0], (d, d), dtype),
+        },
+    }
+
+
+def rwkv_time_mix(cfg, p, x, state, sx):
+    """x (B,S,d); state (B,H,hd,hd) fp32; sx (B,d) previous token.
+    Returns (out, new_state, new_sx)."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    H, hd = d // s.head_dim, s.head_dim
+
+    prev, new_sx = _token_shift(x, sx.astype(x.dtype))
+    dx = prev - x
+    # data-dependent token-shift mixing (ddlerp)
+    xxx = x + dx * p["mix_base"][0].astype(x.dtype)
+    t = jnp.tanh(xxx @ p["mix_w1"]).reshape(B, S, 5, -1)
+    mix = p["mix_base"].astype(jnp.float32) + jnp.einsum(
+        "bsfl,fld->bsfd", t.astype(jnp.float32),
+        p["mix_w2"].astype(jnp.float32))
+    xs = x[:, :, None, :] + dx[:, :, None, :] * mix.astype(x.dtype)
+    x_w, x_k, x_v, x_r, x_g = [xs[:, :, i] for i in range(5)]
+
+    r = (x_r @ p["wr"]).reshape(B, S, H, hd)
+    k = (x_k @ p["wk"]).reshape(B, S, H, hd)
+    v = (x_v @ p["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(x_g @ p["wg"])
+    # data-dependent decay in (0, 1)
+    ww = p["w_base"] + (jnp.tanh(x_w @ p["w_w1"]) @ p["w_w2"]).astype(
+        jnp.float32)
+    w = jnp.exp(-jnp.exp(ww.astype(jnp.float32))).reshape(B, S, H, hd)
+
+    u = p["u"].astype(jnp.float32)
+
+    def step(st, inp):
+        r_t, k_t, v_t, w_t = [a.astype(jnp.float32) for a in inp]
+        # st (B,H,hd,hd): k-index × v-index
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, st + u[..., None] * kv)
+        st = w_t[..., None] * st + kv
+        return st, y
+
+    state, y = _chunked_scan(step, state, (r, k, v, w))
+    y = group_norm_heads(y.astype(x.dtype), p["gn_scale"], eps=64e-5)
+    out = (y.reshape(B, S, d) * g) @ p["wo"]
+    return out, state, new_sx
+
+
+def rwkv_channel_mix(cfg, p, x, sx):
+    prev, new_sx = _token_shift(x, sx.astype(x.dtype))
+    dx = prev - x
+    x_k = x + dx * p["mix_k"]
+    x_r = x + dx * p["mix_r"]
+    k = jnp.square(jax.nn.relu(x_k @ p["wk"]))
+    kv = k @ p["wv"]
+    return jax.nn.sigmoid(x_r @ p["wr"]) * kv, new_sx
+
+
+# ===========================================================================
+# Mamba-style selective SSM (Hymba's parallel SSM heads)
+
+def init_mamba_params(key, cfg, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    dI = d                       # inner dim == d_model (parallel-head design)
+    N, R = s.state_dim, s.dt_rank
+    ks = split_keys(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * dI), dtype),
+        "conv_w": dense_init(ks[1], (s.conv_dim, dI), dtype),
+        "conv_b": jnp.zeros((dI,), dtype),
+        "w_x": dense_init(ks[2], (dI, R + 2 * N), dtype),
+        "w_dt": dense_init(ks[3], (R, dI), dtype),
+        "dt_bias": jnp.full((dI,), -4.6, jnp.float32),   # softplus ~= 0.01
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32),
+                                  (dI, 1))),
+        "D": jnp.ones((dI,), jnp.float32),
+        "out_proj": dense_init(ks[4], (dI, d), dtype),
+    }
+
+
+def mamba_branch(cfg, p, x, h_state, conv_state):
+    """x (B,S,d); h_state (B,dI,N) fp32; conv_state (B,cw-1,dI).
+    Returns (out (B,S,d), h_state, conv_state)."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    N, cw = s.state_dim, s.conv_dim
+    dI = d
+
+    xz = x @ p["w_in"]
+    x_in, z = xz[..., :dI], xz[..., dI:]
+
+    # causal depthwise conv with carried state
+    ctx = jnp.concatenate([conv_state.astype(x.dtype), x_in], axis=1)
+    new_conv_state = ctx[:, -(cw - 1):, :].astype(jnp.float32)
+    wins = jnp.stack([ctx[:, i:i + S, :] for i in range(cw)], axis=2)
+    x_c = jax.nn.silu(jnp.einsum("bswd,wd->bsd", wins, p["conv_w"])
+                      + p["conv_b"])
+
+    xdb = x_c @ p["w_x"]
+    R = s.dt_rank
+    dt = jax.nn.softplus((xdb[..., :R] @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"])                    # (B,S,dI)
+    Bc = xdb[..., R:R + N].astype(jnp.float32)              # (B,S,N)
+    Cc = xdb[..., R + N:].astype(jnp.float32)               # (B,S,N)
+    A = -jnp.exp(p["A_log"])                                # (dI,N)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        # h (B,dI,N)
+        da = jnp.exp(dt_t[..., None] * A)                   # (B,dI,N)
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h_state, y = _chunked_scan(
+        step, h_state,
+        (x_c.astype(jnp.float32), dt, Bc, Cc))
+    y = y + p["D"] * x_c.astype(jnp.float32)
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return out, h_state, new_conv_state

@@ -1,0 +1,162 @@
+"""KV / recurrent-state cache management.
+
+Cache layout mirrors the model's stage/pattern structure:
+
+    cache = {
+      'stages': [ [elem_cache, ...pattern elems], ...stages ],
+    }
+
+where each ``elem_cache`` is a dict of arrays with a leading ``repeat``
+dim (stacked across the scanned layers of the stage):
+
+  - full attention:     {'k': (R,B,T,K,hd), 'v': (R,B,T,K,hd)}
+  - sliding window:     same, with T = min(window, max_len)  (ring buffer)
+  - MLA:                {'ckv': (R,B,T,r), 'krope': (R,B,T,p)}
+  - hybrid (attn+ssm):  attention k/v plus {'ssm_h': (R,B,dI,N),
+                         'ssm_conv': (R,B,cw-1,dI)}
+  - rwkv:               {'state': (R,B,H,dk,dv), 'sx_tm': (R,B,d),
+                         'sx_cm': (R,B,d)}
+
+Sequence length is tracked as a single dynamic scalar ``pos`` passed to the
+model apply function (all layers advance in lockstep).
+
+``init_cache(..., abstract=True)`` returns ShapeDtypeStructs — used by the
+dry-run to build AOT inputs without allocating terabytes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, LayerSpec
+
+
+def _mk(shape, dtype, abstract, sharding=None):
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+    return jnp.zeros(shape, dtype)
+
+
+def elem_cache_shape(cfg: ModelConfig, spec: LayerSpec, repeat: int,
+                     batch: int, max_len: int, chunk: int = 256):
+    """Returns {name: (shape, dtype)} for one pattern element.
+
+    Sliding-window layers get a ring buffer of `window + chunk` slots
+    (capped at max_len): a chunked write of S tokens needs window+S-1
+    live slots for every query in the chunk to see its full window. When
+    the cap hits max_len the ring never wraps and degenerates to a linear
+    cache — same code path, no memory lost."""
+    out = {}
+    hd = cfg.resolved_head_dim
+    if spec.kind == "rwkv":
+        s = cfg.ssm
+        heads = cfg.d_model // s.head_dim
+        out["state"] = ((repeat, batch, heads, s.head_dim, s.head_dim),
+                        jnp.float32)
+        out["sx_tm"] = ((repeat, batch, cfg.d_model), jnp.float32)
+        out["sx_cm"] = ((repeat, batch, cfg.d_model), jnp.float32)
+        return out
+    # attention part ('attn' and 'hybrid'); ring size rounded up to 256
+    # so the sequence axis stays shardable over the mesh
+    if spec.window is None:
+        T = max_len
+    else:
+        T = min(-(-(spec.window + chunk) // 256) * 256, max_len)
+    if cfg.attention_kind == "mla":
+        m = cfg.mla
+        out["ckv"] = ((repeat, batch, T, m.kv_lora_rank), jnp.bfloat16)
+        out["krope"] = ((repeat, batch, T, m.qk_rope_head_dim), jnp.bfloat16)
+    else:
+        out["k"] = ((repeat, batch, T, cfg.num_kv_heads, hd), jnp.bfloat16)
+        out["v"] = ((repeat, batch, T, cfg.num_kv_heads, hd), jnp.bfloat16)
+    if spec.kind == "hybrid":
+        s = cfg.ssm
+        d_inner = cfg.d_model
+        out["ssm_h"] = ((repeat, batch, d_inner, s.state_dim), jnp.float32)
+        out["ssm_conv"] = ((repeat, batch, s.conv_dim - 1, d_inner),
+                           jnp.float32)
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               chunk: int = 256, abstract: bool = False, shardings=None):
+    """shardings: optional matching pytree-of-NamedSharding builder fn
+    f(name, shape) -> sharding, used for abstract dry-run inputs.
+    chunk: largest prefill chunk the caller will write (sizes the
+    sliding-window ring buffers)."""
+    stages = []
+    for st in cfg.stages:
+        elems = []
+        for spec in st.pattern:
+            shapes = elem_cache_shape(cfg, spec, st.repeat, batch, max_len,
+                                      chunk)
+            elem = {}
+            for name, (shape, dtype) in shapes.items():
+                sh = shardings(name, shape) if shardings else None
+                elem[name] = _mk(shape, dtype, abstract, sh)
+            elems.append(elem)
+        stages.append(elems)
+    return {"stages": stages}
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, max_len: int,
+                chunk: int = 256) -> int:
+    total = 0
+    for st in cfg.stages:
+        for spec in st.pattern:
+            for shape, dtype in elem_cache_shape(
+                    cfg, spec, st.repeat, batch, max_len, chunk).values():
+                total += int(np.prod(shape)) * jnp.dtype(dtype).itemsize
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Ring-buffer position bookkeeping (sliding-window layers)
+
+def batch_pos(pos, batch: int):
+    """Normalize pos (python int / scalar / (B,) vector) to (B,) int32 —
+    per-sequence positions enable continuous batching in the engines."""
+    pos = jnp.asarray(pos, jnp.int32)
+    return jnp.broadcast_to(pos, (batch,))
+
+
+def write_linear(buf, chunk, pos):
+    """buf (B,T,...), chunk (B,S,...), write at [pos_b, pos_b+S) per seq."""
+    pos = batch_pos(pos, buf.shape[0])
+
+    def one(b, c, p):
+        start = (p,) + (0,) * (b.ndim - 1)
+        return jax.lax.dynamic_update_slice(b, c.astype(b.dtype), start)
+
+    return jax.vmap(one)(buf, chunk, pos)
+
+
+def write_ring(buf, chunk, pos):
+    """Ring-buffer write: absolute positions pos_b..pos_b+S-1 land at
+    (pos_b+i) % W. Used by sliding-window layers."""
+    W = buf.shape[1]
+    S = chunk.shape[1]
+    pos = batch_pos(pos, buf.shape[0])
+    idx = (pos[:, None] + jnp.arange(S)[None, :]) % W     # (B,S)
+
+    def one(b, c, ix):
+        return b.at[ix].set(c.astype(b.dtype))
+
+    return jax.vmap(one)(buf, chunk, idx)
+
+
+def slot_positions_linear(T, length):
+    """Absolute position held by each slot of a linear cache of size T given
+    per-seq total length (B,); -1 for unwritten slots. Returns (B,T)."""
+    slot = jnp.arange(T)[None, :]
+    return jnp.where(slot < length[:, None], slot, -1)
+
+
+def slot_positions_ring(W, length):
+    """Absolute position held by each ring slot; -1 if unwritten.
+    Slot i holds the largest p < length_b with p % W == i. Returns (B,W)."""
+    i = jnp.arange(W)[None, :]
+    L = length[:, None]
+    p = (L - 1) - ((L - 1 - i) % W)
+    return jnp.where((p >= 0) & (L > 0), p, -1)

@@ -1,0 +1,36 @@
+"""Minimal pytree checkpointing (numpy .npz + structure manifest)."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def save_checkpoint(path: str, tree, step: int | None = None):
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    arrs, dtypes = {}, []
+    for i, l in enumerate(leaves):
+        a = np.asarray(l)
+        dtypes.append(str(a.dtype))
+        if a.dtype == jnp.bfloat16:   # numpy .npz has no native bf16
+            a = a.astype(np.float32)
+        arrs[f"leaf_{i}"] = a
+    np.savez(os.path.join(path, "arrays.npz"), **arrs)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump({"treedef": str(treedef), "num_leaves": len(leaves),
+                   "step": step, "dtypes": dtypes}, f)
+
+
+def load_checkpoint(path: str, like_tree):
+    leaves, treedef = jax.tree.flatten(like_tree)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["num_leaves"] == len(leaves), "tree structure mismatch"
+    new_leaves = [jnp.asarray(data[f"leaf_{i}"]).astype(l.dtype)
+                  for i, l in enumerate(leaves)]
+    return jax.tree.unflatten(treedef, new_leaves)

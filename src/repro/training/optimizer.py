@@ -1,0 +1,71 @@
+"""AdamW built from scratch (no optax dependency), with optional bf16
+moment storage for memory-constrained large-model dry-runs."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "float32"     # 'bfloat16' halves optimizer memory
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def init_opt_state(cfg: AdamWConfig, params):
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt_state, params):
+    """params: fp32 master weights. Returns (new_params, new_opt_state)."""
+    step = opt_state["step"] + 1
+    lr = lr_at(cfg, step)
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mh = m32 / c1
+        vh = v32 / c2
+        newp = p - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                         + cfg.weight_decay * p)
+        return newp, m32.astype(mdt), v32.astype(mdt)
+
+    flat = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"],
+                        is_leaf=lambda x: isinstance(x, jax.Array))
+    newp = jax.tree.map(lambda t3: t3[0], flat,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    newm = jax.tree.map(lambda t3: t3[1], flat,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    newv = jax.tree.map(lambda t3: t3[2], flat,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return newp, {"step": step, "m": newm, "v": newv}

@@ -1,0 +1,100 @@
+"""Training step: next-token cross-entropy + AdamW, with microbatch
+gradient accumulation (lax.scan) so production batch sizes fit HBM.
+
+Master weights fp32 (FSDP/TP sharded by the launcher); compute in the
+config dtype (bf16 on TPU). MoE aux load-balance loss added with a small
+coefficient.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import apply_model
+from repro.training.optimizer import AdamWConfig, adamw_update
+
+AUX_COEF = 0.01
+
+
+def next_token_loss(cfg, params, tokens, *, compute_dtype=jnp.bfloat16,
+                    q_block=512):
+    """tokens (B, S+0): inputs tokens[:, :-1] predict tokens[:, 1:]."""
+    cparams = jax.tree.map(
+        lambda p: p.astype(compute_dtype)
+        if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+    logits, _, aux = apply_model(cfg, cparams, tokens[:, :-1],
+                                 q_block=q_block)
+    logits = logits.astype(jnp.float32)
+    targets = tokens[:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None],
+                               axis=-1).squeeze(-1)
+    ce = jnp.mean(logz - gold)
+    return ce + AUX_COEF * aux, ce
+
+
+def embed_stub_loss(cfg, params, embeds, targets, *,
+                    compute_dtype=jnp.bfloat16, q_block=512):
+    """For modality-stub archs: inputs are precomputed frame/patch
+    embeddings (B,S,d); targets (B,S) token ids."""
+    cparams = jax.tree.map(
+        lambda p: p.astype(compute_dtype)
+        if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+    logits, _, aux = apply_model(cfg, cparams, embeds, q_block=q_block)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None],
+                               axis=-1).squeeze(-1)
+    ce = jnp.mean(logz - gold)
+    return ce + AUX_COEF * aux, ce
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, *, num_microbatches: int = 1,
+                    compute_dtype=jnp.bfloat16, q_block=512,
+                    stub: bool = False):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). batch: {'tokens': (B,S)} or {'embeds': (B,S,d),
+    'targets': (B,S)} for stub archs. B must divide by num_microbatches."""
+
+    def loss_fn(params, mb):
+        if stub:
+            return embed_stub_loss(cfg, params, mb["embeds"], mb["targets"],
+                                   compute_dtype=compute_dtype,
+                                   q_block=q_block)
+        return next_token_loss(cfg, params, mb["tokens"],
+                               compute_dtype=compute_dtype, q_block=q_block)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches == 1:
+            (loss, ce), grads = grad_fn(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda a: a.reshape(num_microbatches,
+                                    a.shape[0] // num_microbatches,
+                                    *a.shape[1:]), batch)
+
+            def acc(carry, mb):
+                g_acc, l_acc, c_acc = carry
+                (l, c), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l, c_acc + c), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (grads, loss, ce), _ = jax.lax.scan(
+                acc, (zeros, jnp.zeros(()), jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            loss = loss / num_microbatches
+            ce = ce / num_microbatches
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, 1.0 / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        params, opt_state = adamw_update(opt_cfg, grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "ce": ce, "gnorm": gnorm}
+
+    return train_step

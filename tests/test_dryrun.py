@@ -1,0 +1,46 @@
+"""Dry-run machinery smoke test (subprocess — it forces 512 devices)."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_dryrun_one_case_single_and_multipod():
+    with tempfile.TemporaryDirectory() as td:
+        for extra in ([], ["--multi-pod"]):
+            r = subprocess.run(
+                [sys.executable, "-m", "repro.launch.dryrun",
+                 "--arch", "tinyllama-1.1b", "--shape", "decode_32k",
+                 "--out", td] + extra,
+                env={**os.environ, "PYTHONPATH": SRC},
+                capture_output=True, text=True, timeout=900)
+            assert r.returncode == 0, r.stdout + r.stderr
+        files = os.listdir(td)
+        assert len(files) == 2
+        for f in files:
+            rec = json.load(open(os.path.join(td, f)))
+            assert rec["status"] == "ok"
+            assert rec["devices"] in (256, 512)
+            t = rec["roofline_terms_s"]
+            assert all(v >= 0 for v in t.values())
+            assert rec["dominant_term"] in t
+            assert rec["memory_analysis"]["argument_size_in_bytes"] > 0
+            # roofline inputs present
+            assert rec["per_device"]["analytic_flops"] > 0
+            assert rec["per_device"]["collective_bytes"] > 0
+            # a 1.1B model's bf16 weights fit 256+ chips easily
+            assert rec["memory_analysis"]["argument_size_in_bytes"] < 2**32
+
+
+def test_skip_note_for_full_attention_long_context():
+    with tempfile.TemporaryDirectory() as td:
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "deepseek-67b", "--shape", "long_500k", "--out", td],
+            env={**os.environ, "PYTHONPATH": SRC},
+            capture_output=True, text=True, timeout=300)
+        assert r.returncode == 0
+        assert "SKIP" in r.stdout

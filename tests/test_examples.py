@@ -1,0 +1,48 @@
+"""Examples must stay runnable (subprocess smoke tests)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+SRC = os.path.join(ROOT, "src")
+
+
+def _run(args, timeout=900):
+    r = subprocess.run([sys.executable] + args,
+                       env={**os.environ, "PYTHONPATH": SRC,
+                            "REPRO_SIM_SPEED": "16"},
+                       cwd=ROOT, capture_output=True, text=True,
+                       timeout=timeout)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    return r.stdout
+
+
+def test_quickstart():
+    out = _run([os.path.join(ROOT, "examples", "quickstart.py")])
+    assert "optimized e-graph" in out
+    assert "end-to-end latency" in out
+
+
+def test_serve_batched_driver():
+    out = _run([os.path.join(ROOT, "examples", "serve_batched.py"), "3"])
+    assert "served 3 queries" in out
+    assert "topology-aware batching" in out
+
+
+def test_train_tiny_short():
+    out = _run([os.path.join(ROOT, "examples", "train_tiny.py"), "30"])
+    assert "checkpoint round-trip OK" in out
+
+
+def test_serve_launcher_sim():
+    out = _run(["-m", "repro.launch.serve", "--app", "naive_rag", "--sim",
+                "--queries", "3", "--scheme", "Teola"])
+    assert "avg latency" in out
+
+
+def test_train_launcher_reduced():
+    out = _run(["-m", "repro.launch.train", "--arch", "rwkv6-3b",
+                "--reduced", "--steps", "6"])
+    assert "step    5" in out or "step 5" in out.replace("  ", " ")

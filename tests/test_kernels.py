@@ -1,0 +1,127 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+@pytest.mark.parametrize("B,Sq,H,K,hd,T,prefix", [
+    (1, 128, 4, 4, 64, 128, 0),        # plain causal (MHA)
+    (2, 128, 4, 2, 64, 256, 64),       # GQA + prefix (partial prefill)
+    (1, 256, 8, 1, 128, 512, 128),     # MQA, bigger head dim
+    (2, 64, 4, 2, 64, 256, 192),       # chunk smaller than block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_prefill_sweep(B, Sq, H, K, hd, T, prefix, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, T, K, hd), dtype)
+    v = jax.random.normal(ks[2], (B, T, K, hd), dtype)
+    o = ops.flash_prefill(q, k, v, prefix_len=prefix, bq=64, bk=64)
+    o_ref = ref.flash_prefill_ref(q, k, v, prefix_len=prefix)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("window,cap", [(64, None), (None, 30.0),
+                                        (100, 50.0)])
+def test_flash_prefill_window_softcap(window, cap):
+    ks = jax.random.split(jax.random.key(1), 3)
+    B, Sq, H, K, hd, T, prefix = 2, 128, 4, 2, 64, 256, 96
+    q = jax.random.normal(ks[0], (B, Sq, H, hd))
+    k = jax.random.normal(ks[1], (B, T, K, hd))
+    v = jax.random.normal(ks[2], (B, T, K, hd))
+    o = ops.flash_prefill(q, k, v, prefix_len=prefix, window=window,
+                          cap=cap, bq=64, bk=64)
+    o_ref = ref.flash_prefill_ref(q, k, v, prefix_len=prefix, window=window,
+                                  cap=cap)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,H,K,hd,T", [
+    (2, 4, 2, 64, 256), (1, 8, 8, 128, 128), (3, 4, 1, 64, 512),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, H, K, hd, T, dtype):
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, T, K, hd), dtype)
+    v = jax.random.normal(ks[2], (B, T, K, hd), dtype)
+    length = jnp.arange(1, B + 1) * (T // (B + 1)) + 1
+    o = ops.decode_attention(q, k, v, length, bk=64)
+    o_ref = ref.decode_attention_ref(q, k, v, length)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), **TOL[dtype])
+
+
+def test_decode_attention_window():
+    ks = jax.random.split(jax.random.key(3), 3)
+    B, H, K, hd, T = 2, 4, 2, 64, 256
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, T, K, hd))
+    v = jax.random.normal(ks[2], (B, T, K, hd))
+    length = jnp.array([200, 256])
+    o = ops.decode_attention(q, k, v, length, window=64, bk=64)
+    o_ref = ref.decode_attention_ref(q, k, v, length, window=64)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,S,H,hd,chunk", [
+    (1, 64, 2, 32, 16), (2, 128, 4, 64, 64), (1, 96, 3, 64, 32),
+])
+def test_rwkv6_scan_sweep(B, S, H, hd, chunk):
+    ks = jax.random.split(jax.random.key(4), 5)
+    r, k, v = [jax.random.normal(kk, (B, S, H, hd)) * 0.5 for kk in ks[:3]]
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, hd))) * 0.5 + 0.4
+    u = jax.random.normal(ks[4], (H, hd)) * 0.1
+    s0 = jax.random.normal(jax.random.key(5), (B, H, hd, hd)) * 0.1
+    y, sf = ops.rwkv6_scan(r, k, v, w, u, s0, chunk=chunk)
+    y_ref, sf_ref = ref.rwkv6_scan_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sf_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rwkv6_scan_state_carry():
+    """Scanning two halves with carried state == one scan (the property the
+    engine's chunked prefill relies on)."""
+    ks = jax.random.split(jax.random.key(6), 5)
+    B, S, H, hd = 1, 128, 2, 32
+    r, k, v = [jax.random.normal(kk, (B, S, H, hd)) * 0.5 for kk in ks[:3]]
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, hd))) * 0.5 + 0.4
+    u = jnp.zeros((H, hd))
+    s0 = jnp.zeros((B, H, hd, hd))
+    y_full, sf_full = ops.rwkv6_scan(r, k, v, w, u, s0, chunk=32)
+    y1, s1 = ops.rwkv6_scan(r[:, :64], k[:, :64], v[:, :64], w[:, :64], u,
+                            s0, chunk=32)
+    y2, s2 = ops.rwkv6_scan(r[:, 64:], k[:, 64:], v[:, 64:], w[:, 64:], u,
+                            s1, chunk=32)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(sf_full),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_prefill_chunked_equals_one_shot():
+    """Teola Table-3 property: prefilling in two chunks (partial+full)
+    returns the same attention output for the second chunk as a single
+    full prefill computes for those positions."""
+    ks = jax.random.split(jax.random.key(7), 3)
+    B, S, H, K, hd = 1, 256, 4, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    one = ops.flash_prefill(q, k, v, prefix_len=0, bq=64, bk=64)
+    part2 = ops.flash_prefill(q[:, 128:], k, v, prefix_len=128, bq=64,
+                              bk=64)
+    np.testing.assert_allclose(np.asarray(one[:, 128:]), np.asarray(part2),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,83 @@
+"""MoE routing invariants + expert-parallel vs dense equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoEConfig, get_config
+from repro.models import moe as moe_mod
+from repro.models.sharding import mesh_context
+
+
+def _cfg(capacity_factor=8.0, experts=4, topk=2):
+    base = get_config("qwen2-moe-a2.7b").reduced()
+    return dataclasses.replace(
+        base, moe=dataclasses.replace(base.moe, num_experts=experts,
+                                      top_k=topk,
+                                      capacity_factor=capacity_factor))
+
+
+def test_router_topk_gates_normalized():
+    cfg = _cfg()
+    p = moe_mod.init_moe_params(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (32, cfg.d_model))
+    gates, idx, logits = moe_mod.router_probs(cfg, p["router"], x)
+    assert gates.shape == (32, cfg.moe.top_k)
+    assert idx.shape == (32, cfg.moe.top_k)
+    if cfg.moe.norm_topk_prob:
+        np.testing.assert_allclose(np.asarray(jnp.sum(gates, -1)), 1.0,
+                                   rtol=1e-4)
+    # indices within range and distinct per token
+    assert int(idx.max()) < cfg.moe.num_experts
+    for row in np.asarray(idx):
+        assert len(set(row)) == len(row)
+
+
+def test_aux_loss_uniform_router_is_one():
+    cfg = _cfg()
+    T, E = 512, cfg.moe.num_experts
+    logits = jnp.zeros((T, E))
+    idx = jnp.stack([jnp.arange(T) % E, (jnp.arange(T) + 1) % E], -1)
+    loss = moe_mod.aux_load_balance_loss(cfg, logits, idx)
+    np.testing.assert_allclose(float(loss), 1.0, rtol=1e-3)
+
+
+def test_ep_matches_dense_single_device():
+    """shard_map EP path (tp=1 trivial mesh) must equal the dense path
+    when capacity is large enough that nothing drops."""
+    cfg = _cfg(capacity_factor=8.0)
+    p = moe_mod.init_moe_params(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model))
+    dense, _ = moe_mod.routed_dense(cfg, p, x.reshape(-1, cfg.d_model))
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    ep, _ = moe_mod.routed_ep(cfg, p, x.reshape(-1, cfg.d_model), mesh)
+    np.testing.assert_allclose(np.asarray(ep), np.asarray(dense),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_capacity_drops_tokens():
+    """With a tiny capacity factor the EP path drops overflow tokens
+    (outputs differ from dense on some tokens but are finite)."""
+    cfg = _cfg(capacity_factor=0.25)
+    p = moe_mod.init_moe_params(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (64, cfg.d_model))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    ep, _ = moe_mod.routed_ep(cfg, p, x, mesh)
+    assert np.isfinite(np.asarray(ep)).all()
+    dense, _ = moe_mod.routed_dense(cfg, p, x)
+    assert not np.allclose(np.asarray(ep), np.asarray(dense))
+
+
+def test_moe_ffn_shared_experts_added():
+    cfg = _cfg()
+    p = moe_mod.init_moe_params(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model))
+    full, _ = moe_mod.moe_ffn(cfg, p, x)
+    routed, _ = moe_mod.routed_dense(cfg, p, x.reshape(-1, cfg.d_model))
+    shared = moe_mod.shared_expert_ffn(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(routed.reshape(x.shape) + shared),
+                               rtol=2e-4, atol=2e-4)

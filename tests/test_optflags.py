@@ -1,0 +1,60 @@
+"""Beyond-paper optimization flags: numerical equivalence + spec sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.launch import optflags
+from repro.models.transformer import apply_model, init_params
+
+
+@pytest.fixture(autouse=True)
+def _clean_flags():
+    optflags.set_flags([])
+    yield
+    optflags.set_flags([])
+
+
+def test_causal_skip_exact():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 256), 0,
+                              cfg.vocab_size)
+    base, _, _ = apply_model(cfg, params, toks, q_block=64)
+    optflags.set_flags(["causal_skip"])
+    skip, _, _ = apply_model(cfg, params, toks, q_block=64)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(skip),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_causal_skip_windowed_exact():
+    cfg = get_config("gemma2-9b").reduced()
+    params = init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (1, 256), 0,
+                              cfg.vocab_size)
+    base, _, _ = apply_model(cfg, params, toks, q_block=64)
+    optflags.set_flags(["causal_skip"])
+    skip, _, _ = apply_model(cfg, params, toks, q_block=64)
+    np.testing.assert_allclose(np.asarray(base, np.float32),
+                               np.asarray(skip, np.float32),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flag_parsing():
+    optflags.set_flags(["resident_weights", "microbatches=4"])
+    assert optflags.has("resident_weights")
+    assert not optflags.has("flat_dp")
+    assert optflags.get_int("microbatches", 16) == 4
+    assert optflags.get_int("missing", 7) == 7
+
+
+def test_flat_dp_specs_have_no_duplicates():
+    from repro.launch import shard_rules as sr
+    optflags.set_flags(["flat_dp"])
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    from repro.models.transformer import param_shapes
+    cfg = get_config("tinyllama-1.1b")
+    tree = param_shapes(cfg)
+    # must not raise DuplicateSpecError
+    sr.tree_shardings(tree, mesh)

@@ -1,0 +1,152 @@
+"""Graph optimizer pass tests: structure of the e-graph per pass on the
+paper's workflows."""
+import pytest
+
+from repro.core import primitives as P
+from repro.core.apps import advanced_rag, naive_rag, search_gen, \
+    contextual_retrieval
+from repro.core.passes import (graph_opt, pass1_prune_dependencies,
+                               pass2_stage_decompose, pass3_prefill_split,
+                               pass4_decode_pipeline)
+from repro.core.pgraph import graph_transform
+from repro.engines.sim_engines import build_sim_engines
+from repro.training.data import doc_corpus
+
+Q = {"question": "what is fact 3 about optics", "docs": doc_corpus(4)}
+
+
+def _app(mk):
+    engines = build_sim_engines()
+    return mk(engines)
+
+
+def _ops(g):
+    return sorted(n.op for n in g.nodes.values())
+
+
+def test_pgraph_decomposition_advanced_rag():
+    app = _app(advanced_rag)
+    g = graph_transform(app, Q)
+    ops = _ops(g)
+    assert ops.count(P.PREFILL) == 1 + 3       # expansion + 3 refine steps
+    assert ops.count(P.DECODE) == 1 + 3
+    assert ops.count(P.EMBEDDING) == 2         # indexing + query embed
+    assert ops.count(P.INGESTION) == 1
+    assert ops.count(P.SEARCHING) == 1
+    assert ops.count(P.RERANKING) == 1
+    g.validate()
+
+
+def test_pass1_detaches_independent_branches():
+    app = _app(advanced_rag)
+    g = graph_transform(app, Q)
+    roots_before = len(g.roots())
+    pass1_prune_dependencies(g)
+    g.validate()
+    roots_after = len(g.roots())
+    # chunking AND query-expansion prefill become independent roots
+    assert roots_after > roots_before
+    comps = {g.nodes[r.pid].component for r in g.roots()}
+    assert "query_expansion" in comps
+    # every consumed key is produced by some node or is a query input
+    produced = {k for n in g.nodes.values() for k in n.produces}
+    inputs = {"docs", "question"}
+    for n in g.nodes.values():
+        for k in n.consumes:
+            assert k in produced or k in inputs, (n.pid, k)
+
+
+def test_pass2_stage_decomposition_counts():
+    app = _app(naive_rag)
+    g = graph_transform(app, Q)
+    pass1_prune_dependencies(g)
+    n_chunks = next(n for n in g.nodes.values()
+                    if n.op == P.EMBEDDING and n.component == "indexing"
+                    ).num_requests
+    pass2_stage_decompose(g, app.engines)
+    g.validate()
+    maxb = app.engines["embedding"].max_batch
+    stages = [n for n in g.nodes.values() if n.op == P.EMBEDDING
+              and n.component == "indexing"]
+    import math
+    assert len(stages) == math.ceil(n_chunks / maxb)
+    assert sum(s.num_requests for s in stages) == n_chunks
+    # pipelined pairwise with ingestion stages + final Aggregate
+    ings = [n for n in g.nodes.values() if n.op == P.INGESTION]
+    assert len(ings) == len(stages)
+    aggs = [n for n in g.nodes.values() if n.op == P.AGGREGATE
+            and n.component == "indexing"]
+    assert len(aggs) == 1
+
+
+def test_pass3_prefill_split_structure():
+    app = _app(advanced_rag)
+    g = graph_transform(app, Q)
+    pass1_prune_dependencies(g)
+    pass3_prefill_split(g)
+    g.validate()
+    pps = [n for n in g.nodes.values() if n.op == P.PARTIAL_PREFILL]
+    fps = [n for n in g.nodes.values() if n.op == P.FULL_PREFILL]
+    # the 3 refine-mode synthesize prefills split (instruction+question
+    # early, context late); expansion prefill does NOT (all parts early)
+    assert len(pps) == 3 and len(fps) == 3
+    for pp in pps:
+        assert not any(g.nodes[p].op not in () for p in pp.parents
+                       if g.nodes[p].produces & pp.consumes
+                       and g.nodes[p].op == P.RERANKING)
+    for fp in fps:
+        # full prefill waits for its partial + the context producer
+        par_ops = {g.nodes[p].op for p in fp.parents}
+        assert P.PARTIAL_PREFILL in par_ops
+
+
+def test_pass4_decode_pipelining_structure():
+    app = _app(advanced_rag)
+    g = graph_transform(app, Q)
+    pass1_prune_dependencies(g)
+    pass4_decode_pipeline(g)
+    g.validate()
+    pds = [n for n in g.nodes.values() if n.op == P.PARTIAL_DECODE]
+    assert len(pds) == 3
+    # each PD feeds its own per-item embedding -> searching chain
+    embs = [n for n in g.nodes.values() if n.op == P.EMBEDDING
+            and n.component == "query_embedding"]
+    assert len(embs) == 3
+    searches = [n for n in g.nodes.values() if n.op == P.SEARCHING]
+    assert len(searches) == 3
+    # rerank consumes all per-item retrieved keys
+    rr = next(n for n in g.nodes.values() if n.op == P.RERANKING)
+    assert {f"retrieved#{i}" for i in range(3)} <= rr.consumes
+
+
+@pytest.mark.parametrize("mk", [naive_rag, advanced_rag, search_gen,
+                                contextual_retrieval])
+def test_full_graph_opt_invariants(mk):
+    app = _app(mk)
+    g = graph_transform(app, Q)
+    before_produced = {k for n in g.nodes.values() for k in n.produces}
+    g = graph_opt(g, app.engines)
+    g.validate()
+    # final answer still produced
+    produced = {k for n in g.nodes.values() for k in n.produces}
+    assert "answer" in produced
+    # all consumed keys resolvable
+    inputs = {"docs", "question"}
+    for n in g.nodes.values():
+        for k in n.consumes:
+            assert k in produced or k in inputs, (n.pid, k)
+    # depths valid: every parent strictly deeper than child
+    for n in g.nodes.values():
+        for c in n.children:
+            assert n.depth > g.nodes[c].depth
+
+
+def test_egraph_caching_different_queries():
+    app = _app(advanced_rag)
+    g1 = graph_opt(graph_transform(app, Q), app.engines)
+    q2 = dict(Q, docs=doc_corpus(1))
+    g2 = graph_opt(graph_transform(app, q2), app.engines)
+    # fewer docs -> fewer chunks -> fewer embedding stages
+    e1 = sum(1 for n in g1.nodes.values() if n.op == P.EMBEDDING)
+    e2 = sum(1 for n in g2.nodes.values() if n.op == P.EMBEDDING)
+    assert e2 <= e1

@@ -1,0 +1,147 @@
+"""Property-based tests (hypothesis) for system invariants."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import primitives as P
+from repro.core.passes import graph_opt, pass1_prune_dependencies
+from repro.core.primitives import Graph, Primitive
+from repro.engines.tokenizer import HashTokenizer
+from repro.serving import kv_cache as kvc
+
+
+# ---------------------------------------------------------------------------
+# Graph invariants under optimization
+
+@st.composite
+def chain_graphs(draw):
+    """Random chain workflows: sequences of primitives with random data
+    keys; some edges carry data, some are template-order only."""
+    n = draw(st.integers(3, 12))
+    g = Graph(query_id="q")
+    prev = None
+    keys = [f"k{i}" for i in range(n + 1)]
+    for i in range(n):
+        consumes = set()
+        if i > 0 and draw(st.booleans()):
+            consumes.add(keys[draw(st.integers(0, i - 1))])
+        prim = Primitive(op=P.EMBEDDING, engine="e", component=f"c{i}",
+                         consumes=consumes, produces={keys[i]})
+        g.add(prim)
+        if prev is not None:
+            g.edge(prev, prim)
+        prev = prim
+    return g
+
+
+@given(chain_graphs())
+@settings(max_examples=60, deadline=None)
+def test_pass1_edges_are_exactly_data_deps(g):
+    pass1_prune_dependencies(g)
+    g.validate()
+    for n in g.nodes.values():
+        for cpid in n.children:
+            c = g.nodes[cpid]
+            assert n.produces & c.consumes
+    # and every resolvable consumed key has an in-edge
+    producers = {k: n.pid for n in g.nodes.values() for k in n.produces}
+    for n in g.nodes.values():
+        for k in n.consumes:
+            if k in producers and producers[k] != n.pid:
+                assert producers[k] in n.parents
+
+
+@given(chain_graphs())
+@settings(max_examples=30, deadline=None)
+def test_depth_assignment_monotone(g):
+    pass1_prune_dependencies(g)
+    g.assign_depths()
+    for n in g.nodes.values():
+        for cpid in n.children:
+            assert n.depth > g.nodes[cpid].depth
+
+
+# ---------------------------------------------------------------------------
+# Ring-buffer cache vs linear cache
+
+@given(st.integers(2, 6), st.integers(1, 40), st.integers(2, 16))
+@settings(max_examples=40, deadline=None)
+def test_ring_slot_positions_consistent(w_exp, length, _):
+    W = 2 ** w_exp
+    length_v = jnp.array([length])
+    slots = np.asarray(kvc.slot_positions_ring(W, length_v))[0]
+    for i, p in enumerate(slots):
+        if p >= 0:
+            assert p % W == i
+            assert length - W <= p < length
+    valid = {int(p) for p in slots if p >= 0}
+    expect = set(range(max(0, length - W), length))
+    assert valid == expect
+
+
+@given(st.integers(1, 31), st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_ring_write_matches_linear_tail(pos, s):
+    W, D = 16, 4
+    buf_r = jnp.zeros((1, W, D))
+    buf_l = jnp.zeros((1, 64, D))
+    chunk = jnp.arange(s * D, dtype=jnp.float32).reshape(1, s, D) + 1
+    br = kvc.write_ring(buf_r, chunk, jnp.array([pos]))
+    bl = kvc.write_linear(buf_l, chunk, jnp.array([pos]))
+    slots = np.asarray(kvc.slot_positions_ring(W, jnp.array([pos + s])))[0]
+    for i, p in enumerate(slots):
+        if pos <= p < pos + s:
+            np.testing.assert_allclose(np.asarray(br[0, i]),
+                                       np.asarray(bl[0, p]))
+
+
+# ---------------------------------------------------------------------------
+# Tokenizer
+
+@given(st.lists(st.sampled_from(
+    "the quick brown fox jumps over lazy dog alpha beta gamma".split()),
+    min_size=1, max_size=30))
+@settings(max_examples=50, deadline=None)
+def test_tokenizer_roundtrip(words):
+    tok = HashTokenizer(512)
+    text = " ".join(words)
+    assert tok.decode(tok.encode(text)) == text
+
+
+# ---------------------------------------------------------------------------
+# Attention position-mask invariants
+
+@given(st.integers(0, 20), st.integers(1, 8), st.integers(1, 64))
+@settings(max_examples=40, deadline=None)
+def test_position_mask_causal(prefix, s, window):
+    from repro.models.attention import position_mask
+    T = prefix + s
+    q_pos = (prefix + jnp.arange(s))[None]
+    k_pos = jnp.arange(T)[None]
+    m = np.asarray(position_mask(q_pos, k_pos, window))[0]
+    for i in range(s):
+        for j in range(T):
+            expect = j <= prefix + i and j > prefix + i - window
+            assert m[i, j] == expect
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+
+@given(st.floats(1e-5, 1e-2), st.integers(1, 5))
+@settings(max_examples=20, deadline=None)
+def test_adamw_descends_quadratic(lr, steps):
+    from repro.training.optimizer import AdamWConfig, adamw_update, \
+        init_opt_state
+    cfg = AdamWConfig(lr=lr, warmup_steps=0, total_steps=100,
+                      weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    opt = init_opt_state(cfg, params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    l0 = float(loss(params))
+    for _ in range(steps):
+        g = jax.grad(loss)(params)
+        params, opt = adamw_update(cfg, g, opt, params)
+    assert float(loss(params)) < l0

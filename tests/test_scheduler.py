@@ -1,0 +1,118 @@
+"""Engine-scheduler batching policy unit tests (Algorithm 2)."""
+import time
+
+import pytest
+
+from repro.core import primitives as P
+from repro.core.primitives import Graph, Primitive
+from repro.core.runtime import EngineScheduler, NodeTask, QueryContext
+
+
+class FakeEngine:
+    def __init__(self, max_batch=4):
+        self.kind = "fake"
+        self.max_batch = max_batch
+
+
+def _ctx():
+    return QueryContext(Graph(), {})
+
+
+def _task(ctx, depth, op=P.PREFILL, nreq=1, t=None):
+    p = Primitive(op=op, engine="fake", component="c")
+    p.depth = depth
+    p.num_requests = nreq
+    task = NodeTask(p, ctx)
+    if t is not None:
+        task.t_arrival = t
+    return task
+
+
+def _sched(policy, max_batch=4):
+    s = EngineScheduler(FakeEngine(max_batch), lambda e, b: None, policy)
+    return s
+
+
+def test_topo_prioritizes_depth_within_query():
+    s = _sched("topo")
+    ctx = _ctx()
+    shallow = _task(ctx, depth=0, t=1.0)
+    deep = _task(ctx, depth=5, t=2.0)
+    s.pending = [shallow, deep]
+    batch = s._form_batch()
+    assert batch[0] is deep            # higher depth first despite arrival
+
+
+def test_topo_buckets_by_query_earliest_first():
+    s = _sched("topo", max_batch=2)
+    c1, c2 = _ctx(), _ctx()
+    a = _task(c1, depth=1, t=1.0)      # query 1 arrives first
+    b = _task(c1, depth=0, t=1.1)
+    g = _task(c2, depth=9, t=2.0)      # query 2 later but deeper
+    s.pending = [g, a, b]
+    batch = s._form_batch()
+    # paper Fig 7: batch A (deepest of q1) with H (deepest of q2), NOT A+B
+    assert a in batch and g in batch and b not in batch
+
+
+def test_topo_respects_slots_by_request_count():
+    s = _sched("topo", max_batch=4)
+    ctx = _ctx()
+    big = _task(ctx, depth=3, nreq=3)
+    small = _task(ctx, depth=2, nreq=2)
+    tiny = _task(ctx, depth=1, nreq=1)
+    s.pending = [tiny, small, big]
+    batch = s._form_batch()
+    assert big in batch
+    assert sum(t.prim.num_requests for t in batch) <= 4
+
+
+def test_to_fifo_fills_batch():
+    s = _sched("to", max_batch=3)
+    c1, c2 = _ctx(), _ctx()
+    t1 = _task(c1, 0, t=1.0)
+    t2 = _task(c2, 0, t=2.0)
+    t3 = _task(c1, 0, t=3.0)
+    t4 = _task(c2, 0, t=4.0)
+    s.pending = [t4, t2, t1, t3]
+    batch = s._form_batch()
+    assert batch == [t1, t2, t3]
+
+
+def test_po_bundles_one_invocation():
+    s = _sched("po", max_batch=8)
+    c1, c2 = _ctx(), _ctx()
+    a1 = _task(c1, 0, t=1.0)
+    a2 = _task(c1, 0, t=1.0)
+    b1 = _task(c2, 0, t=0.5)          # earlier arrival, other query
+    s.pending = [a1, a2, b1]
+    batch = s._form_batch()
+    assert batch == [b1]              # strictly one query's bundle
+
+
+def test_batch_is_op_homogeneous():
+    s = _sched("topo")
+    ctx = _ctx()
+    p1 = _task(ctx, depth=3, op=P.PREFILL)
+    d1 = _task(ctx, depth=3, op=P.DECODE)
+    s.pending = [p1, d1]
+    batch = s._form_batch()
+    assert len({t.prim.op for t in batch}) == 1
+
+
+def test_scheduler_thread_executes_and_calls_back():
+    done = []
+    s = EngineScheduler(FakeEngine(),
+                        lambda e, b: [t.ctx.store.update({"x": 1})
+                                      for t in b],
+                        "topo")
+    s.on_complete = lambda t: done.append(t)
+    s.start()
+    ctx = _ctx()
+    s.submit(_task(ctx, 0))
+    for _ in range(200):
+        if done:
+            break
+        time.sleep(0.005)
+    s.stop()
+    assert done and done[0].ctx.store.get("x") == 1

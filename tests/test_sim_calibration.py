@@ -1,0 +1,61 @@
+"""Sim-engine latency profiles must keep tracking the paper's anchors —
+if someone retunes them, these tests pin the calibration."""
+import numpy as np
+import pytest
+
+from repro.engines.sim_engines import (SPEED, SimEmbeddingEngine,
+                                       SimLLMEngine)
+
+
+def test_prefill_anchors_table3():
+    """Paper Table 3 single-prefill: 1000 tok -> ~260 ms,
+    3000 tok -> ~720 ms (llama-2-7B)."""
+    eng = SimLLMEngine("t")
+    eng.op_prefill([{"sid": "a", "text": " ".join(["w"] * 1000)}])
+    ms1000 = eng.stats["busy_ms"]
+    eng.stats["busy_ms"] = 0
+    eng.op_prefill([{"sid": "b", "text": " ".join(["w"] * 3000)}])
+    ms3000 = eng.stats["busy_ms"]
+    assert 200 < ms1000 < 330
+    assert 600 < ms3000 < 850
+
+
+def test_prefill_batch_discount_fig7():
+    """Fig 7: one 512-tok prefill 0.5 s; batch of two 0.8 s."""
+    eng = SimLLMEngine("t")
+    eng.op_prefill([{"sid": "a", "text": " ".join(["w"] * 512)}])
+    single = eng.stats["busy_ms"]
+    eng.stats["busy_ms"] = 0
+    eng.op_prefill([{"sid": "b", "text": " ".join(["w"] * 512)},
+                    {"sid": "c", "text": " ".join(["w"] * 512)}])
+    batch2 = eng.stats["busy_ms"]
+    assert 1.3 < batch2 / single < 1.8          # ~1.6x for 2x work
+
+
+def test_embedding_total_time_anchor_fig4():
+    """48 requests: batch 4 ~1.8 s, batch 16 ~1.35 s."""
+    t = {}
+    for bs in (4, 16):
+        eng = SimEmbeddingEngine(max_batch=bs)
+        for i in range(0, 48, bs):
+            eng.op_embed([{"texts": [f"c{j}" for j in range(i, i + bs)]}])
+        t[bs] = eng.stats["busy_ms"]
+    assert 1500 < t[4] < 2100
+    assert 1100 < t[16] < 1600
+
+
+def test_decode_step_cost():
+    eng = SimLLMEngine("t")
+    eng.op_decode([{"sid": "a", "max_new": 10}])
+    per_step = eng.stats["busy_ms"] / 10
+    assert 20 <= per_step <= 30                  # ~25 ms/step (13B-class)
+
+
+def test_sleep_respects_speed_factor():
+    import time
+    eng = SimLLMEngine("t")
+    t0 = time.time()
+    eng.op_decode([{"sid": "a", "max_new": 8}])
+    wall = (time.time() - t0) * 1000
+    modeled = eng.stats["busy_ms"]
+    assert wall < modeled / SPEED * 2.5 + 20     # scaled down by SPEED

@@ -1,0 +1,94 @@
+"""Per-architecture smoke tests: a REDUCED variant of each assigned config
+(<=2-ish layers, d_model<=256, <=4 experts) runs one forward and one train
+step on CPU; output shapes and NaN-freeness asserted."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import ASSIGNED
+from repro.configs.base import get_config
+from repro.models.transformer import apply_model, init_params
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train_step import make_train_step
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_forward_shapes_and_nan(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.d_model <= 512
+    assert cfg.num_layers <= 4
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    params = init_params(cfg, jax.random.key(0))
+    B, S = 2, 16
+    if cfg.embed_stub:
+        inputs = jax.random.normal(jax.random.key(1), (B, S, cfg.d_model))
+    else:
+        inputs = jax.random.randint(jax.random.key(1), (B, S), 0,
+                                    cfg.vocab_size)
+    logits, cache, aux = apply_model(cfg, params, inputs)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert cache is None
+    assert not bool(jnp.isnan(logits).any())
+    assert not bool(jnp.isnan(aux))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_one_train_step(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.key(0))
+    oc = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=4)
+    opt = init_opt_state(oc, params)
+    stub = cfg.embed_stub is not None
+    step = jax.jit(make_train_step(cfg, oc, compute_dtype=jnp.float32,
+                                   q_block=64, stub=stub))
+    B, S = 2, 16
+    if stub:
+        batch = {"embeds": jax.random.normal(jax.random.key(1),
+                                             (B, S, cfg.d_model)),
+                 "targets": jax.random.randint(jax.random.key(2), (B, S), 0,
+                                               cfg.vocab_size)}
+    else:
+        batch = {"tokens": jax.random.randint(jax.random.key(1), (B, S + 1),
+                                              0, cfg.vocab_size)}
+    new_params, new_opt, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["gnorm"]))
+    # params actually changed
+    l0 = jax.tree.leaves(params)[0]
+    l1 = jax.tree.leaves(new_params)[0]
+    assert not np.allclose(np.asarray(l0), np.asarray(l1))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_exact_assigned_config_numbers(arch):
+    """The FULL configs carry the exact pool numbers (exercised via the
+    dry-run only — no allocation here)."""
+    cfg = get_config(arch)
+    expected = {
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "gemma2-9b": (42, 3584, 16, 8, 14336, 256000),
+        "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 18432, 129280),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 5632, 151936),
+        "deepseek-67b": (95, 8192, 64, 8, 22016, 102400),
+        "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected, (arch, got, expected)
+    assert cfg.citation
+
+
+def test_param_counts_plausible():
+    assert 0.9e9 < get_config("tinyllama-1.1b").param_count() < 1.4e9
+    assert 55e9 < get_config("deepseek-67b").param_count() < 80e9
+    assert 8e9 < get_config("gemma2-9b").param_count() < 11e9
+    ds = get_config("deepseek-v3-671b")
+    assert 55e10 < ds.param_count() < 80e10
+    assert ds.active_param_count() < 0.1 * ds.param_count()
+    assert 2.5e9 < get_config("rwkv6-3b").param_count() < 4e9
