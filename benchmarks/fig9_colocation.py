@@ -1,5 +1,10 @@
 """Paper Fig. 9: co-located applications (naive + advanced RAG QA sharing
-one engine pool) — Teola vs the stronger baseline LlamaDistPC."""
+one engine pool) — Teola vs the stronger baseline LlamaDistPC.
+
+Engines follow the paper's testbed provisioning: each LLM runs as an
+EnginePool of TWO replicas (§7.1); both schemes get the same pools, and
+the pooled lower-tier scheduler load-balances the colocated apps' fused
+batches across replicas by outstanding tokens + KV occupancy."""
 from __future__ import annotations
 
 import time
@@ -10,9 +15,11 @@ from benchmarks.common import SCHEMES, fmt_row, make_queries
 from repro.core.apps import advanced_rag, naive_rag
 from repro.engines.sim_engines import SPEED, build_sim_engines
 
+LLM_INSTANCES = 2
+
 
 def _run(scheme: str, n_per_app: int = 6, rate: float = 1.5):
-    engines = build_sim_engines()
+    engines = build_sim_engines(llm_instances=LLM_INSTANCES)
     cls, policy = SCHEMES[scheme]
     apps = {"naive": naive_rag(engines), "advanced": advanced_rag(engines)}
     orchs = {k: cls(a, engines, policy=policy) for k, a in apps.items()}

@@ -39,11 +39,7 @@ def build_engines(*, seed: int = 0, llm_max_batch: int = 4,
 
 def _register_common(app: APP, engines):
     for name, eng in engines.items():
-        inst = eng[0] if isinstance(eng, list) else eng
-        app.register_engine(EngineSpec(
-            name=name, kind=getattr(inst, "kind", "misc"),
-            max_batch=getattr(inst, "max_batch", 8),
-            instances=len(eng) if isinstance(eng, list) else 1))
+        app.register_engine(EngineSpec.from_engine(name, eng))
     app.register_engine(EngineSpec(name="control", kind="control",
                                    max_batch=1 << 30))
 

@@ -1,0 +1,150 @@
+"""Engine pools: N replicas of one engine behind a load-aware router.
+
+The paper's testbed provisions two instances per LLM (§7.1) and its
+instance-scaling / colocation results depend on dispatching work across
+replicas. An ``EnginePool`` owns the replicas (built by ``replicate`` via
+each engine's ``clone()`` — model weights are shared, per-replica state
+such as the KV store is not) plus the per-replica load ledger the
+lower-tier router consults.
+
+The load metric is tokens, not queue length: for each replica it sums
+  queued    — token estimate of batches routed to the replica but not
+              yet executing,
+  inflight  — token estimate of the batch currently executing,
+  resident  — KV-cache occupancy (tokens held by live sequences on that
+              replica, reported by the engine's ``kv_occupancy()``).
+A queue-length metric would treat a 2000-token prefill and an 8-token
+judge decode as equal work; token accounting is what makes colocated
+heterogeneous apps balance (Fig. 9).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List
+
+from repro.core import primitives as P
+
+# Resident KV tokens cost less than tokens that still need compute: they
+# occupy memory and lengthen future attention, but are not queued work.
+RESIDENT_WEIGHT = 0.25
+
+
+def estimate_tokens(prim) -> int:
+    """Token-work estimate for routing. Decode work scales with max_new;
+    prefill with the (profiled) prompt length; encoder/model-free ops with
+    their request count."""
+    cfg = prim.config
+    if prim.op in (P.DECODE, P.PARTIAL_DECODE):
+        return prim.num_requests * int(cfg.get("max_new", 24))
+    if prim.op in (P.PREFILL, P.PARTIAL_PREFILL, P.FULL_PREFILL):
+        return prim.num_requests * int(cfg.get("est_prompt_tokens", 64))
+    return prim.num_requests * 8
+
+
+class _ReplicaLoad:
+    __slots__ = ("queued", "inflight")
+
+    def __init__(self):
+        self.queued = 0
+        self.inflight = 0
+
+
+class EnginePool:
+    """Replica container + load ledger. The pool is engine-kind agnostic:
+    anything exposing the op_* executor interface and (optionally)
+    ``clone()`` / ``kv_occupancy()`` can be pooled."""
+
+    def __init__(self, replicas: List[Any], name: str = ""):
+        if not replicas:
+            raise ValueError("EnginePool needs at least one replica")
+        self.replicas = list(replicas)
+        self.name = name or getattr(replicas[0], "name", "pool")
+        self._loads = [_ReplicaLoad() for _ in self.replicas]
+        self._lock = threading.Lock()
+
+    @classmethod
+    def replicate(cls, engine, n: int, name: str = "") -> "EnginePool":
+        """Build a pool of `n` replicas from a prototype engine via its
+        ``clone()`` (shared weights, fresh per-replica state). The
+        prototype itself is replica 0."""
+        reps = [engine]
+        for i in range(1, n):
+            if not hasattr(engine, "clone"):
+                raise TypeError(
+                    f"{type(engine).__name__} has no clone(); cannot build "
+                    f"a pool of {n}")
+            reps.append(engine.clone(i))
+        return cls(reps, name=name or getattr(engine, "name", ""))
+
+    # -- container protocol -------------------------------------------------
+    def __len__(self):
+        return len(self.replicas)
+
+    def __iter__(self):
+        return iter(self.replicas)
+
+    def __getitem__(self, i):
+        return self.replicas[i]
+
+    # -- load ledger (token units) ------------------------------------------
+    def note_queued(self, i: int, tokens: int):
+        with self._lock:
+            self._loads[i].queued += tokens
+
+    def note_started(self, i: int, tokens: int):
+        with self._lock:
+            self._loads[i].queued -= tokens
+            self._loads[i].inflight += tokens
+
+    def note_finished(self, i: int, tokens: int):
+        with self._lock:
+            self._loads[i].inflight -= tokens
+
+    def load(self, i: int) -> float:
+        """Outstanding token-work of replica i (queued + in-flight +
+        discounted resident KV occupancy)."""
+        resident = getattr(self.replicas[i], "kv_occupancy", lambda: 0)()
+        with self._lock:
+            l = self._loads[i]
+            return l.queued + l.inflight + RESIDENT_WEIGHT * resident
+
+    def least_loaded(self) -> int:
+        return min(range(len(self.replicas)), key=self.load)
+
+    def loads(self) -> List[float]:
+        return [self.load(i) for i in range(len(self.replicas))]
+
+    def __repr__(self):
+        return f"<EnginePool {self.name} x{len(self.replicas)}>"
+
+
+# ---------------------------------------------------------------------------
+# Registry helpers — an engines-dict value may be a bare engine, a list of
+# replicas (legacy), or an EnginePool.
+
+def replicas_of(eng) -> list:
+    if isinstance(eng, EnginePool):
+        return list(eng.replicas)
+    if isinstance(eng, list):
+        return list(eng)
+    return [eng]
+
+
+def pool_size(eng) -> int:
+    return len(replicas_of(eng))
+
+
+def primary_of(eng):
+    """Representative replica (profile source for EngineSpec)."""
+    return replicas_of(eng)[0]
+
+
+def build_pools(engines: Dict[str, Any],
+                sizes: Dict[str, int]) -> Dict[str, Any]:
+    """Replace selected engines with pools: sizes maps engine name -> n.
+    Engines absent from `sizes` (or with n == 1) pass through untouched."""
+    out = dict(engines)
+    for name, n in sizes.items():
+        if n > 1 and name in out and not isinstance(out[name], EnginePool):
+            out[name] = EnginePool.replicate(out[name], n, name=name)
+    return out

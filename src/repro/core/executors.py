@@ -2,16 +2,21 @@
 object stores, invoke the engine op, and write outputs back."""
 from __future__ import annotations
 
+import inspect
 from typing import List
 
 import numpy as np
 
 from repro.core import primitives as P
+from repro.core.streams import TokenStream, resolve
 
 
 def _textify(v) -> str:
     if v is None:
         return ""
+    if isinstance(v, TokenStream):
+        # stream-unaware consumer: block until the decode completes
+        return v.wait_text()
     if isinstance(v, str):
         return v
     if isinstance(v, dict):
@@ -22,7 +27,7 @@ def _textify(v) -> str:
 
 
 def _items(store, prim):
-    data = store[prim.config["items_key"]]
+    data = resolve(store[prim.config["items_key"]])
     rng = prim.config.get("item_range")
     if rng:
         data = data[rng[0]:rng[1]]
@@ -191,6 +196,7 @@ def execute_batch(engine, tasks: List):
 
     if op in (P.DECODE, P.PARTIAL_DECODE):
         payload, spans = [], []
+        slot_streams = {}       # payload slot -> TokenStream
         for t in tasks:
             prim, store = t.prim, t.ctx.store
             if prim.config.get("per_item_seq"):
@@ -207,7 +213,17 @@ def execute_batch(engine, tasks: List):
                 spans.append((len(payload), len(payload) + 1))
                 payload.append({"sid": _sid(prim, t.ctx),
                                 "max_new": prim.config.get("max_new", 24)})
-        res = engine.op_decode(payload)
+                if t.stream is not None:
+                    slot_streams[len(payload) - 1] = t.stream
+        if slot_streams and "on_chunk" in inspect.signature(
+                engine.op_decode).parameters:
+            def on_chunk(i, text_so_far):
+                s = slot_streams.get(i)
+                if s is not None:
+                    s.put(text_so_far)
+            res = engine.op_decode(payload, on_chunk=on_chunk)
+        else:
+            res = engine.op_decode(payload)
         for t, (a, b) in zip(tasks, spans):
             prim, store = t.prim, t.ctx.store
             texts = res[a:b]
@@ -222,6 +238,10 @@ def execute_batch(engine, tasks: List):
                 store[key] = [" ".join(words[i * per:(i + 1) * per])
                               for i in range(k)]
             else:
+                if t.stream is not None:
+                    # seal the channel, then restore the plain-text store
+                    # layout (late consumers never see the stream object)
+                    t.stream.close(texts[0])
                 store[key] = texts[0]
             if prim.config.get("also_aggregate"):
                 agg = prim.config["also_aggregate"]
@@ -259,7 +279,7 @@ def run_control(prim, ctx):
             keys = sorted((k for k in prim.consumes),
                           key=lambda s: int(s.rsplit("#s", 1)[1])
                           if "#s" in s else 0)
-            vals = [store.get(k) for k in keys]
+            vals = [resolve(store.get(k)) for k in keys]
             if all(isinstance(v, dict) and "vectors" in v for v in vals):
                 store[out] = {
                     "vectors": np.concatenate([v["vectors"] for v in vals]),
@@ -271,6 +291,7 @@ def run_control(prim, ctx):
             else:
                 store[out] = vals
         else:
-            store[out] = [store.get(k) for k in sorted(prim.consumes)]
+            store[out] = [resolve(store.get(k))
+                          for k in sorted(prim.consumes)]
         return
     raise ValueError(f"unknown control op {prim.op}")

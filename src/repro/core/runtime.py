@@ -4,13 +4,33 @@ Upper tier — GraphScheduler: tracks each query's e-graph, dispatches
 primitives whose in-degree reaches zero to the per-engine schedulers, and
 manages the per-query object store.
 
-Lower tier — EngineScheduler (one thread per engine): fuses primitive
-requests from concurrent queries into engine batches under one of three
-policies:
+Lower tier — one scheduler per engine *pool*:
+  EngineScheduler        single-instance engines: one thread that fuses
+                         primitive requests from concurrent queries into
+                         engine batches.
+  PooledEngineScheduler  EnginePool engines: the same batch-formation
+                         policies over one shared queue, then a LOAD-AWARE
+                         ROUTER dispatches each fused batch to the
+                         least-loaded replica (outstanding tokens + KV
+                         occupancy — see core/engine_pool.py), with
+                         sequence->replica affinity for LLM ops since a
+                         sequence's KV state lives on one replica.
+
+Batching policies (both schedulers):
   'po'   per-invocation oriented — one query's bundle at a time (baseline)
   'to'   throughput oriented    — FIFO dynamic batching to max batch
   'topo' topology-aware batching — Algorithm 2: bucket by query, order by
          reverse-topological depth, earliest-arrival buckets first.
+
+Streaming decode pipelining (partial-result emission): when the Runtime
+is constructed with ``streaming=True``, an eligible Decoding primitive
+publishes a TokenStream into the query store at dispatch time and the
+engine emits decoded chunks into it as they are produced. On the FIRST
+chunk the runtime early-releases the decode's graph children, so
+downstream primitives (rerank, condition, aggregate, ...) are dispatched
+— and can begin consuming via the stream — before sequence completion.
+At completion the store key is overwritten with the plain final text, so
+the final store is byte-identical to the non-streaming layout.
 
 Control primitives (Condition/Aggregate) run inline on the graph
 scheduler thread. Dependent pre-scheduling (§6, communication mitigation)
@@ -27,10 +47,11 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
-import numpy as np
-
 from repro.core import primitives as P
+from repro.core.engine_pool import (EnginePool, estimate_tokens,
+                                    replicas_of)
 from repro.core.primitives import Graph, Primitive
+from repro.core.streams import TokenStream
 
 _qid = itertools.count()
 
@@ -50,6 +71,8 @@ class QueryContext:
         self.sids: set = set()
         self.lock = threading.Lock()
         self.error: Optional[Exception] = None
+        # streaming: (parent_pid, child_pid) edges already released early
+        self.early_edges: set = set()
 
     @property
     def latency(self):
@@ -68,15 +91,91 @@ class NodeTask:
     ctx: QueryContext
     t_arrival: float = field(default_factory=time.time)
     managed: bool = True     # False: baseline orchestrators drive progress
+    stream: Optional[TokenStream] = None   # set for streaming decodes
 
     @property
     def depth(self):
         return self.prim.depth
 
 
+def _fail_batch(batch: List[NodeTask], e: Exception):
+    for t in batch:
+        if t.stream is not None:
+            t.stream.close()
+        t.ctx.error = e
+        t.ctx.done.set()
+
+
+# ---------------------------------------------------------------------------
+# Batch formation — shared by the single-instance and pooled schedulers.
+
+def form_batch(pending: List[NodeTask], policy: str,
+               max_bs: int) -> List[NodeTask]:
+    if not pending:
+        return []
+    if policy == "po":
+        # bundle = same (query, component) as the head task, FIFO
+        head = min(pending, key=lambda t: t.t_arrival)
+        bundle = [t for t in pending
+                  if t.ctx is head.ctx
+                  and t.prim.component == head.prim.component
+                  and t.prim.op == head.prim.op]
+        return bundle[:max_bs]
+    if policy == "to":
+        pending.sort(key=lambda t: t.t_arrival)
+        op = pending[0].prim.op
+        batch, slots = [], max_bs
+        for t in pending:
+            if t.prim.op != op:
+                continue
+            if t.prim.num_requests > slots and batch:
+                break
+            batch.append(t)
+            slots -= t.prim.num_requests
+            if slots <= 0:
+                break
+        return batch
+    # 'topo' — Algorithm 2: bucket pending nodes by query; buckets
+    # ordered by (priority desc, earliest arrival); round-robin over
+    # buckets taking the HIGHEST-DEPTH node of each bucket per round
+    # (Fig. 7 batches the most graph-advancing primitive of each
+    # query together). Priority implements the paper's §7.2
+    # app-priority discussion as primitive metadata.
+    buckets: Dict[str, List[NodeTask]] = {}
+    for t in pending:
+        buckets.setdefault(t.ctx.qid, []).append(t)
+    ordered = sorted(buckets.values(),
+                     key=lambda b: (-max(t.ctx.priority for t in b),
+                                    min(t.t_arrival for t in b)))
+    for b in ordered:
+        b.sort(key=lambda t: -t.prim.depth)
+    batch, slots, op = [], max_bs, None
+    while slots > 0:
+        took = False
+        for b in ordered:
+            if slots <= 0:
+                break
+            for t in b:
+                if op is not None and t.prim.op != op:
+                    continue
+                if t.prim.num_requests > slots and batch:
+                    continue
+                op = op or t.prim.op
+                batch.append(t)
+                b.remove(t)
+                slots -= t.prim.num_requests
+                took = True
+                break
+        if not took:
+            break
+    return batch
+
+
 # ---------------------------------------------------------------------------
 
 class EngineScheduler(threading.Thread):
+    """Lower-tier scheduler for a SINGLE engine instance."""
+
     def __init__(self, engine, executor, policy: str = "topo",
                  period: float = 0.002):
         super().__init__(daemon=True)
@@ -100,67 +199,9 @@ class EngineScheduler(threading.Thread):
         with self.cv:
             self.cv.notify()
 
-    # -- batch formation ----------------------------------------------------
     def _form_batch(self) -> List[NodeTask]:
-        if not self.pending:
-            return []
         max_bs = getattr(self.engine, "max_batch", 8)
-        if self.policy == "po":
-            # bundle = same (query, component) as the head task, FIFO
-            head = min(self.pending, key=lambda t: t.t_arrival)
-            bundle = [t for t in self.pending
-                      if t.ctx is head.ctx
-                      and t.prim.component == head.prim.component
-                      and t.prim.op == head.prim.op]
-            return bundle[:max_bs]
-        if self.policy == "to":
-            self.pending.sort(key=lambda t: t.t_arrival)
-            op = self.pending[0].prim.op
-            batch, slots = [], max_bs
-            for t in self.pending:
-                if t.prim.op != op:
-                    continue
-                if t.prim.num_requests > slots and batch:
-                    break
-                batch.append(t)
-                slots -= t.prim.num_requests
-                if slots <= 0:
-                    break
-            return batch
-        # 'topo' — Algorithm 2: bucket pending nodes by query; buckets
-        # ordered by (priority desc, earliest arrival); round-robin over
-        # buckets taking the HIGHEST-DEPTH node of each bucket per round
-        # (Fig. 7 batches the most graph-advancing primitive of each
-        # query together). Priority implements the paper's §7.2
-        # app-priority discussion as primitive metadata.
-        buckets: Dict[str, List[NodeTask]] = {}
-        for t in self.pending:
-            buckets.setdefault(t.ctx.qid, []).append(t)
-        ordered = sorted(buckets.values(),
-                         key=lambda b: (-max(t.ctx.priority for t in b),
-                                        min(t.t_arrival for t in b)))
-        for b in ordered:
-            b.sort(key=lambda t: -t.prim.depth)
-        batch, slots, op = [], max_bs, None
-        while slots > 0:
-            took = False
-            for b in ordered:
-                if slots <= 0:
-                    break
-                for t in b:
-                    if op is not None and t.prim.op != op:
-                        continue
-                    if t.prim.num_requests > slots and batch:
-                        continue
-                    op = op or t.prim.op
-                    batch.append(t)
-                    b.remove(t)
-                    slots -= t.prim.num_requests
-                    took = True
-                    break
-            if not took:
-                break
-        return batch
+        return form_batch(self.pending, self.policy, max_bs)
 
     def run(self):
         while self.running:
@@ -179,9 +220,7 @@ class EngineScheduler(threading.Thread):
             try:
                 self.executor(self.engine, batch)
             except Exception as e:  # noqa: BLE001
-                for t in batch:
-                    t.ctx.error = e
-                    t.ctx.done.set()
+                _fail_batch(batch, e)
                 continue
             for t in batch:
                 self.on_complete(t)
@@ -189,62 +228,181 @@ class EngineScheduler(threading.Thread):
 
 # ---------------------------------------------------------------------------
 
-class EngineGroup:
-    """Multiple instances of one engine behind a load-balancing router
-    (paper §6/§7.1: each LLM provisioned with two instances; load metric
-    = outstanding requests, with sequence->instance AFFINITY for LLM ops
-    since the KV state lives on one instance)."""
+class _ReplicaWorker(threading.Thread):
+    """Executes routed batches on one pool replica; maintains the pool's
+    in-flight token ledger around each execution."""
 
-    def __init__(self, scheds: List[EngineScheduler]):
-        self.scheds = scheds
-        self.affinity: Dict[tuple, EngineScheduler] = {}
-        self._lock = threading.Lock()
+    def __init__(self, sched: "PooledEngineScheduler", idx: int):
+        super().__init__(daemon=True)
+        self.sched = sched
+        self.idx = idx
+        self.engine = sched.pool[idx]
+        self.q: "queue.Queue" = queue.Queue()
 
-    def _load(self, s: EngineScheduler) -> int:
-        with s.cv:
-            return sum(t.prim.num_requests for t in s.pending)
+    def run(self):
+        pool = self.sched.pool
+        while True:
+            item = self.q.get()
+            if item is None:
+                return
+            batch, tokens = item
+            pool.note_started(self.idx, tokens)
+            try:
+                self.sched.executor(self.engine, batch)
+            except Exception as e:  # noqa: BLE001
+                _fail_batch(batch, e)
+                continue
+            finally:
+                pool.note_finished(self.idx, tokens)
+            for t in batch:
+                self.sched.on_complete(t)
+
+
+def _seq_key(task: NodeTask) -> Optional[tuple]:
+    """Replica-affinity key: LLM ops act on a named sequence whose KV
+    state lives on exactly one replica."""
+    if task.prim.op not in P.LLM_OPS:
+        return None
+    return (task.ctx.qid, task.prim.config.get("sid", task.prim.pid))
+
+
+class PooledEngineScheduler(threading.Thread):
+    """Lower-tier scheduler for an EnginePool: forms fused batches from
+    one shared queue under the same policies, then routes each batch to a
+    replica. Routing is load-aware (least outstanding tokens, including
+    KV occupancy) with sequence affinity: once a sequence's prefill lands
+    on a replica, every later op of that sequence follows it. A fused
+    batch that spans sequences pinned to different replicas is partitioned
+    into per-replica sub-batches."""
+
+    def __init__(self, pool: EnginePool, executor, policy: str = "topo",
+                 period: float = 0.002):
+        super().__init__(daemon=True)
+        self.pool = pool
+        self.engine = pool[0]          # profile source (max_batch, kind)
+        self.executor = executor
+        self.policy = policy
+        self.period = period
+        self.pending: List[NodeTask] = []
+        self.cv = threading.Condition()
+        self.running = True
+        self.on_complete = None
+        self.batches = []              # (size_requests, op) log
+        self.routes = []               # (replica_idx, op, n_requests, tokens)
+        self.affinity: Dict[tuple, int] = {}
+        self._aff_lock = threading.Lock()
+        self.workers = [_ReplicaWorker(self, i) for i in range(len(pool))]
+        for w in self.workers:
+            w.start()
 
     def submit(self, task: NodeTask):
-        sid = task.prim.config.get("sid")
-        if sid is not None:
-            key = (task.ctx.qid, sid)
-            with self._lock:
-                s = self.affinity.get(key)
-                if s is None:
-                    s = min(self.scheds, key=self._load)
-                    self.affinity[key] = s
-        else:
-            s = min(self.scheds, key=self._load)
-        s.submit(task)
-
-    @property
-    def batches(self):
-        return [b for s in self.scheds for b in s.batches]
+        with self.cv:
+            self.pending.append(task)
+            self.cv.notify()
 
     def stop(self):
-        for s in self.scheds:
-            s.stop()
+        self.running = False
+        with self.cv:
+            self.cv.notify()
+        for w in self.workers:
+            w.q.put(None)
+
+    def forget(self, qid: str):
+        """Drop a finished query's sequence-affinity entries."""
+        with self._aff_lock:
+            for k in [k for k in self.affinity if k[0] == qid]:
+                del self.affinity[k]
+
+    def _form_batch(self) -> List[NodeTask]:
+        max_bs = getattr(self.engine, "max_batch", 8)
+        return form_batch(self.pending, self.policy, max_bs)
+
+    # -- the replica router -------------------------------------------------
+    def _route(self, batch: List[NodeTask]):
+        """Partition a fused batch by sequence affinity; everything
+        unpinned goes — as one fused sub-batch — to the least-loaded
+        replica and pins its sequences there."""
+        groups: Dict[int, List[NodeTask]] = {}
+        unpinned: List[NodeTask] = []
+        with self._aff_lock:
+            for t in batch:
+                key = _seq_key(t)
+                idx = self.affinity.get(key) if key is not None else None
+                if idx is None:
+                    unpinned.append(t)
+                else:
+                    groups.setdefault(idx, []).append(t)
+            if unpinned:
+                idx = self.pool.least_loaded()
+                groups.setdefault(idx, []).extend(unpinned)
+                for t in unpinned:
+                    key = _seq_key(t)
+                    if key is not None:
+                        self.affinity[key] = idx
+        for idx, tasks in groups.items():
+            tokens = sum(estimate_tokens(t.prim) for t in tasks)
+            self.pool.note_queued(idx, tokens)
+            self.routes.append((idx, tasks[0].prim.op,
+                                sum(t.prim.num_requests for t in tasks),
+                                tokens))
+            self.workers[idx].q.put((tasks, tokens))
+
+    def run(self):
+        while self.running:
+            with self.cv:
+                if not self.pending:
+                    self.cv.wait(timeout=0.1)
+                    continue
+                batch = self._form_batch()
+                for t in batch:
+                    self.pending.remove(t)
+            if not batch:
+                time.sleep(self.period)
+                continue
+            self.batches.append((sum(t.prim.num_requests for t in batch),
+                                 batch[0].prim.op))
+            self._route(batch)
+
+
+# ---------------------------------------------------------------------------
+
+# ops whose output can be streamed chunk-wise to downstream consumers
+STREAMABLE_OPS = {P.DECODE, P.PARTIAL_DECODE}
+
+
+def stream_eligible(prim: Primitive) -> bool:
+    """A decode can stream when it emits ONE plain-text value (per-item
+    sequences and multi-item splits post-process the final text)."""
+    return (prim.op in STREAMABLE_OPS
+            and not prim.config.get("per_item_seq")
+            and prim.config.get("num_items", 1) <= 1
+            and not prim.config.get("also_aggregate")
+            and prim.config.get("stream", True))
 
 
 class Runtime:
-    """Graph scheduler + engine scheduler pool over a set of engines.
-    An engines-dict value may be a LIST of replicas -> EngineGroup."""
+    """Graph scheduler + one lower-tier scheduler per engine pool.
+    An engines-dict value may be a bare engine, an EnginePool, or a
+    legacy list of replicas (wrapped into an EnginePool when len > 1).
+    ``streaming=True`` enables decode->downstream chunk pipelining."""
 
-    def __init__(self, engines: Dict[str, Any], policy: str = "topo"):
+    def __init__(self, engines: Dict[str, Any], policy: str = "topo",
+                 streaming: bool = False):
         from repro.core.executors import execute_batch
         self.engines = engines
         self.policy = policy
+        self.streaming = streaming
         self.scheds: Dict[str, Any] = {}
         for name, eng in engines.items():
-            replicas = eng if isinstance(eng, list) else [eng]
-            group = []
-            for inst in replicas:
-                s = EngineScheduler(inst, execute_batch, policy)
-                s.on_complete = self._on_complete
-                group.append(s)
-                s.start()
-            self.scheds[name] = (EngineGroup(group) if len(group) > 1
-                                 else group[0])
+            if isinstance(eng, list):
+                eng = EnginePool(eng, name=name) if len(eng) > 1 else eng[0]
+            if isinstance(eng, EnginePool):
+                s = PooledEngineScheduler(eng, execute_batch, policy)
+            else:
+                s = EngineScheduler(eng, execute_batch, policy)
+            s.on_complete = self._on_complete
+            s.start()
+            self.scheds[name] = s
         self.queries: List[QueryContext] = []
         self._lock = threading.Lock()
 
@@ -268,7 +426,39 @@ class Runtime:
             self._run_control(prim, ctx)
             self._complete_node(prim, ctx)
             return
-        self.scheds[prim.engine].submit(NodeTask(prim, ctx))
+        task = NodeTask(prim, ctx)
+        if self.streaming and stream_eligible(prim):
+            task.stream = self._open_stream(prim, ctx)
+        self.scheds[prim.engine].submit(task)
+
+    def _open_stream(self, prim: Primitive, ctx: QueryContext):
+        """Partial-result emission path: publish a TokenStream under the
+        decode's output key and arm the first-chunk early-release hook."""
+        from repro.core.executors import _out_key
+        key = prim.config.get("out_key", _out_key(prim))
+        stream = TokenStream(key)
+        stream.on_first = lambda: self._stream_ready(prim, ctx)
+        ctx.store[key] = stream
+        return stream
+
+    def _stream_ready(self, prim: Primitive, ctx: QueryContext):
+        """First decoded chunk is out: release the decode's children
+        early. Runs on the engine executor thread MID-DECODE, so children
+        are dispatched from fresh threads — a control primitive that
+        blocks on the stream must not stall the decode loop."""
+        ready = []
+        with ctx.lock:
+            for cpid in prim.children:
+                edge = (prim.pid, cpid)
+                if edge in ctx.early_edges:
+                    continue
+                ctx.early_edges.add(edge)
+                ctx.indegree[cpid] -= 1
+                if ctx.indegree[cpid] == 0:
+                    ready.append(ctx.graph.nodes[cpid])
+        for n in ready:
+            threading.Thread(target=self._dispatch, args=(n, ctx),
+                             daemon=True).start()
 
     def _run_control(self, prim: Primitive, ctx: QueryContext):
         from repro.core.executors import run_control
@@ -288,10 +478,11 @@ class Runtime:
         ready = []
         with ctx.lock:
             for cpid in prim.children:
+                if (prim.pid, cpid) in ctx.early_edges:
+                    continue        # already released on first chunk
                 ctx.indegree[cpid] -= 1
                 if ctx.indegree[cpid] == 0:
                     ready.append(ctx.graph.nodes[cpid])
-            remaining = sum(1 for v in ctx.indegree.values() if v > 0)
         for n in ready:
             self._dispatch(n, ctx)
         # finished when every node has been completed
@@ -305,14 +496,17 @@ class Runtime:
             return
         ctx.t_done = time.time()
         ctx.done.set()
-        # release LLM sequence state on every instance
+        # release LLM sequence state on every replica of every pool
         for name, eng in self.engines.items():
-            for inst in (eng if isinstance(eng, list) else [eng]):
+            for inst in replicas_of(eng):
                 if hasattr(inst, "release"):
                     for sid in ctx.sids:
                         inst.release(sid)
                 if hasattr(inst, "drop"):
                     inst.drop(ctx.qid)
+        for s in self.scheds.values():
+            if isinstance(s, PooledEngineScheduler):
+                s.forget(ctx.qid)
 
     def shutdown(self):
         for s in self.scheds.values():

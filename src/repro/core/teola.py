@@ -14,6 +14,7 @@ import time
 from typing import Dict, List, Optional
 
 from repro.core import primitives as P
+from repro.core.engine_pool import replicas_of
 from repro.core.passes import ALL_PASSES, graph_opt
 from repro.core.pgraph import graph_transform
 from repro.core.primitives import Graph
@@ -23,11 +24,11 @@ from repro.core.workflow import APP
 
 class Teola:
     def __init__(self, app: APP, engines: Dict, *, policy: str = "topo",
-                 passes=ALL_PASSES):
+                 passes=ALL_PASSES, streaming: bool = False):
         self.app = app
         self.engines = engines
         self.passes = passes
-        self.runtime = Runtime(engines, policy=policy)
+        self.runtime = Runtime(engines, policy=policy, streaming=streaming)
         self._egraph_cache: Dict[str, Graph] = {}
 
     def _cache_key(self, query: dict):
@@ -125,7 +126,7 @@ class _ModuleChain:
         finally:
             ctx.done.set()
             for eng in self.engines.values():
-                for inst in (eng if isinstance(eng, list) else [eng]):
+                for inst in replicas_of(eng):
                     if hasattr(inst, "release"):
                         for sid in ctx.sids:
                             inst.release(sid)
@@ -190,7 +191,7 @@ class LlamaDistPC(_ModuleChain):
             instr = n.config.get("instruction") or defaults.get(n.kind) \
                 or gen_defaults.get(n.config.get("mode", ""))
             eng = self.engines.get(n.engine)
-            for inst in (eng if isinstance(eng, list) else [eng]):
+            for inst in replicas_of(eng):
                 if hasattr(inst, "get_prefix_state"):
                     inst.use_prefix_cache = True
                     if instr:

@@ -19,9 +19,21 @@ class EngineSpec:
     #                                'vectordb' | 'chunker' | 'search_api'
     max_batch: int = 8             # max efficient batch (profiled)
     max_tokens: int = 1024         # LLM: max efficient batched token count
-    instances: int = 1
+    instances: int = 1             # pool size (EnginePool replicas)
     resource: Dict[str, int] = field(default_factory=dict)
     config: Dict[str, Any] = field(default_factory=dict)
+
+    @classmethod
+    def from_engine(cls, name: str, eng) -> "EngineSpec":
+        """Pool-aware registration: `eng` may be a bare engine, a list of
+        replicas, or an EnginePool; the profile comes from the primary
+        replica and `instances` reflects the pool size."""
+        from repro.core.engine_pool import pool_size, primary_of
+        inst = primary_of(eng)
+        return cls(name=name, kind=getattr(inst, "kind", "misc"),
+                   max_batch=getattr(inst, "max_batch", 8),
+                   max_tokens=getattr(inst, "max_tokens", 1024),
+                   instances=pool_size(eng))
 
 
 class Node:

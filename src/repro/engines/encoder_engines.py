@@ -33,6 +33,19 @@ class _EncoderEngine:
         self._fwd = jax.jit(lambda p, t, m: apply_encoder(cfg, p, t, m))
         self.stats = {"requests": 0, "calls": 0, "busy_s": 0.0}
 
+    def clone(self, idx: int = 1):
+        """Pool replica: shared weights/tokenizer/jitted forward, fresh
+        stats (encoders are stateless across requests)."""
+        c = type(self).__new__(type(self))
+        c.name = f"{self.name}.r{idx}"
+        c.cfg = self.cfg
+        c.max_batch = self.max_batch
+        c.tok = self.tok
+        c.params = self.params
+        c._fwd = self._fwd
+        c.stats = {"requests": 0, "calls": 0, "busy_s": 0.0}
+        return c
+
     def _encode_batch(self, texts: List[str]):
         t0 = time.time()
         B = _bucket(len(texts), _BUCKETS_B)

@@ -52,20 +52,48 @@ class LLMEngine:
 
     def __init__(self, name: str, cfg: ModelConfig, *, max_len: int = 512,
                  seed: int = 0, max_batch: int = 8, max_tokens: int = 1024,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, stream_chunk: int = 4):
         self.name = name
         self.cfg = cfg
         self.max_len = max_len
         self.max_batch = max_batch
         self.max_tokens = max_tokens
+        self.stream_chunk = stream_chunk   # decode tokens per emitted chunk
         self.tok = HashTokenizer(cfg.vocab_size)
         self.params = init_params(cfg, jax.random.key(seed), dtype)
         self.states: Dict[str, SeqState] = {}
         self.prefix_cache: Dict[str, SeqState] = {}
         self._lock = threading.Lock()
         self._step = self._build_step()
+        self.meter = kvc.OccupancyMeter(kvc.bytes_per_token(cfg))
         self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "calls": 0,
                       "busy_s": 0.0}
+
+    def clone(self, idx: int = 1) -> "LLMEngine":
+        """Pool replica: SHARED weights, tokenizer, compiled step and
+        instruction-prefix cache; PER-REPLICA sequence/KV store, lock,
+        occupancy meter and stats."""
+        c = LLMEngine.__new__(LLMEngine)
+        c.name = f"{self.name}.r{idx}"
+        c.cfg = self.cfg
+        c.max_len = self.max_len
+        c.max_batch = self.max_batch
+        c.max_tokens = self.max_tokens
+        c.stream_chunk = self.stream_chunk
+        c.tok = self.tok
+        c.params = self.params
+        c.states = {}
+        c.prefix_cache = self.prefix_cache
+        c._lock = threading.Lock()
+        c._step = self._step
+        c.meter = kvc.OccupancyMeter(self.meter.bytes_per_tok)
+        c.stats = {"prefill_tokens": 0, "decode_tokens": 0, "calls": 0,
+                   "busy_s": 0.0}
+        return c
+
+    def kv_occupancy(self) -> int:
+        """Resident KV tokens on this replica (pool-router load input)."""
+        return self.meter.tokens()
 
     # -- jitted batched step: write chunk, return logits of last position
     def _build_step(self):
@@ -125,10 +153,12 @@ class LLMEngine:
         self.stats["calls"] += 1
         self.stats["busy_s"] += time.time() - t0
 
-    def decode_batch(self, items):
+    def decode_batch(self, items, on_chunk=None):
         """items: list of (state, n_tokens). Greedy continuous decode; all
         sequences step together for max(n) steps (finished ones keep
-        writing into their own slots but results are truncated)."""
+        writing into their own slots but results are truncated).
+        on_chunk(i, token_ids_so_far): called every `stream_chunk` steps
+        per live item — the streaming-decode emission point."""
         t0 = time.time()
         n_max = max(n for _, n in items)
         B = _bucket(len(items), BUCKETS_B)
@@ -138,6 +168,7 @@ class LLMEngine:
         cache, pos = self._stack_states(pad_states)
         cur = jnp.array([[s.last_token] for s in pad_states], jnp.int32)
         outs = [[] for _ in pad_states]
+        emitted = [0] * len(items)
         for t in range(n_max):
             logits, cache = self._step(self.params, cur, cache, pos)
             nxt = jnp.argmax(logits, axis=-1)
@@ -145,6 +176,13 @@ class LLMEngine:
                 outs[i].append(int(nxt[i]))
             cur = nxt[:, None].astype(jnp.int32)
             pos = pos + 1
+            if on_chunk and ((t + 1) % self.stream_chunk == 0
+                             or t + 1 == n_max):
+                for i, (_, n) in enumerate(items):
+                    m = min(t + 1, n)
+                    if m > emitted[i]:
+                        emitted[i] = m
+                        on_chunk(i, outs[i][:m])
         self._unstack(cache, pad_states)
         results = []
         for i, (s, n) in enumerate(items):
@@ -172,17 +210,24 @@ class LLMEngine:
                         st = self.new_state()
                     self.states[sid] = st
             toks = self.tok.encode(t["text"])[: self.max_len - st.pos - 8]
-            items.append((st, toks or [HashTokenizer.SEP]))
+            toks = toks or [HashTokenizer.SEP]
+            self.meter.advance(sid, len(toks))
+            items.append((st, toks))
         self.prefill_batch(items)
         return [None] * len(task_batch)
 
-    def op_decode(self, task_batch):
-        """task_batch: list of dicts: sid, max_new. Returns texts."""
+    def op_decode(self, task_batch, on_chunk=None):
+        """task_batch: list of dicts: sid, max_new. Returns texts.
+        on_chunk(i, text_so_far): incremental decode emission."""
         items = []
         for t in task_batch:
             st = self.states[t["sid"]]
+            self.meter.advance(t["sid"], int(t["max_new"]))
             items.append((st, int(t["max_new"])))
-        outs = self.decode_batch(items)
+        cb = None
+        if on_chunk is not None:
+            cb = lambda i, ids: on_chunk(i, self.tok.decode(ids))  # noqa: E731
+        outs = self.decode_batch(items, on_chunk=cb)
         return [self.tok.decode(o) for o in outs]
 
     def get_prefix_state(self, instruction: str) -> SeqState:
@@ -200,3 +245,4 @@ class LLMEngine:
     def release(self, sid: str):
         with self._lock:
             self.states.pop(sid, None)
+        self.meter.release(sid)

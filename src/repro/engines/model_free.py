@@ -1,6 +1,13 @@
-"""Model-free engines (CPU): vector DB, chunker, search-API stub."""
+"""Model-free engines (CPU): vector DB, chunker, search-API stub.
+
+All three support ``clone()`` so they can sit behind an EnginePool: the
+vector DB's replicas SHARE the collection store (an ingest on one replica
+is visible to a search on another — the pool models extra query
+parallelism over one index, not a sharded index); chunker and search-API
+replicas are stateless."""
 from __future__ import annotations
 
+import copy
 import threading
 import time
 from typing import Dict, List
@@ -55,6 +62,11 @@ class VectorDBEngine:
         with self._lock:
             self._store.pop(collection, None)
 
+    def clone(self, idx: int = 1):
+        c = copy.copy(self)             # shares _store and _lock
+        c.name = f"{self.name}.r{idx}"
+        return c
+
 
 class ChunkerEngine:
     """Word-window chunker (LlamaIndex text-splitter stand-in)."""
@@ -63,6 +75,11 @@ class ChunkerEngine:
     def __init__(self, name: str = "chunker", max_batch: int = 8):
         self.name = name
         self.max_batch = max_batch
+
+    def clone(self, idx: int = 1):
+        c = copy.copy(self)
+        c.name = f"{self.name}.r{idx}"
+        return c
 
     @staticmethod
     def count_chunks(docs, chunk_size=48, overlap=8) -> int:
@@ -100,6 +117,11 @@ class SearchAPIEngine:
         self.name = name
         self.max_batch = max_batch
         self.latency = latency
+
+    def clone(self, idx: int = 1):
+        c = copy.copy(self)
+        c.name = f"{self.name}.r{idx}"
+        return c
 
     def op_search(self, tasks):
         time.sleep(self.latency)   # one batched API round-trip

@@ -62,7 +62,7 @@ class SimLLMEngine:
                  prefill_ms_per_tok: float = 0.235, prefill_setup: float = 20,
                  decode_ms_per_step: float = 25.0,
                  decode_ms_per_extra_seq: float = 2.0,
-                 batch_factor: float = 0.78):
+                 batch_factor: float = 0.78, stream_chunk: int = 4):
         self.name = name
         self.max_batch = max_batch
         self.pf_tok = prefill_ms_per_tok
@@ -70,12 +70,31 @@ class SimLLMEngine:
         self.dec_step = decode_ms_per_step
         self.dec_extra = decode_ms_per_extra_seq
         self.bf = batch_factor
+        self.stream_chunk = stream_chunk
         self.states: Dict[str, dict] = {}
         self.prefix_cache: Dict[str, dict] = {}
         self.use_prefix_cache = False      # enabled by LlamaDistPC
         self._lock = threading.Lock()
         self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "calls": 0,
                       "busy_ms": 0.0}
+
+    def clone(self, idx: int = 1) -> "SimLLMEngine":
+        """Pool replica: same latency profile and SHARED instruction-prefix
+        cache (weights-equivalent), PER-REPLICA sequence store and stats."""
+        c = SimLLMEngine(
+            f"{self.name}.r{idx}", max_batch=self.max_batch,
+            prefill_ms_per_tok=self.pf_tok, prefill_setup=self.pf_setup,
+            decode_ms_per_step=self.dec_step,
+            decode_ms_per_extra_seq=self.dec_extra, batch_factor=self.bf,
+            stream_chunk=self.stream_chunk)
+        c.prefix_cache = self.prefix_cache
+        c.use_prefix_cache = self.use_prefix_cache
+        return c
+
+    def kv_occupancy(self) -> int:
+        """Resident KV tokens on this replica (pool-router load input)."""
+        with self._lock:
+            return sum(st.get("pos", 0) for st in self.states.values())
 
     def _ntok(self, text: str) -> int:
         return max(1, len(text.split()))
@@ -105,17 +124,38 @@ class SimLLMEngine:
         self.stats["busy_ms"] += dur
         return [None] * b
 
-    def op_decode(self, tasks):
+    def op_decode(self, tasks, on_chunk=None):
         n_max = max(int(t["max_new"]) for t in tasks)
         b = len(tasks)
         dur = n_max * (self.dec_step + self.dec_extra * (b - 1))
-        _sleep(dur)
-        out = []
-        for t in tasks:
-            st = self.states.setdefault(t["sid"], {"pos": 0})
-            st["pos"] += int(t["max_new"])
-            out.append(_ptext(t["sid"] + str(st["pos"]),
-                              int(t["max_new"])))
+        if on_chunk is None:
+            _sleep(dur)
+            out = []
+            for t in tasks:
+                st = self.states.setdefault(t["sid"], {"pos": 0})
+                st["pos"] += int(t["max_new"])
+                out.append(_ptext(t["sid"] + str(st["pos"]),
+                                  int(t["max_new"])))
+        else:
+            # streaming: the final text is determined up front (the sim has
+            # no real sampling); the modeled decode time is spent in
+            # per-chunk slices, each emitting the words "decoded" so far
+            out, words = [], []
+            for t in tasks:
+                st = self.states.setdefault(t["sid"], {"pos": 0})
+                st["pos"] += int(t["max_new"])
+                text = _ptext(t["sid"] + str(st["pos"]), int(t["max_new"]))
+                out.append(text)
+                words.append(text.split())
+            step = 0
+            while step < n_max:
+                nsteps = min(self.stream_chunk, n_max - step)
+                _sleep(dur * nsteps / n_max)
+                step += nsteps
+                for i, t in enumerate(tasks):
+                    m = min(step, int(t["max_new"]))
+                    if m > 0:
+                        on_chunk(i, " ".join(words[i][:m]))
         self.stats["decode_tokens"] += sum(int(t["max_new"]) for t in tasks)
         self.stats["calls"] += 1
         self.stats["busy_ms"] += dur
@@ -145,6 +185,10 @@ class SimEmbeddingEngine:
         self.per_req = per_req_ms
         self.stats = {"requests": 0, "calls": 0, "busy_ms": 0.0}
 
+    def clone(self, idx: int = 1) -> "SimEmbeddingEngine":
+        return SimEmbeddingEngine(f"{self.name}.r{idx}", self.max_batch,
+                                  self.setup, self.per_req)
+
     def op_embed(self, tasks):
         n = sum(len(t["texts"]) for t in tasks)
         # setup cost per underlying model call (ceil(n/max_batch) calls)
@@ -170,6 +214,10 @@ class SimRerankEngine:
         self.setup = setup_ms
         self.per_pair = per_pair_ms
         self.stats = {"requests": 0, "calls": 0, "busy_ms": 0.0}
+
+    def clone(self, idx: int = 1) -> "SimRerankEngine":
+        return SimRerankEngine(f"{self.name}.r{idx}", self.max_batch,
+                               self.setup, self.per_pair)
 
     def op_rerank(self, tasks):
         n = sum(len(t["candidates"]) for t in tasks)
@@ -207,27 +255,30 @@ class SimSearchAPI(SearchAPIEngine):
 def build_sim_engines(*, llm_max_batch: int = 8, core_decode_ms: float = 25.0,
                       lite_scale: float = 0.25,
                       llm_instances: int = 1) -> dict:
-    """Engine pool with paper-calibrated profiles. lite_llm (gemma-2-2B
+    """Engine set with paper-calibrated profiles. lite_llm (gemma-2-2B
     contextualizer / llama-7B judge) is ~4x faster than the core LLM.
-    llm_instances>1 replicates the LLM engines (the paper's testbed
-    provisions two instances per LLM); the Runtime load-balances with
+    llm_instances>1 puts the LLM engines behind EnginePools (the paper's
+    testbed provisions two instances per LLM); the pooled lower-tier
+    scheduler routes fused batches to the least-loaded replica with
     sequence affinity."""
-    def core(i):
-        return SimLLMEngine(f"core_llm{i}", max_batch=llm_max_batch,
-                            decode_ms_per_step=core_decode_ms)
+    from repro.core.engine_pool import EnginePool
 
-    def lite(i):
-        return SimLLMEngine(
-            f"lite_llm{i}", max_batch=llm_max_batch * 2,
-            prefill_ms_per_tok=0.235 * lite_scale,
-            prefill_setup=8,
-            decode_ms_per_step=core_decode_ms * lite_scale,
-            decode_ms_per_extra_seq=0.5)
+    core = SimLLMEngine("core_llm", max_batch=llm_max_batch,
+                        decode_ms_per_step=core_decode_ms)
+    lite = SimLLMEngine(
+        "lite_llm", max_batch=llm_max_batch * 2,
+        prefill_ms_per_tok=0.235 * lite_scale,
+        prefill_setup=8,
+        decode_ms_per_step=core_decode_ms * lite_scale,
+        decode_ms_per_extra_seq=0.5)
 
     n = llm_instances
+    if n > 1:
+        core = EnginePool.replicate(core, n, name="core_llm")
+        lite = EnginePool.replicate(lite, n, name="lite_llm")
     return {
-        "core_llm": core(0) if n == 1 else [core(i) for i in range(n)],
-        "lite_llm": lite(0) if n == 1 else [lite(i) for i in range(n)],
+        "core_llm": core,
+        "lite_llm": lite,
         "embedding": SimEmbeddingEngine(),
         "rerank": SimRerankEngine(),
         "vectordb": SimVectorDB(),

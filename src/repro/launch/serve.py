@@ -2,7 +2,13 @@
 on the engine pool and serve queries.
 
   PYTHONPATH=src python -m repro.launch.serve --app advanced_rag \
-      --queries 4 [--sim] [--scheme Teola|LlamaDist-TO|...]
+      --queries 4 [--sim] [--scheme Teola|LlamaDist-TO|...] \
+      [--llm-instances 2] [--streaming]
+
+--llm-instances N puts each LLM engine behind an EnginePool of N replicas
+(shared weights, per-replica KV stores; fused batches are routed to the
+least-loaded replica). --streaming enables decode->downstream chunk
+pipelining (Teola scheme only).
 """
 from __future__ import annotations
 
@@ -12,6 +18,7 @@ import time
 import numpy as np
 
 from repro.core.apps import ALL_APPS, build_engines
+from repro.core.engine_pool import build_pools
 from repro.core.teola import AutoGenLike, LlamaDist, LlamaDistPC, Teola
 from repro.training.data import doc_corpus
 
@@ -32,16 +39,27 @@ def main():
     ap.add_argument("--rate", type=float, default=2.0)
     ap.add_argument("--sim", action="store_true",
                     help="paper-calibrated latency-profile engines")
+    ap.add_argument("--llm-instances", type=int, default=1,
+                    help="EnginePool replicas per LLM engine")
+    ap.add_argument("--streaming", action="store_true",
+                    help="stream decode chunks to downstream primitives")
     args = ap.parse_args()
 
     if args.sim:
         from repro.engines.sim_engines import build_sim_engines
-        engines = build_sim_engines()
+        engines = build_sim_engines(llm_instances=args.llm_instances)
     else:
         engines = build_engines()
+        if args.llm_instances > 1:
+            engines = build_pools(engines, {
+                "core_llm": args.llm_instances,
+                "lite_llm": args.llm_instances})
     app = ALL_APPS[args.app](engines)
     cls, policy = SCHEMES[args.scheme]
-    orch = cls(app, engines, policy=policy)
+    if cls is Teola:
+        orch = cls(app, engines, policy=policy, streaming=args.streaming)
+    else:
+        orch = cls(app, engines, policy=policy)
 
     docs = doc_corpus(2)
     print(f"[serve] {args.app} via {args.scheme} "

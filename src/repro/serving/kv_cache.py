@@ -25,6 +25,9 @@ dry-run to build AOT inputs without allocating terabytes.
 """
 from __future__ import annotations
 
+import threading
+from typing import Dict
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -109,6 +112,47 @@ def cache_bytes(cfg: ModelConfig, batch: int, max_len: int,
                     cfg, spec, st.repeat, batch, max_len, chunk).values():
                 total += int(np.prod(shape)) * jnp.dtype(dtype).itemsize
     return total
+
+
+# ---------------------------------------------------------------------------
+# Occupancy accounting (engine-pool load routing)
+
+def bytes_per_token(cfg: ModelConfig, chunk: int = 256) -> int:
+    """Marginal KV bytes per resident token, amortized over a reference
+    window (sliding-window / recurrent layers make the true cost
+    sub-linear; a 1k-token reference captures the steady state)."""
+    ref = 1024
+    return max(1, cache_bytes(cfg, 1, ref, chunk) // ref)
+
+
+class OccupancyMeter:
+    """Per-replica ledger of resident sequence tokens. Engines advance it
+    on prefill/decode and clear entries on release; the pool router reads
+    ``tokens()`` as the KV-occupancy component of a replica's load."""
+
+    def __init__(self, bytes_per_tok: int = 0):
+        self.bytes_per_tok = bytes_per_tok
+        self._tokens: Dict[str, int] = {}
+        self._lock = threading.Lock()
+
+    def advance(self, sid: str, n: int):
+        with self._lock:
+            self._tokens[sid] = self._tokens.get(sid, 0) + int(n)
+
+    def release(self, sid: str):
+        with self._lock:
+            self._tokens.pop(sid, None)
+
+    def tokens(self) -> int:
+        with self._lock:
+            return sum(self._tokens.values())
+
+    def bytes(self) -> int:
+        return self.tokens() * self.bytes_per_tok
+
+    def seqs(self) -> int:
+        with self._lock:
+            return len(self._tokens)
 
 
 # ---------------------------------------------------------------------------

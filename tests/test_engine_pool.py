@@ -1,0 +1,302 @@
+"""Engine-pool subsystem tests: load-aware routing, sequence affinity,
+pool-of-1 equivalence with the single-instance path, and streaming
+decode chunks reaching a downstream primitive before sequence
+completion."""
+import itertools
+import time
+
+import pytest
+
+import repro.core.passes as passes_mod
+import repro.core.pgraph as pgraph_mod
+import repro.core.primitives as prims_mod
+import repro.core.runtime as runtime_mod
+from repro.core import primitives as P
+from repro.core.engine_pool import (EnginePool, RESIDENT_WEIGHT,
+                                    estimate_tokens, pool_size, replicas_of)
+from repro.core.primitives import Graph, Primitive
+from repro.core.runtime import (NodeTask, PooledEngineScheduler,
+                                QueryContext, Runtime)
+from repro.core.streams import TokenStream
+from repro.engines.sim_engines import SimLLMEngine, build_sim_engines
+
+
+class FakeLLM:
+    """Minimal stateful LLM engine: decode asserts the sequence's KV state
+    is resident on THIS replica (the affinity invariant)."""
+    kind = "llm"
+    max_batch = 4
+
+    def __init__(self, name="fake_llm"):
+        self.name = name
+        self.states = {}
+
+    def clone(self, idx: int = 1):
+        return FakeLLM(f"{self.name}.r{idx}")
+
+    def kv_occupancy(self):
+        return sum(self.states.values())
+
+    def op_prefill(self, tasks):
+        for t in tasks:
+            self.states[t["sid"]] = self.states.get(t["sid"], 0) + 10
+        return [None] * len(tasks)
+
+    def op_decode(self, tasks):
+        for t in tasks:
+            assert t["sid"] in self.states, \
+                f"{self.name}: decode for {t['sid']} but KV state absent"
+        return ["out"] * len(tasks)
+
+
+def _prim(op, sid=None, **cfg):
+    config = dict(cfg)
+    if sid is not None:
+        config["sid"] = sid
+    return Primitive(op=op, engine="llm", component="c", config=config,
+                     produces={"out"})
+
+
+def _wait(pred, timeout=5.0):
+    t0 = time.time()
+    while time.time() - t0 < timeout:
+        if pred():
+            return True
+        time.sleep(0.002)
+    return False
+
+
+# ---------------------------------------------------------------------------
+# EnginePool unit behavior
+
+def test_replicate_shares_profile_not_state():
+    pool = EnginePool.replicate(SimLLMEngine("llm"), 3, name="llm")
+    assert len(pool) == 3 and pool_size(pool) == 3
+    assert len(replicas_of(pool)) == 3
+    a, b = pool[0], pool[1]
+    assert a.prefix_cache is b.prefix_cache      # shared "weights"
+    assert a.states is not b.states              # per-replica KV store
+    assert a.dec_step == b.dec_step
+
+
+def test_least_loaded_uses_tokens_and_kv_occupancy():
+    pool = EnginePool.replicate(FakeLLM(), 2)
+    assert pool.least_loaded() == 0              # tie -> first
+    pool.note_queued(0, 100)
+    assert pool.least_loaded() == 1
+    pool.note_started(0, 100)                    # still outstanding
+    assert pool.least_loaded() == 1
+    pool.note_finished(0, 100)
+    # now only KV occupancy distinguishes: park a sequence on replica 1
+    pool[1].states["s"] = 1000
+    assert pool.load(1) == pytest.approx(RESIDENT_WEIGHT * 1000)
+    assert pool.least_loaded() == 0
+
+
+def test_estimate_tokens_scales_with_op():
+    dec = _prim(P.DECODE, max_new=32)
+    pre = _prim(P.PREFILL)
+    emb = Primitive(op=P.EMBEDDING, engine="e", component="c")
+    assert estimate_tokens(dec) == 32
+    assert estimate_tokens(pre) > estimate_tokens(emb)
+
+
+# ---------------------------------------------------------------------------
+# PooledEngineScheduler routing
+
+def _sched(pool, executor):
+    s = PooledEngineScheduler(pool, executor, policy="to")
+    s.on_complete = lambda t: None
+    s.start()
+    return s
+
+
+def test_router_prefers_least_loaded_replica():
+    routed = []
+    pool = EnginePool.replicate(FakeLLM(), 2)
+    s = _sched(pool, lambda eng, batch: routed.append(eng.name))
+    pool.note_queued(0, 10_000)                  # replica 0 is swamped
+    ctx = QueryContext(Graph(), {})
+    s.submit(NodeTask(_prim(P.PREFILL, sid="a"), ctx))
+    assert _wait(lambda: routed)
+    assert routed[0].endswith(".r1")
+    s.stop()
+
+
+def test_sequence_affinity_overrides_load():
+    routed = []
+    pool = EnginePool.replicate(FakeLLM(), 2)
+    s = _sched(pool, lambda eng, batch: routed.append(eng.name))
+    ctx = QueryContext(Graph(), {})
+    s.submit(NodeTask(_prim(P.PREFILL, sid="a"), ctx))
+    assert _wait(lambda: len(routed) == 1)
+    home = routed[0]
+    # make the home replica look terrible; the decode must still follow
+    # its KV state
+    idx = 0 if home == pool[0].name else 1
+    pool.note_queued(idx, 100_000)
+    s.submit(NodeTask(_prim(P.DECODE, sid="a"), ctx))
+    assert _wait(lambda: len(routed) == 2)
+    assert routed[1] == home
+    s.stop()
+
+
+def test_mixed_affinity_batch_is_partitioned():
+    seen = []                                    # (engine, [sids])
+    pool = EnginePool.replicate(FakeLLM(), 2)
+
+    def executor(eng, batch):
+        seen.append((eng.name, [t.prim.config["sid"] for t in batch]))
+
+    s = PooledEngineScheduler(pool, executor, policy="to")
+    s.on_complete = lambda t: None
+    # pin sid a -> replica 0, sid b -> replica 1 (scheduler not started yet)
+    ctx = QueryContext(Graph(), {})
+    s.affinity[(ctx.qid, "a")] = 0
+    s.affinity[(ctx.qid, "b")] = 1
+    s.submit(NodeTask(_prim(P.DECODE, sid="a"), ctx))
+    s.submit(NodeTask(_prim(P.DECODE, sid="b"), ctx))
+    pool[0].states["a"] = 10
+    pool[1].states["b"] = 10
+    s.start()
+    assert _wait(lambda: sum(len(x[1]) for x in seen) == 2)
+    by_engine = {name: sids for name, sids in seen}
+    for name, sids in by_engine.items():
+        if "a" in sids:
+            assert name == pool[0].name
+        if "b" in sids:
+            assert name == pool[1].name
+    s.stop()
+
+
+def test_end_to_end_on_pool_releases_and_completes():
+    engines = build_sim_engines(llm_instances=2)
+    from repro.core.apps import advanced_rag
+    from repro.core.teola import Teola
+    orch = Teola(advanced_rag(engines), engines)
+    from repro.training.data import doc_corpus
+    out, ctx = orch.query({"question": "what is fact 3 about optics",
+                           "docs": doc_corpus(2)}, timeout=300)
+    assert ctx.error is None and out
+    sched = orch.runtime.scheds["core_llm"]
+    assert isinstance(sched, PooledEngineScheduler)
+    assert sched.routes                          # router actually ran
+    for rep in engines["core_llm"]:
+        assert len(rep.states) == 0              # released on finish
+    assert not sched.affinity                    # forgotten on finish
+    orch.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Pool-of-1 equivalence with the single-instance path
+
+def _reset_counters():
+    runtime_mod._qid = itertools.count()
+    prims_mod._counter = itertools.count()
+    pgraph_mod._sid = itertools.count()
+    passes_mod._uid = itertools.count()
+
+
+def _answer(pooled: bool, streaming: bool = False):
+    from repro.core.apps import advanced_rag
+    from repro.core.teola import Teola
+    from repro.training.data import doc_corpus
+    _reset_counters()
+    engines = build_sim_engines()
+    if pooled:
+        engines = {k: (EnginePool.replicate(v, 1, name=k)
+                       if hasattr(v, "clone") else v)
+                   for k, v in engines.items()}
+    orch = Teola(advanced_rag(engines), engines, streaming=streaming)
+    out, ctx = orch.query({"question": "what is fact 3 about optics",
+                           "docs": doc_corpus(2)}, timeout=300)
+    orch.shutdown()
+    assert ctx.error is None
+    return out
+
+
+def test_pool_of_one_byte_identical_to_single_instance():
+    single = _answer(pooled=False)
+    pooled = _answer(pooled=True)       # same ops through the pool router
+    assert pooled == single
+
+
+def test_streaming_byte_identical_final_output():
+    assert _answer(pooled=False, streaming=True) == _answer(pooled=False)
+
+
+# ---------------------------------------------------------------------------
+# Streaming decode -> downstream pipelining
+
+def test_stream_chunks_reach_downstream_before_completion():
+    llm = SimLLMEngine("llm", decode_ms_per_step=60.0)
+    rt = Runtime({"llm": llm}, policy="to", streaming=True)
+
+    g = Graph(query_id="q")
+    pre = Primitive(op=P.PREFILL, engine="llm", component="gen",
+                    consumes={"question"}, produces={"state:s"},
+                    config={"sid": "s", "instruction": "hello world",
+                            "parts": [("instr", None),
+                                      ("q", "question")]})
+    dec = Primitive(op=P.DECODE, engine="llm", component="gen",
+                    consumes={"state:s"}, produces={"draft"},
+                    config={"sid": "s", "max_new": 24})
+    agg = Primitive(op=P.AGGREGATE, engine="control", component="agg",
+                    consumes={"draft"}, produces={"final"})
+    for p in (pre, dec, agg):
+        g.add(p)
+    g.edge(pre, dec)
+    g.edge(dec, agg)
+    g.assign_depths()
+
+    ctx = rt.submit(g, {"question": "what is up"}, output_key="final")
+    # sniff the TokenStream out of the store while the decode is running
+    stream = None
+
+    def saw_stream():
+        nonlocal stream
+        v = ctx.store.get("draft")
+        if isinstance(v, TokenStream):
+            stream = v
+            return True
+        return False
+
+    assert _wait(saw_stream, timeout=10), "stream never appeared in store"
+    assert ctx.done.wait(60)
+    assert ctx.error is None
+
+    dec_t1 = ctx.node_spans[dec.pid][1]
+    agg_t0 = ctx.node_spans[agg.pid][0]
+    # the downstream primitive was dispatched BEFORE the decode finished
+    assert agg_t0 < dec_t1
+    # and chunks arrived progressively, starting before completion
+    assert len(stream.chunk_times) >= 2
+    assert stream.chunk_times[0] < dec_t1
+    # final store layout is the plain text, byte-equal to the stream text
+    assert isinstance(ctx.store["draft"], str)
+    assert ctx.store["draft"] == stream.wait_text()
+    assert ctx.store["final"] == [ctx.store["draft"]]
+    rt.shutdown()
+
+
+def test_streaming_disabled_keeps_plain_path():
+    llm = SimLLMEngine("llm")
+    rt = Runtime({"llm": llm}, policy="to", streaming=False)
+    g = Graph(query_id="q")
+    pre = Primitive(op=P.PREFILL, engine="llm", component="gen",
+                    consumes={"question"}, produces={"state:s"},
+                    config={"sid": "s", "instruction": "hi",
+                            "parts": [("instr", None)]})
+    dec = Primitive(op=P.DECODE, engine="llm", component="gen",
+                    consumes={"state:s"}, produces={"draft"},
+                    config={"sid": "s", "max_new": 8})
+    for p in (pre, dec):
+        g.add(p)
+    g.edge(pre, dec)
+    g.assign_depths()
+    ctx = rt.submit(g, {"question": "x"}, output_key="draft")
+    assert ctx.done.wait(60)
+    assert ctx.error is None
+    assert isinstance(ctx.store["draft"], str)
+    assert not ctx.early_edges
+    rt.shutdown()
