@@ -1,14 +1,73 @@
 """Paper Fig. 4: request- vs application-level scheduling toy studies.
 (a) embedding engine: 48 requests at batch 4 vs 16 — total completion time
 (b) LLM tree-synthesis: blind batch-2 vs topology/depth-aware batching
+(c) decode under STAGGERED arrivals: run-to-completion batching vs
+    iteration-level continuous batching (the persistent decode loop) —
+    §5's phase-aware scheduling argument applied to the decode phase
 """
 from __future__ import annotations
 
+import threading
 import time
+from collections import deque
 
 from benchmarks.common import fmt_row
 from repro.engines.sim_engines import SPEED, SimEmbeddingEngine, \
     SimLLMEngine
+
+
+def _staggered_decode(continuous: bool, *, n_req: int = 8,
+                      max_new: int = 24, stagger_ms: float = 80.0,
+                      max_batch: int = 4, decode_ms: float = 50.0):
+    """`n_req` decode requests arrive `stagger_ms` (model time) apart.
+    Run-to-completion: the server batches whatever has arrived (up to
+    max_batch) and steps the batch until its LONGEST member finishes —
+    arrivals mid-batch wait a whole batch-time. Continuous: every request
+    is admitted into a free decode slot at the NEXT iteration and evicted
+    the moment it finishes. Returns (total_model_ms, decode tokens/s)."""
+    eng = SimLLMEngine("llm", max_batch=max_batch,
+                       decode_ms_per_step=decode_ms)
+    arrived = deque()
+    lock = threading.Lock()
+
+    def producer():
+        for i in range(n_req):
+            with lock:
+                arrived.append(f"s{i}")
+            time.sleep(stagger_ms / 1000.0 / SPEED)
+
+    t0 = time.time()
+    th = threading.Thread(target=producer)
+    th.start()
+    if continuous:
+        seqs, submitted = [], 0
+        while submitted < n_req:
+            with lock:
+                new = [arrived.popleft() for _ in range(len(arrived))]
+            for sid in new:
+                seqs.append(eng.submit_decode(sid, max_new))
+                submitted += 1
+            if submitted < n_req:
+                time.sleep(0.0005)
+        for s in seqs:
+            s.wait(300)
+        eng.stop_decode_loop()
+    else:
+        served = 0
+        while served < n_req:
+            with lock:
+                batch = [arrived.popleft()
+                         for _ in range(min(len(arrived), max_batch))]
+            if not batch:
+                time.sleep(0.0005)
+                continue
+            eng.op_decode([{"sid": sid, "max_new": max_new}
+                           for sid in batch])
+            served += len(batch)
+    th.join()
+    wall_ms = (time.time() - t0) * 1000.0 * SPEED
+    tput = n_req * max_new / (wall_ms / 1000.0)
+    return wall_ms, tput
 
 
 def run():
@@ -52,6 +111,17 @@ def run():
     print(fmt_row("llm_tree_depth2", "blind_batch2", round(tb * 1000), 1.0))
     print(fmt_row("llm_tree_depth2", "depth_aware", round(ta * 1000),
                   round(tb / ta, 2)))
+
+    # (c) staggered decode arrivals: run-to-completion vs continuous
+    rtc_ms, rtc_tput = _staggered_decode(continuous=False)
+    cont_ms, cont_tput = _staggered_decode(continuous=True)
+    print(fmt_row("decode_staggered_8req", "run_to_completion",
+                  round(rtc_ms), 1.0))
+    print(fmt_row("decode_staggered_8req", "continuous",
+                  round(cont_ms), round(rtc_ms / cont_ms, 2)))
+    print(f"# decode throughput: run_to_completion {rtc_tput:.0f} tok/s, "
+          f"continuous {cont_tput:.0f} tok/s "
+          f"({cont_tput / rtc_tput:.2f}x)")
 
 
 if __name__ == "__main__":

@@ -100,6 +100,17 @@ class EnginePool:
         with self._lock:
             self._loads[i].inflight -= tokens
 
+    # Continuous-batching decodes skip the routed-batch queue: work goes
+    # straight into the replica's decode loop, so it is in-flight from
+    # submission until the sequence is evicted.
+    def note_decode_submitted(self, i: int, tokens: int):
+        with self._lock:
+            self._loads[i].inflight += tokens
+
+    def note_decode_finished(self, i: int, tokens: int):
+        with self._lock:
+            self._loads[i].inflight -= tokens
+
     def load(self, i: int) -> float:
         """Outstanding token-work of replica i (queued + in-flight +
         discounted resident KV occupancy)."""
@@ -110,6 +121,24 @@ class EnginePool:
 
     def least_loaded(self) -> int:
         return min(range(len(self.replicas)), key=self.load)
+
+    # -- slot-aware decode routing (continuous batching) --------------------
+    def decode_slots_free(self, i: int):
+        """Free decode-loop slots of replica i; None when the replica
+        does not expose slot accounting."""
+        fn = getattr(self.replicas[i], "decode_slots_free", None)
+        return fn() if fn is not None else None
+
+    def least_loaded_decode(self) -> int:
+        """Replica for a new continuous-batching decode: a replica with a
+        free decode slot starts the sequence NEXT iteration, while a full
+        loop queues it behind a whole sequence — so free-slot replicas
+        win outright; ties fall back to token load."""
+        def key(i):
+            free = self.decode_slots_free(i)
+            has_free = free is None or free > 0
+            return (0 if has_free else 1, self.load(i))
+        return min(range(len(self.replicas)), key=key)
 
     def loads(self) -> List[float]:
         return [self.load(i) for i in range(len(self.replicas))]

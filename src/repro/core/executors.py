@@ -3,6 +3,7 @@ object stores, invoke the engine op, and write outputs back."""
 from __future__ import annotations
 
 import inspect
+import threading
 from typing import List
 
 import numpy as np
@@ -225,35 +226,117 @@ def execute_batch(engine, tasks: List):
         else:
             res = engine.op_decode(payload)
         for t, (a, b) in zip(tasks, spans):
-            prim, store = t.prim, t.ctx.store
-            texts = res[a:b]
-            key = prim.config.get("out_key", _out_key(prim))
-            if prim.config.get("per_item_seq"):
-                store[key] = [{"text": x} for x in texts]
-            elif prim.op == P.DECODE and prim.config.get("num_items", 1) > 1:
-                # unsplit decode of a multi-item output: divide evenly
-                words = texts[0].split()
-                k = prim.config["num_items"]
-                per = max(1, len(words) // k)
-                store[key] = [" ".join(words[i * per:(i + 1) * per])
-                              for i in range(k)]
-            else:
-                if t.stream is not None:
-                    # seal the channel, then restore the plain-text store
-                    # layout (late consumers never see the stream object)
-                    t.stream.close(texts[0])
-                store[key] = texts[0]
-            if prim.config.get("also_aggregate"):
-                agg = prim.config["also_aggregate"]
-                parts = [store.get(f"{agg}#{i}", "")
-                         for i in range(prim.config.get("num_items", 1))]
-                store[agg] = [p for p in parts]
-            for k2 in prim.produces:
-                if k2.startswith("state:"):
-                    store[k2] = True
+            _write_decode_outputs(t, res[a:b])
         return
 
     raise ValueError(f"no executor for op {op} on engine kind {kind}")
+
+
+def _write_decode_outputs(t, texts: List[str]):
+    """Publish a decode task's final texts into the query store (shared by
+    the batch executor and the continuous-batching submit path)."""
+    prim, store = t.prim, t.ctx.store
+    key = prim.config.get("out_key", _out_key(prim))
+    if prim.config.get("per_item_seq"):
+        store[key] = [{"text": x} for x in texts]
+    elif prim.op == P.DECODE and prim.config.get("num_items", 1) > 1:
+        # unsplit decode of a multi-item output: divide evenly
+        words = texts[0].split()
+        k = prim.config["num_items"]
+        per = max(1, len(words) // k)
+        store[key] = [" ".join(words[i * per:(i + 1) * per])
+                      for i in range(k)]
+    else:
+        if t.stream is not None:
+            # seal the channel, then restore the plain-text store
+            # layout (late consumers never see the stream object)
+            t.stream.close(texts[0])
+        store[key] = texts[0]
+    if prim.config.get("also_aggregate"):
+        agg = prim.config["also_aggregate"]
+        parts = [store.get(f"{agg}#{i}", "")
+                 for i in range(prim.config.get("num_items", 1))]
+        store[agg] = [p for p in parts]
+    for k2 in prim.produces:
+        if k2.startswith("state:"):
+            store[k2] = True
+
+
+def submit_decode_task(engine, task, done, on_fail=None):
+    """Continuous-batching dispatch of ONE decode NodeTask: every sequence
+    of the task is admitted into the engine's persistent decode loop
+    (``submit_decode``) instead of a blocking run-to-completion batch. The
+    scheduler thread returns immediately; when the task's LAST sequence is
+    evicted from the loop, the store is written exactly as the batch path
+    writes it and ``done(task)`` fires on the loop thread. On a sequence
+    error the query is failed like ``_fail_batch`` (done is NOT called)
+    and ``on_fail(task)``, if given, runs cleanup (e.g. releasing the
+    pool's in-flight ledger)."""
+    prim, ctx = task.prim, task.ctx
+    entries = []                         # (sid, max_new) per sequence
+    if prim.config.get("per_item_seq"):
+        rng = prim.config.get("item_range")
+        lo = rng[0] if rng else 0
+        for i in range(prim.num_requests):
+            entries.append((_sid(prim, ctx, lo + i),
+                            prim.config.get("max_new", 12)))
+    else:
+        entries.append((_sid(prim, ctx), prim.config.get("max_new", 24)))
+
+    if not entries:                      # zero-item decode: parity with
+        _write_decode_outputs(task, [])  # the batch path's empty span
+        done(task)
+        return
+
+    lock = threading.Lock()
+    remaining = [len(entries)]
+    results: List = [None] * len(entries)
+    errors: List = []
+
+    def fail(err):
+        if task.stream is not None:
+            task.stream.close()
+        ctx.error = err
+        ctx.done.set()
+        if on_fail is not None:
+            on_fail(task)
+
+    def finish():
+        if errors:
+            fail(errors[0])
+            return
+        try:
+            _write_decode_outputs(task, results)
+        except Exception as e:  # noqa: BLE001
+            fail(e)
+            return
+        done(task)
+
+    def seq_done(j, seq):
+        if seq.error is not None:
+            errors.append(seq.error)
+        results[j] = seq.result
+        with lock:
+            remaining[0] -= 1
+            last = remaining[0] == 0
+        if last:
+            # a completion-path failure (done -> graph bookkeeping) must
+            # fail the query, not strand it; the ledger was already
+            # released by done's own wrapper at that point
+            try:
+                finish()
+            except Exception as e:  # noqa: BLE001
+                if task.stream is not None:
+                    task.stream.close()
+                if ctx.error is None:
+                    ctx.error = e
+                ctx.done.set()
+
+    on_text = task.stream.put if (task.stream is not None
+                                  and len(entries) == 1) else None
+    for j, (sid, max_new) in enumerate(entries):
+        engine.submit_decode(sid, max_new, on_text=on_text,
+                             on_done=lambda seq, j=j: seq_done(j, seq))
 
 
 # ---------------------------------------------------------------------------

@@ -173,21 +173,42 @@ def form_batch(pending: List[NodeTask], policy: str,
 
 # ---------------------------------------------------------------------------
 
+# ops dispatched into the persistent decode loop under continuous batching
+CONTINUOUS_OPS = (P.DECODE, P.PARTIAL_DECODE)
+
+
+def take_continuous(pending: List[NodeTask]) -> List[NodeTask]:
+    """Pull loop-destined decode tasks out of a pending list (caller
+    holds the scheduler's condition lock)."""
+    cont = [t for t in pending if t.prim.op in CONTINUOUS_OPS]
+    for t in cont:
+        pending.remove(t)
+    return cont
+
+
 class EngineScheduler(threading.Thread):
-    """Lower-tier scheduler for a SINGLE engine instance."""
+    """Lower-tier scheduler for a SINGLE engine instance.
+
+    With ``continuous=True`` (and an engine exposing ``submit_decode``)
+    decode primitives bypass batch formation: they are submitted straight
+    into the engine's persistent decode loop — the decode-slot dispatch
+    mode — so the scheduler thread never blocks an engine for a whole
+    decode batch and newly-arrived decodes join mid-flight."""
 
     def __init__(self, engine, executor, policy: str = "topo",
-                 period: float = 0.002):
+                 period: float = 0.002, continuous: bool = False):
         super().__init__(daemon=True)
         self.engine = engine
         self.executor = executor
         self.policy = policy
         self.period = period
+        self.continuous = continuous and hasattr(engine, "submit_decode")
         self.pending: List[NodeTask] = []
         self.cv = threading.Condition()
         self.running = True
         self.on_complete = None        # set by Runtime
         self.batches = []              # (size_requests, op) log
+        self.decode_submits = []       # (num_requests, op) loop submissions
 
     def submit(self, task: NodeTask):
         with self.cv:
@@ -203,17 +224,30 @@ class EngineScheduler(threading.Thread):
         max_bs = getattr(self.engine, "max_batch", 8)
         return form_batch(self.pending, self.policy, max_bs)
 
+    def _submit_continuous(self, tasks: List[NodeTask]):
+        from repro.core.executors import submit_decode_task
+        for t in tasks:
+            self.decode_submits.append((t.prim.num_requests, t.prim.op))
+            try:
+                submit_decode_task(self.engine, t, self.on_complete)
+            except Exception as e:  # noqa: BLE001
+                _fail_batch([t], e)
+
     def run(self):
         while self.running:
             with self.cv:
                 if not self.pending:
                     self.cv.wait(timeout=0.1)
                     continue
+                cont = take_continuous(self.pending) if self.continuous \
+                    else []
                 batch = self._form_batch()
                 for t in batch:
                     self.pending.remove(t)
+            self._submit_continuous(cont)
             if not batch:
-                time.sleep(self.period)
+                if not cont:
+                    time.sleep(self.period)
                 continue
             self.batches.append((sum(t.prim.num_requests for t in batch),
                                  batch[0].prim.op))
@@ -273,21 +307,28 @@ class PooledEngineScheduler(threading.Thread):
     KV occupancy) with sequence affinity: once a sequence's prefill lands
     on a replica, every later op of that sequence follows it. A fused
     batch that spans sequences pinned to different replicas is partitioned
-    into per-replica sub-batches."""
+    into per-replica sub-batches.
+
+    With ``continuous=True``, decode primitives skip the replica worker
+    queues: each is routed (affinity first, then SLOT-AWARE least-load —
+    a replica with a free decode slot beats a loaded one) and submitted
+    into that replica's persistent decode loop."""
 
     def __init__(self, pool: EnginePool, executor, policy: str = "topo",
-                 period: float = 0.002):
+                 period: float = 0.002, continuous: bool = False):
         super().__init__(daemon=True)
         self.pool = pool
         self.engine = pool[0]          # profile source (max_batch, kind)
         self.executor = executor
         self.policy = policy
         self.period = period
+        self.continuous = continuous and hasattr(pool[0], "submit_decode")
         self.pending: List[NodeTask] = []
         self.cv = threading.Condition()
         self.running = True
         self.on_complete = None
         self.batches = []              # (size_requests, op) log
+        self.decode_submits = []       # (num_requests, op) loop submissions
         self.routes = []               # (replica_idx, op, n_requests, tokens)
         self.affinity: Dict[tuple, int] = {}
         self._aff_lock = threading.Lock()
@@ -316,6 +357,39 @@ class PooledEngineScheduler(threading.Thread):
     def _form_batch(self) -> List[NodeTask]:
         max_bs = getattr(self.engine, "max_batch", 8)
         return form_batch(self.pending, self.policy, max_bs)
+
+    def _submit_continuous(self, tasks: List[NodeTask]):
+        """Route each decode to a replica (KV affinity binds; otherwise
+        slot-aware least-load) and admit it into that replica's loop."""
+        from repro.core.executors import submit_decode_task
+        for t in tasks:
+            key = _seq_key(t)
+            with self._aff_lock:
+                idx = self.affinity.get(key) if key is not None else None
+                if idx is None:
+                    idx = self.pool.least_loaded_decode()
+                    if key is not None:
+                        self.affinity[key] = idx
+            tokens = estimate_tokens(t.prim)
+            self.pool.note_decode_submitted(idx, tokens)
+            self.routes.append((idx, t.prim.op, t.prim.num_requests,
+                                tokens))
+            self.decode_submits.append((t.prim.num_requests, t.prim.op))
+
+            def _done(task, idx=idx, tokens=tokens):
+                self.pool.note_decode_finished(idx, tokens)
+                self.on_complete(task)
+
+            def _fail(task, idx=idx, tokens=tokens):
+                # release the ledger even when the task errors (done is
+                # not called on the error path)
+                self.pool.note_decode_finished(idx, tokens)
+
+            try:
+                submit_decode_task(self.pool[idx], t, _done, on_fail=_fail)
+            except Exception as e:  # noqa: BLE001
+                self.pool.note_decode_finished(idx, tokens)
+                _fail_batch([t], e)
 
     # -- the replica router -------------------------------------------------
     def _route(self, batch: List[NodeTask]):
@@ -353,11 +427,15 @@ class PooledEngineScheduler(threading.Thread):
                 if not self.pending:
                     self.cv.wait(timeout=0.1)
                     continue
+                cont = take_continuous(self.pending) if self.continuous \
+                    else []
                 batch = self._form_batch()
                 for t in batch:
                     self.pending.remove(t)
+            self._submit_continuous(cont)
             if not batch:
-                time.sleep(self.period)
+                if not cont:
+                    time.sleep(self.period)
                 continue
             self.batches.append((sum(t.prim.num_requests for t in batch),
                                  batch[0].prim.op))
@@ -384,22 +462,30 @@ class Runtime:
     """Graph scheduler + one lower-tier scheduler per engine pool.
     An engines-dict value may be a bare engine, an EnginePool, or a
     legacy list of replicas (wrapped into an EnginePool when len > 1).
-    ``streaming=True`` enables decode->downstream chunk pipelining."""
+    ``streaming=True`` enables decode->downstream chunk pipelining.
+    ``continuous_batching=True`` enables the decode-slot dispatch mode:
+    decode primitives are admitted into each LLM replica's persistent
+    decode loop (iteration-level continuous batching) instead of being
+    executed as blocking run-to-completion batches."""
 
     def __init__(self, engines: Dict[str, Any], policy: str = "topo",
-                 streaming: bool = False):
+                 streaming: bool = False,
+                 continuous_batching: bool = False):
         from repro.core.executors import execute_batch
         self.engines = engines
         self.policy = policy
         self.streaming = streaming
+        self.continuous_batching = continuous_batching
         self.scheds: Dict[str, Any] = {}
         for name, eng in engines.items():
             if isinstance(eng, list):
                 eng = EnginePool(eng, name=name) if len(eng) > 1 else eng[0]
             if isinstance(eng, EnginePool):
-                s = PooledEngineScheduler(eng, execute_batch, policy)
+                s = PooledEngineScheduler(eng, execute_batch, policy,
+                                          continuous=continuous_batching)
             else:
-                s = EngineScheduler(eng, execute_batch, policy)
+                s = EngineScheduler(eng, execute_batch, policy,
+                                    continuous=continuous_batching)
             s.on_complete = self._on_complete
             s.start()
             self.scheds[name] = s
@@ -511,3 +597,7 @@ class Runtime:
     def shutdown(self):
         for s in self.scheds.values():
             s.stop()
+        for eng in self.engines.values():
+            for inst in replicas_of(eng):
+                if hasattr(inst, "stop_decode_loop"):
+                    inst.stop_decode_loop()

@@ -24,11 +24,13 @@ from repro.core.workflow import APP
 
 class Teola:
     def __init__(self, app: APP, engines: Dict, *, policy: str = "topo",
-                 passes=ALL_PASSES, streaming: bool = False):
+                 passes=ALL_PASSES, streaming: bool = False,
+                 continuous_batching: bool = False):
         self.app = app
         self.engines = engines
         self.passes = passes
-        self.runtime = Runtime(engines, policy=policy, streaming=streaming)
+        self.runtime = Runtime(engines, policy=policy, streaming=streaming,
+                               continuous_batching=continuous_batching)
         self._egraph_cache: Dict[str, Graph] = {}
 
     def _cache_key(self, query: dict):
@@ -111,11 +113,15 @@ class _ModuleChain:
 
     def _run(self, g: Graph, ctx: QueryContext):
         try:
+            produced = set()
+            for n in g.nodes.values():
+                produced |= set(n.produces)
             for phase in self.parallel_groups():
                 threads = []
                 for group in phase:
                     th = threading.Thread(
-                        target=self._run_group, args=(g, ctx, group))
+                        target=self._run_group,
+                        args=(g, ctx, group, produced))
                     th.start()
                     threads.append(th)
                 for th in threads:
@@ -133,16 +139,32 @@ class _ModuleChain:
                     if hasattr(inst, "drop"):
                         inst.drop(ctx.qid)
 
-    def _run_group(self, g: Graph, ctx: QueryContext, group: List[str]):
+    def _run_group(self, g: Graph, ctx: QueryContext, group: List[str],
+                   produced=frozenset()):
         """Run the primitives of these components, respecting intra-group
-        dependencies, blocking until all complete."""
+        dependencies, blocking until all complete. A failure is recorded
+        on the context (thread exceptions would otherwise vanish and a
+        sibling group waiting on this group's outputs would spin)."""
         nodes = [n for n in g.topo_order() if n.component in group]
-        for n in nodes:
-            self._exec_node(n, ctx)
+        try:
+            for n in nodes:
+                self._exec_node(n, ctx, produced)
+        except Exception as e:  # noqa: BLE001
+            if ctx.error is None:
+                ctx.error = e
 
-    def _exec_node(self, prim, ctx):
+    def _exec_node(self, prim, ctx, produced=frozenset()):
         from repro.core.executors import run_control
         from repro.core.runtime import NodeTask
+        # payloads are resolved lazily from the store on the engine
+        # scheduler thread, so inputs produced by ANOTHER group running
+        # in the same phase must be present before submission (the
+        # managed path gets this ordering from in-degree tracking)
+        deps = [k for k in prim.consumes if k in produced]
+        while not all(k in ctx.store for k in deps):
+            if ctx.error:
+                raise ctx.error
+            time.sleep(0.001)
         if prim.engine == "control":
             run_control(prim, ctx)
             return

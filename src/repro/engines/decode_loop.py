@@ -1,0 +1,237 @@
+"""Iteration-level continuous batching: the persistent decode loop.
+
+Run-to-completion decode batching (the legacy ``decode_batch`` path)
+forms a batch once and steps it until the LONGEST member finishes: short
+sequences idle in their slots and a sequence arriving one iteration
+after batch formation waits an entire batch-time. Teola's timing-aware
+batching (§5) — like Orca-style iteration-level scheduling — instead
+re-forms the decode batch every iteration.
+
+``ContinuousDecodeLoop`` is that loop, engine-agnostic. Per iteration it
+
+  1. admits waiting sequences into free decode slots (``max_slots``),
+  2. advances every resident sequence by ONE token via the engine's
+     ``decode_iteration(seqs)``,
+  3. emits a per-iteration chunk per sequence (``on_text`` receives the
+     cumulative decoded text — the TokenStream emission point),
+  4. evicts finished sequences IMMEDIATELY, freeing their slot for the
+     next admission pass, and fires their ``on_done``.
+
+The engine owns all model state and numerics; the loop owns residency,
+slot accounting (mirrored into the engine via the optional
+``note_slot_acquired`` / ``note_slot_released`` hooks, which the real
+engine forwards to its ``OccupancyMeter``), and completion signaling.
+Both the real ``LLMEngine`` and the latency-profile ``SimLLMEngine``
+drive the same loop.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Callable, List, Optional
+
+
+class DecodeSeq:
+    """One sequence's residency in a continuous decode loop.
+
+    ``state`` is an engine-specific handle (the real engine's per-sequence
+    KV ``SeqState``, the sim engine's state dict); ``tokens`` is the
+    engine-appended output payload (token ids / words); ``text_fn``
+    renders it to text for chunk emission and the final ``result``.
+    """
+
+    def __init__(self, sid: str, state, n: int, *,
+                 text_fn: Callable[["DecodeSeq"], str],
+                 on_text: Optional[Callable[[str], None]] = None,
+                 on_done: Optional[Callable[["DecodeSeq"], None]] = None):
+        self.sid = sid
+        self.state = state
+        self.n = int(n)
+        self.text_fn = text_fn
+        self.on_text = on_text
+        self.on_done = on_done
+        self.tokens: list = []
+        self.steps = 0
+        self.result: Optional[str] = None
+        self.error: Optional[Exception] = None
+        self.done = threading.Event()
+        self.t_submit = time.time()
+        self.t_admit: Optional[float] = None
+        self.t_done: Optional[float] = None
+
+    def wait(self, timeout: float = 300) -> str:
+        """Block until eviction; return the final decoded text."""
+        if not self.done.wait(timeout):
+            raise TimeoutError(
+                f"decode {self.sid} not evicted after {timeout}s "
+                f"({self.steps}/{self.n} steps)")
+        if self.error is not None:
+            raise self.error
+        return self.result
+
+    def __repr__(self):
+        return (f"<DecodeSeq {self.sid} {self.steps}/{self.n} "
+                f"done={self.done.is_set()}>")
+
+
+class ContinuousDecodeLoop(threading.Thread):
+    """Persistent decode loop over an engine's decode slots."""
+
+    def __init__(self, engine, max_slots: int, idle_wait: float = 0.05):
+        super().__init__(
+            daemon=True,
+            name=f"decode-loop-{getattr(engine, 'name', '?')}")
+        self.engine = engine
+        self.max_slots = max(1, int(max_slots))
+        self.idle_wait = idle_wait
+        self.waiting: deque = deque()
+        self.active: List[DecodeSeq] = []
+        self.cv = threading.Condition()
+        self.running = True
+        # introspection (tests / benchmarks)
+        self.iterations = 0
+        self.max_resident = 0
+        self.admissions: List[tuple] = []   # (sid, iteration_admitted)
+        self.evictions: List[tuple] = []    # (sid, iteration_evicted, steps)
+        self.callback_errors: List[tuple] = []   # (sid, exception)
+
+    # -- producer side ------------------------------------------------------
+    def submit(self, seq: DecodeSeq) -> DecodeSeq:
+        with self.cv:
+            self.waiting.append(seq)
+            self.cv.notify()
+        return seq
+
+    def slots_free(self) -> int:
+        """Slots not claimed by resident or already-queued sequences."""
+        with self.cv:
+            return max(0, self.max_slots - len(self.active)
+                       - len(self.waiting))
+
+    def occupancy(self) -> int:
+        with self.cv:
+            return len(self.active) + len(self.waiting)
+
+    def stop(self):
+        with self.cv:
+            self.running = False
+            self.cv.notify()
+        if threading.current_thread() is not self:
+            self.join(timeout=10)
+
+    # -- loop internals -----------------------------------------------------
+    def _admit_locked(self):
+        while self.waiting and len(self.active) < self.max_slots:
+            seq = self.waiting.popleft()
+            seq.t_admit = time.time()
+            self.active.append(seq)
+            self.admissions.append((seq.sid, self.iterations))
+            hook = getattr(self.engine, "note_slot_acquired", None)
+            if hook is not None:
+                hook(seq)
+
+    def _evict(self, seq: DecodeSeq, error: Optional[Exception] = None):
+        seq.t_done = time.time()
+        if error is None:
+            try:
+                seq.result = seq.text_fn(seq)
+            except Exception as e:  # noqa: BLE001
+                error = e
+        seq.error = error
+        self.evictions.append((seq.sid, self.iterations, seq.steps))
+        hook = getattr(self.engine, "note_slot_released", None)
+        if hook is not None:
+            hook(seq)
+        seq.done.set()
+        if seq.on_done is not None:
+            # on_done runs runtime bookkeeping (store writes, graph
+            # completion) on the loop thread; a failure there must not
+            # kill the loop and strand the other resident sequences
+            try:
+                seq.on_done(seq)
+            except Exception as e:  # noqa: BLE001
+                self.callback_errors.append((seq.sid, e))
+
+    def run(self):
+        while True:
+            with self.cv:
+                if not self.running:
+                    break
+                self._admit_locked()
+                if not self.active:
+                    self.cv.wait(timeout=self.idle_wait)
+                    continue
+                batch = list(self.active)
+                self.max_resident = max(self.max_resident, len(batch))
+            try:
+                self.engine.decode_iteration(batch)
+            except Exception as e:  # noqa: BLE001 — fail resident seqs
+                with self.cv:
+                    for seq in batch:
+                        self.active.remove(seq)
+                for seq in batch:
+                    self._evict(seq, error=e)
+                continue
+            self.iterations += 1
+            finished, errored = [], []
+            for seq in batch:
+                seq.steps += 1
+                # a failing per-sequence emission (on_text runs stream
+                # plumbing and the first-chunk early-release hook) fails
+                # THAT sequence, never the shared loop
+                try:
+                    if seq.on_text is not None:
+                        seq.on_text(seq.text_fn(seq))
+                except Exception as e:  # noqa: BLE001
+                    errored.append((seq, e))
+                    continue
+                if seq.steps >= seq.n:
+                    finished.append(seq)
+            if finished or errored:
+                with self.cv:
+                    for seq in finished:
+                        self.active.remove(seq)
+                    for seq, _ in errored:
+                        self.active.remove(seq)
+                for seq, e in errored:
+                    self._evict(seq, error=e)
+                for seq in finished:        # slot freed before next admit
+                    self._evict(seq)
+        # stopped: unblock anything still resident or queued
+        with self.cv:
+            leftovers = list(self.active) + list(self.waiting)
+            self.active.clear()
+            self.waiting.clear()
+        for seq in leftovers:
+            self._evict(seq, error=RuntimeError("decode loop stopped"))
+
+
+class DecodeLoopMixin:
+    """Decode-loop lifecycle shared by the real and sim LLM engines.
+    Host class must provide ``_lock``, ``max_batch`` and initialize
+    ``_decode_loop = None``."""
+
+    def start_decode_loop(self) -> ContinuousDecodeLoop:
+        """Start (or return) this replica's persistent decode loop."""
+        with self._lock:
+            if self._decode_loop is None or \
+                    not self._decode_loop.is_alive():
+                self._decode_loop = ContinuousDecodeLoop(
+                    self, max_slots=self.max_batch)
+                self._decode_loop.start()
+            return self._decode_loop
+
+    def stop_decode_loop(self):
+        with self._lock:
+            loop = self._decode_loop
+            self._decode_loop = None
+        if loop is not None:
+            loop.stop()
+
+    def decode_slots_free(self) -> int:
+        """Free decode slots (pool-router slot-aware routing input)."""
+        loop = self._decode_loop
+        if loop is None or not loop.is_alive():
+            return self.max_batch
+        return loop.slots_free()

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.engines.decode_loop import (ContinuousDecodeLoop, DecodeLoopMixin,
+                                       DecodeSeq)
 from repro.engines.tokenizer import HashTokenizer
 from repro.models.transformer import apply_model, init_params
 from repro.serving import kv_cache as kvc
@@ -47,7 +49,7 @@ class SeqState:
     last_token: int = 1         # BOS
 
 
-class LLMEngine:
+class LLMEngine(DecodeLoopMixin):
     kind = "llm"
 
     def __init__(self, name: str, cfg: ModelConfig, *, max_len: int = 512,
@@ -65,9 +67,16 @@ class LLMEngine:
         self.prefix_cache: Dict[str, SeqState] = {}
         self._lock = threading.Lock()
         self._step = self._build_step()
-        self.meter = kvc.OccupancyMeter(kvc.bytes_per_token(cfg))
+        self.meter = kvc.OccupancyMeter(kvc.bytes_per_token(cfg),
+                                        decode_slots=max_batch)
         self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "calls": 0,
-                      "busy_s": 0.0}
+                      "decode_iters": 0, "busy_s": 0.0}
+        # decode_iteration (loop thread) and prefill/decode batches
+        # (scheduler thread) update stats concurrently
+        self._stats_lock = threading.Lock()
+        self._decode_loop: Optional[ContinuousDecodeLoop] = None
+        self._pads: List[SeqState] = []   # reusable batch-padding states
+        self._reset_batch_cache()
 
     def clone(self, idx: int = 1) -> "LLMEngine":
         """Pool replica: SHARED weights, tokenizer, compiled step and
@@ -86,9 +95,14 @@ class LLMEngine:
         c.prefix_cache = self.prefix_cache
         c._lock = threading.Lock()
         c._step = self._step
-        c.meter = kvc.OccupancyMeter(self.meter.bytes_per_tok)
+        c.meter = kvc.OccupancyMeter(self.meter.bytes_per_tok,
+                                     decode_slots=c.max_batch)
         c.stats = {"prefill_tokens": 0, "decode_tokens": 0, "calls": 0,
-                   "busy_s": 0.0}
+                   "decode_iters": 0, "busy_s": 0.0}
+        c._stats_lock = threading.Lock()
+        c._decode_loop = None            # per-replica decode loop
+        c._pads = []
+        c._reset_batch_cache()
         return c
 
     def kv_occupancy(self) -> int:
@@ -149,9 +163,10 @@ class LLMEngine:
             # len(t)==S, so keep last_token from argmax over the padded
             # tail — acceptable for the engine-scale demo.
             s.last_token = int(jnp.argmax(logits[i]))
-        self.stats["prefill_tokens"] += sum(len(t) for _, t in items)
-        self.stats["calls"] += 1
-        self.stats["busy_s"] += time.time() - t0
+        with self._stats_lock:
+            self.stats["prefill_tokens"] += sum(len(t) for _, t in items)
+            self.stats["calls"] += 1
+            self.stats["busy_s"] += time.time() - t0
 
     def decode_batch(self, items, on_chunk=None):
         """items: list of (state, n_tokens). Greedy continuous decode; all
@@ -189,10 +204,87 @@ class LLMEngine:
             s.pos = int(pos[i]) - (n_max - n)
             s.last_token = outs[i][n - 1]
             results.append(outs[i][:n])
-        self.stats["decode_tokens"] += sum(n for _, n in items)
-        self.stats["calls"] += 1
-        self.stats["busy_s"] += time.time() - t0
+        with self._stats_lock:
+            self.stats["decode_tokens"] += sum(n for _, n in items)
+            self.stats["calls"] += 1
+            self.stats["busy_s"] += time.time() - t0
         return results
+
+    # -- iteration-level continuous batching --------------------------------
+    # (loop lifecycle — start/stop/slots — comes from DecodeLoopMixin)
+    def submit_decode(self, sid: str, max_new: int, on_text=None,
+                      on_done=None) -> DecodeSeq:
+        """Admit sequence `sid` into the continuous decode loop for
+        `max_new` tokens. on_text(text_so_far) fires every iteration;
+        on_done(seq) fires at eviction. Returns the DecodeSeq handle."""
+        st = self.states[sid]
+        seq = DecodeSeq(sid, st, max_new,
+                        text_fn=lambda s: self.tok.decode(s.tokens),
+                        on_text=on_text, on_done=on_done)
+        return self.start_decode_loop().submit(seq)
+
+    def note_slot_acquired(self, seq: DecodeSeq):
+        self.meter.acquire_slot(seq.sid)
+
+    def note_slot_released(self, seq: DecodeSeq):
+        # an evicted sequence's KV must be current in its own state
+        # before the slot is reused (its sid may decode again later)
+        self._flush_batch_cache()
+        self.meter.release_slot(seq.sid)
+
+    def _pad_states(self, k: int) -> List[SeqState]:
+        while len(self._pads) < k:
+            self._pads.append(self.new_state())
+        return self._pads[:k]
+
+    def _reset_batch_cache(self):
+        self._batch_key = None         # tuple of resident DecodeSeq ids
+        self._batch_cache = None       # persistent stacked cache pytree
+        self._batch_pos = None
+        self._batch_states: List[SeqState] = []
+
+    def _flush_batch_cache(self):
+        """Write the persistent stacked decode cache back into the
+        per-sequence states (on residency change / eviction). Loop-thread
+        only, like decode_iteration."""
+        if self._batch_cache is not None:
+            self._unstack(self._batch_cache, self._batch_states)
+        self._reset_batch_cache()
+
+    def decode_iteration(self, seqs: List[DecodeSeq]):
+        """One decode step for every resident sequence (called by the
+        loop each iteration). The stacked batch cache persists across
+        iterations and is rebuilt only when RESIDENCY changes (admission
+        or eviction) — steady-state iterations pay no per-token
+        stack/unstack of the KV pytree. KV occupancy advances per
+        iteration — one token per resident sequence — not per batch up
+        front."""
+        t0 = time.time()
+        B = _bucket(len(seqs), BUCKETS_B)
+        key = tuple(id(r) for r in seqs)
+        if key != self._batch_key:
+            self._flush_batch_cache()
+            self._batch_states = [r.state for r in seqs] + \
+                self._pad_states(B - len(seqs))
+            self._batch_cache, self._batch_pos = \
+                self._stack_states(self._batch_states)
+            self._batch_key = key
+        cur = jnp.array([[s.last_token] for s in self._batch_states],
+                        jnp.int32)
+        logits, self._batch_cache = self._step(
+            self.params, cur, self._batch_cache, self._batch_pos)
+        self._batch_pos = self._batch_pos + 1
+        nxt = jnp.argmax(logits, axis=-1)
+        for i, r in enumerate(seqs):
+            tok = int(nxt[i])
+            r.state.pos += 1
+            r.state.last_token = tok
+            r.tokens.append(tok)
+            self.meter.advance(r.sid, 1)
+        with self._stats_lock:
+            self.stats["decode_tokens"] += len(seqs)
+            self.stats["decode_iters"] += 1
+            self.stats["busy_s"] += time.time() - t0
 
     # -- high-level ops used by the schedulers ------------------------------
     def op_prefill(self, task_batch):

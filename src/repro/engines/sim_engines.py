@@ -28,6 +28,7 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.engines.decode_loop import DecodeLoopMixin, DecodeSeq
 from repro.engines.model_free import ChunkerEngine, SearchAPIEngine, \
     VectorDBEngine
 
@@ -55,7 +56,7 @@ def _ptext(seed: str, n: int) -> str:
     return " ".join(f"w{h[i % 28]}{i}" for i in range(n))
 
 
-class SimLLMEngine:
+class SimLLMEngine(DecodeLoopMixin):
     kind = "llm"
 
     def __init__(self, name: str, *, max_batch: int = 8,
@@ -76,7 +77,9 @@ class SimLLMEngine:
         self.use_prefix_cache = False      # enabled by LlamaDistPC
         self._lock = threading.Lock()
         self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "calls": 0,
-                      "busy_ms": 0.0}
+                      "decode_iters": 0, "busy_ms": 0.0}
+        self._stats_lock = threading.Lock()
+        self._decode_loop = None
 
     def clone(self, idx: int = 1) -> "SimLLMEngine":
         """Pool replica: same latency profile and SHARED instruction-prefix
@@ -119,9 +122,10 @@ class SimLLMEngine:
         dur = self.pf_setup + self.pf_tok * sum(toks) * \
             (self.bf if b > 1 else 1.0)
         _sleep(dur)
-        self.stats["prefill_tokens"] += sum(toks)
-        self.stats["calls"] += 1
-        self.stats["busy_ms"] += dur
+        with self._stats_lock:
+            self.stats["prefill_tokens"] += sum(toks)
+            self.stats["calls"] += 1
+            self.stats["busy_ms"] += dur
         return [None] * b
 
     def op_decode(self, tasks, on_chunk=None):
@@ -156,10 +160,48 @@ class SimLLMEngine:
                     m = min(step, int(t["max_new"]))
                     if m > 0:
                         on_chunk(i, " ".join(words[i][:m]))
-        self.stats["decode_tokens"] += sum(int(t["max_new"]) for t in tasks)
-        self.stats["calls"] += 1
-        self.stats["busy_ms"] += dur
+        with self._stats_lock:
+            self.stats["decode_tokens"] += sum(int(t["max_new"])
+                                               for t in tasks)
+            self.stats["calls"] += 1
+            self.stats["busy_ms"] += dur
         return out
+
+    # -- iteration-level continuous batching --------------------------------
+    # (loop lifecycle — start/stop/slots — comes from DecodeLoopMixin)
+    def submit_decode(self, sid: str, max_new: int, on_text=None,
+                      on_done=None) -> DecodeSeq:
+        """Admit `sid` into the continuous decode loop. The sim has no
+        real sampling, so the final text is fixed at submit time exactly
+        as the legacy path fixes it (same state/pos advance — continuous
+        and run-to-completion decode produce identical text); the modeled
+        decode TIME is spent iteration by iteration with per-iteration
+        word release."""
+        max_new = int(max_new)
+        with self._lock:
+            st = self.states.setdefault(sid, {"pos": 0})
+            st["pos"] += max_new
+            text = _ptext(sid + str(st["pos"]), max_new)
+        seq = DecodeSeq(sid, st, max_new,
+                        text_fn=lambda s: " ".join(s.tokens),
+                        on_text=on_text, on_done=on_done)
+        seq.words = text.split()
+        return self.start_decode_loop().submit(seq)
+
+    def decode_iteration(self, seqs):
+        """One modeled decode step for the resident batch: per-iteration
+        latency depends on the CURRENT batch size (the iteration-level
+        analogue of the legacy per-batch formula)."""
+        b = len(seqs)
+        dur = self.dec_step + self.dec_extra * (b - 1)
+        _sleep(dur)
+        for r in seqs:
+            if len(r.tokens) < len(r.words):
+                r.tokens.append(r.words[len(r.tokens)])
+        with self._stats_lock:
+            self.stats["decode_tokens"] += b
+            self.stats["decode_iters"] += 1
+            self.stats["busy_ms"] += dur
 
     def get_prefix_state(self, instruction: str):
         with self._lock:

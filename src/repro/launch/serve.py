@@ -8,7 +8,9 @@ on the engine pool and serve queries.
 --llm-instances N puts each LLM engine behind an EnginePool of N replicas
 (shared weights, per-replica KV stores; fused batches are routed to the
 least-loaded replica). --streaming enables decode->downstream chunk
-pipelining (Teola scheme only).
+pipelining; --continuous-batching dispatches decodes into each replica's
+persistent decode loop (iteration-level continuous batching) instead of
+run-to-completion batches (both Teola scheme only).
 """
 from __future__ import annotations
 
@@ -43,6 +45,9 @@ def main():
                     help="EnginePool replicas per LLM engine")
     ap.add_argument("--streaming", action="store_true",
                     help="stream decode chunks to downstream primitives")
+    ap.add_argument("--continuous-batching", action="store_true",
+                    help="iteration-level decode batching (persistent "
+                         "decode loop with per-iteration admission)")
     args = ap.parse_args()
 
     if args.sim:
@@ -57,7 +62,8 @@ def main():
     app = ALL_APPS[args.app](engines)
     cls, policy = SCHEMES[args.scheme]
     if cls is Teola:
-        orch = cls(app, engines, policy=policy, streaming=args.streaming)
+        orch = cls(app, engines, policy=policy, streaming=args.streaming,
+                   continuous_batching=args.continuous_batching)
     else:
         orch = cls(app, engines, policy=policy)
 

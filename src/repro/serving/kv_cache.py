@@ -126,13 +126,28 @@ def bytes_per_token(cfg: ModelConfig, chunk: int = 256) -> int:
 
 
 class OccupancyMeter:
-    """Per-replica ledger of resident sequence tokens. Engines advance it
-    on prefill/decode and clear entries on release; the pool router reads
-    ``tokens()`` as the KV-occupancy component of a replica's load."""
+    """Per-replica ledger of resident sequence tokens and decode slots.
 
-    def __init__(self, bytes_per_tok: int = 0):
+    Engines advance the token ledger on prefill/decode and clear entries
+    on release; the pool router reads ``tokens()`` as the KV-occupancy
+    component of a replica's load. Under run-to-completion decode the
+    ledger advances once per batch (``advance(sid, max_new)`` up front);
+    under continuous batching it advances PER ITERATION (one token per
+    resident sequence per step), so occupancy tracks what is actually
+    written to the KV cache.
+
+    ``decode_slots`` adds ADMITTED-slot introspection for the continuous
+    decode loop: the loop acquires a slot at admission and releases it at
+    eviction, so ``slots_used()`` reports which sequences are actively
+    stepping. Note the pool's slot-aware decode router consults the
+    loop's own ``decode_slots_free()`` (which also counts sequences
+    WAITING for a slot), not this meter."""
+
+    def __init__(self, bytes_per_tok: int = 0, decode_slots: int = 0):
         self.bytes_per_tok = bytes_per_tok
+        self.decode_slots = decode_slots
         self._tokens: Dict[str, int] = {}
+        self._slot_sids: set = set()
         self._lock = threading.Lock()
 
     def advance(self, sid: str, n: int):
@@ -153,6 +168,23 @@ class OccupancyMeter:
     def seqs(self) -> int:
         with self._lock:
             return len(self._tokens)
+
+    # -- decode-slot accounting (continuous batching) ----------------------
+    def acquire_slot(self, sid: str):
+        with self._lock:
+            self._slot_sids.add(sid)
+
+    def release_slot(self, sid: str):
+        with self._lock:
+            self._slot_sids.discard(sid)
+
+    def slots_used(self) -> int:
+        with self._lock:
+            return len(self._slot_sids)
+
+    def slots_free(self) -> int:
+        with self._lock:
+            return max(0, self.decode_slots - len(self._slot_sids))
 
 
 # ---------------------------------------------------------------------------
