@@ -20,7 +20,8 @@ def main() -> None:
     from benchmarks import (fig1_breakdown, fig4_batching, fig8_end_to_end,
                             fig9_colocation, fig10_ablation_graph,
                             fig11_ablation_sched, fig12_critical_path,
-                            instances_scaling, roofline, table3_prefill)
+                            fig_paged_kv, instances_scaling, roofline,
+                            table3_prefill)
 
     sections = [
         ("fig1_breakdown", lambda: fig1_breakdown.run()),
@@ -32,6 +33,7 @@ def main() -> None:
         ("fig11_ablation_sched", lambda: fig11_ablation_sched.run()),
         ("fig12_critical_path", lambda: fig12_critical_path.run()),
         ("table3_prefill", lambda: table3_prefill.run()),
+        ("fig_paged_kv", lambda: fig_paged_kv.run()),
         ("instances_scaling", lambda: instances_scaling.run()),
         ("roofline", lambda: roofline.run()),
     ]

@@ -113,14 +113,28 @@ class EnginePool:
 
     def load(self, i: int) -> float:
         """Outstanding token-work of replica i (queued + in-flight +
-        discounted resident KV occupancy)."""
+        discounted resident KV occupancy). Paged replicas report
+        occupancy in ALLOCATED BLOCKS (block-quantized tokens, shared
+        prefixes counted once) — true memory, not amortized tokens."""
         resident = getattr(self.replicas[i], "kv_occupancy", lambda: 0)()
         with self._lock:
             l = self._loads[i]
             return l.queued + l.inflight + RESIDENT_WEIGHT * resident
 
+    def kv_free_blocks(self, i: int):
+        """Free (unreserved) paged-KV blocks of replica i; None when the
+        replica has no block pool."""
+        fn = getattr(self.replicas[i], "kv_free_blocks", None)
+        return fn() if fn is not None else None
+
     def least_loaded(self) -> int:
-        return min(range(len(self.replicas)), key=self.load)
+        """Replica for routed batch work. A replica whose paged-KV pool
+        is EXHAUSTED only receives work when every replica is exhausted
+        (admission backpressure at the routing tier)."""
+        def key(i):
+            free = self.kv_free_blocks(i)
+            return (0 if (free is None or free > 0) else 1, self.load(i))
+        return min(range(len(self.replicas)), key=key)
 
     # -- slot-aware decode routing (continuous batching) --------------------
     def decode_slots_free(self, i: int):
@@ -133,10 +147,14 @@ class EnginePool:
         """Replica for a new continuous-batching decode: a replica with a
         free decode slot starts the sequence NEXT iteration, while a full
         loop queues it behind a whole sequence — so free-slot replicas
-        win outright; ties fall back to token load."""
+        win outright; a block-exhausted paged pool demotes a replica the
+        same way (its loop would defer admission); ties fall back to
+        token load."""
         def key(i):
-            free = self.decode_slots_free(i)
-            has_free = free is None or free > 0
+            slots = self.decode_slots_free(i)
+            blocks = self.kv_free_blocks(i)
+            has_free = (slots is None or slots > 0) and \
+                (blocks is None or blocks > 0)
             return (0 if has_free else 1, self.load(i))
         return min(range(len(self.replicas)), key=key)
 

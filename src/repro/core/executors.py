@@ -358,7 +358,6 @@ def run_control(prim, ctx):
     if prim.op == P.AGGREGATE:
         out = _out_key(prim)
         if "concat_of" in prim.config:
-            base = prim.config["concat_of"]
             keys = sorted((k for k in prim.consumes),
                           key=lambda s: int(s.rsplit("#s", 1)[1])
                           if "#s" in s else 0)

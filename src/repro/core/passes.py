@@ -86,7 +86,6 @@ def _chained_partner(g: Graph, n: Primitive) -> Optional[Primitive]:
 def _split_stages(g: Graph, n: Primitive, maxb: int, engines):
     stages = math.ceil(n.num_requests / maxb)
     partner = _chained_partner(g, n)
-    out_key = next(iter(n.produces - {None}))
     chain = [n] if partner is None else [n, partner]
 
     made = {}  # (prim, stage) -> clone

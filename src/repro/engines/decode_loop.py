@@ -78,13 +78,19 @@ class DecodeSeq:
 class ContinuousDecodeLoop(threading.Thread):
     """Persistent decode loop over an engine's decode slots."""
 
-    def __init__(self, engine, max_slots: int, idle_wait: float = 0.05):
+    def __init__(self, engine, max_slots: int, idle_wait: float = 0.05,
+                 admit_timeout: float = 60.0):
         super().__init__(
             daemon=True,
             name=f"decode-loop-{getattr(engine, 'name', '?')}")
         self.engine = engine
         self.max_slots = max(1, int(max_slots))
         self.idle_wait = idle_wait
+        # how long a sequence may sit at the queue head with the engine
+        # refusing admission (KV backpressure) before it is failed —
+        # without this, one unsatisfiable waiter starves every decode
+        # submitted after it
+        self.admit_timeout = admit_timeout
         self.waiting: deque = deque()
         self.active: List[DecodeSeq] = []
         self.cv = threading.Condition()
@@ -122,14 +128,34 @@ class ContinuousDecodeLoop(threading.Thread):
 
     # -- loop internals -----------------------------------------------------
     def _admit_locked(self):
+        """Admit waiters into free slots; returns sequences that timed
+        out waiting for engine admission (evicted by the caller OUTSIDE
+        the condition variable — eviction hooks may take engine locks)."""
+        expired = []
+        admit_hook = getattr(self.engine, "try_admit", None)
         while self.waiting and len(self.active) < self.max_slots:
-            seq = self.waiting.popleft()
+            seq = self.waiting[0]
+            # engine-level admission control (paged KV backpressure: the
+            # engine reserves the sequence's worst-case blocks, or defers
+            # it). Head-of-line FIFO: if the head cannot be admitted, stop
+            # — the loop retries every iteration / idle tick — unless it
+            # has been deferred past admit_timeout, in which case it is
+            # failed so it cannot starve the queue behind it.
+            if admit_hook is not None and not admit_hook(seq):
+                if self.admit_timeout is not None and \
+                        time.time() - seq.t_submit > self.admit_timeout:
+                    self.waiting.popleft()
+                    expired.append(seq)
+                    continue
+                break
+            self.waiting.popleft()
             seq.t_admit = time.time()
             self.active.append(seq)
             self.admissions.append((seq.sid, self.iterations))
             hook = getattr(self.engine, "note_slot_acquired", None)
             if hook is not None:
                 hook(seq)
+        return expired
 
     def _evict(self, seq: DecodeSeq, error: Optional[Exception] = None):
         seq.t_done = time.time()
@@ -158,12 +184,18 @@ class ContinuousDecodeLoop(threading.Thread):
             with self.cv:
                 if not self.running:
                     break
-                self._admit_locked()
-                if not self.active:
+                expired = self._admit_locked()
+                if not self.active and not expired:
                     self.cv.wait(timeout=self.idle_wait)
                     continue
                 batch = list(self.active)
                 self.max_resident = max(self.max_resident, len(batch))
+            for seq in expired:
+                self._evict(seq, error=TimeoutError(
+                    f"decode {seq.sid} not admitted within "
+                    f"{self.admit_timeout}s (KV pool backpressure)"))
+            if not batch:
+                continue
             try:
                 self.engine.decode_iteration(batch)
             except Exception as e:  # noqa: BLE001 — fail resident seqs

@@ -10,8 +10,18 @@ Runs a real (engine-scale) JAX decoder with:
     compiled programs,
   - an instruction prefix cache (LlamaDistPC baseline's cache-reuse).
 
+``paged=True`` switches the KV store to the BLOCK-PAGED pool
+(serving/kv_cache.py): one physical cache per replica carved into
+fixed-size token blocks, per-sequence block tables instead of private
+dense pytrees, O(1) copy-on-write prefix forks, and a decode loop that
+indexes the shared pool through the tables — admission/eviction never
+stacks or unstacks KV, and occupancy/backpressure are counted in
+allocated blocks (true memory). ``paged=False`` (default) preserves the
+dense per-sequence path.
+
 On TPU the attention inside apply_model would route to the Pallas
-flash_prefill / decode_attention kernels; on CPU the XLA path is used.
+flash_prefill / decode_attention kernels (paged_decode_attention for the
+paged pool); on CPU the XLA take/scatter path is used.
 """
 from __future__ import annotations
 
@@ -49,12 +59,27 @@ class SeqState:
     last_token: int = 1         # BOS
 
 
+@dataclass
+class PagedSeqState:
+    """Paged-mode sequence handle: a block table (physical block id per
+    logical block) into the replica's shared pool, instead of a private
+    cache pytree. Forking copies the table and bumps refcounts — O(table),
+    no tensor copies."""
+    table: List[int] = field(default_factory=list)
+    pos: int = 0
+    last_token: int = 1         # BOS
+
+
 class LLMEngine(DecodeLoopMixin):
     kind = "llm"
 
+    ALLOC_TIMEOUT = 30.0        # prefill backpressure wait (s)
+
     def __init__(self, name: str, cfg: ModelConfig, *, max_len: int = 512,
                  seed: int = 0, max_batch: int = 8, max_tokens: int = 1024,
-                 dtype=jnp.float32, stream_chunk: int = 4):
+                 dtype=jnp.float32, stream_chunk: int = 4,
+                 paged: bool = False, block_size: int = 16,
+                 num_blocks: Optional[int] = None):
         self.name = name
         self.cfg = cfg
         self.max_len = max_len
@@ -65,10 +90,44 @@ class LLMEngine(DecodeLoopMixin):
         self.params = init_params(cfg, jax.random.key(seed), dtype)
         self.states: Dict[str, SeqState] = {}
         self.prefix_cache: Dict[str, SeqState] = {}
+        self._prefix_toks: Dict[str, list] = {}   # instr -> token list
+        self.use_prefix_cache = False      # enabled by orchestrator warmup
         self._lock = threading.Lock()
         self._step = self._build_step()
-        self.meter = kvc.OccupancyMeter(kvc.bytes_per_token(cfg),
-                                        decode_slots=max_batch)
+        self._pstep = self._build_prefill_step()
+        self.paged = paged
+        self.block_size = block_size
+        if paged:
+            # default pool: the dense worst case (max_batch full-length
+            # sequences) plus the reserved pad block
+            self.num_blocks = num_blocks if num_blocks is not None else \
+                1 + max_batch * kvc.blocks_for(max_len, block_size)
+            self.alloc = kvc.BlockAllocator(self.num_blocks)
+            self.pool = kvc.init_paged_pool(cfg, self.num_blocks, block_size)
+            self._paged_step = self._build_paged_step()
+            self._paged_pstep = self._build_paged_prefill_step()
+            # block-table width buckets (jit shape reuse), capped at the
+            # engine's own maximum
+            cap = kvc.blocks_for(max_len, block_size)
+            self._blk_buckets = tuple(b for b in
+                                      (1, 2, 4, 8, 16, 32, 64, 128, 256)
+                                      if b < cap) + (cap,)
+            # worst-case blocks still owed to admitted decode sequences
+            # (admission reservations — guarantees resident decodes never
+            # hit OutOfBlocks)
+            self._decode_reserved: Dict[str, int] = {}
+            # serializes ALL paged-pool mutation: block planning, COW
+            # copies, and the jitted steps (prefill thread vs decode-loop
+            # thread share one physical pool)
+            self._paged_lock = threading.RLock()
+            self.meter = kvc.OccupancyMeter(
+                kvc.bytes_per_token(cfg), decode_slots=max_batch,
+                allocator=self.alloc, block_size=block_size,
+                block_bytes=kvc.paged_block_bytes(cfg, block_size))
+        else:
+            self.num_blocks = 0
+            self.meter = kvc.OccupancyMeter(kvc.bytes_per_token(cfg),
+                                            decode_slots=max_batch)
         self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "calls": 0,
                       "decode_iters": 0, "busy_s": 0.0}
         # decode_iteration (loop thread) and prefill/decode batches
@@ -79,9 +138,11 @@ class LLMEngine(DecodeLoopMixin):
         self._reset_batch_cache()
 
     def clone(self, idx: int = 1) -> "LLMEngine":
-        """Pool replica: SHARED weights, tokenizer, compiled step and
-        instruction-prefix cache; PER-REPLICA sequence/KV store, lock,
-        occupancy meter and stats."""
+        """Pool replica: SHARED weights, tokenizer and compiled steps;
+        PER-REPLICA sequence/KV store, lock, occupancy meter and stats.
+        The instruction-prefix cache is shared in dense mode (states are
+        portable pytrees) but PER-REPLICA in paged mode (a prefix state's
+        blocks live in one replica's physical pool)."""
         c = LLMEngine.__new__(LLMEngine)
         c.name = f"{self.name}.r{idx}"
         c.cfg = self.cfg
@@ -92,11 +153,32 @@ class LLMEngine(DecodeLoopMixin):
         c.tok = self.tok
         c.params = self.params
         c.states = {}
-        c.prefix_cache = self.prefix_cache
+        c.use_prefix_cache = self.use_prefix_cache
         c._lock = threading.Lock()
         c._step = self._step
-        c.meter = kvc.OccupancyMeter(self.meter.bytes_per_tok,
-                                     decode_slots=c.max_batch)
+        c._pstep = self._pstep
+        c.paged = self.paged
+        c.block_size = self.block_size
+        c.num_blocks = self.num_blocks
+        if self.paged:
+            c.prefix_cache = {}
+            c._prefix_toks = {}
+            c.alloc = kvc.BlockAllocator(self.num_blocks)
+            c.pool = kvc.init_paged_pool(c.cfg, c.num_blocks, c.block_size)
+            c._paged_step = self._paged_step
+            c._paged_pstep = self._paged_pstep
+            c._blk_buckets = self._blk_buckets
+            c._decode_reserved = {}
+            c._paged_lock = threading.RLock()
+            c.meter = kvc.OccupancyMeter(
+                self.meter.bytes_per_tok, decode_slots=c.max_batch,
+                allocator=c.alloc, block_size=c.block_size,
+                block_bytes=self.meter.block_bytes)
+        else:
+            c.prefix_cache = self.prefix_cache
+            c._prefix_toks = self._prefix_toks
+            c.meter = kvc.OccupancyMeter(self.meter.bytes_per_tok,
+                                         decode_slots=c.max_batch)
         c.stats = {"prefill_tokens": 0, "decode_tokens": 0, "calls": 0,
                    "decode_iters": 0, "busy_s": 0.0}
         c._stats_lock = threading.Lock()
@@ -106,8 +188,21 @@ class LLMEngine(DecodeLoopMixin):
         return c
 
     def kv_occupancy(self) -> int:
-        """Resident KV tokens on this replica (pool-router load input)."""
+        """Resident KV tokens on this replica (pool-router load input).
+        Paged engines report allocated blocks * block_size — the true
+        memory footprint, counting shared prefixes once."""
         return self.meter.tokens()
+
+    def kv_free_blocks(self) -> Optional[int]:
+        """Unreserved free pool blocks (None in dense mode) — the pool
+        router's admission-backpressure input. Deliberately LOCK-FREE
+        (allocator has its own lock, the reservation read is GIL-atomic):
+        the router polls every replica, and _paged_lock is held across
+        whole decode loops — taking it here would serialize routing
+        behind a busy replica's decode."""
+        if not self.paged:
+            return None
+        return max(0, self.alloc.free_blocks() - self._reserved_snapshot())
 
     # -- jitted batched step: write chunk, return logits of last position
     def _build_step(self):
@@ -121,12 +216,172 @@ class LLMEngine(DecodeLoopMixin):
 
         return jax.jit(step)
 
-    def new_state(self) -> SeqState:
+    def _build_prefill_step(self):
+        cfg = self.cfg
+
+        def step(params, tokens, cache, pos, last_idx):
+            # exact bucketed prefill: per-sequence logits at chunk index
+            # len(t)-1 (not the padded tail)
+            logits, cache, _ = apply_model(cfg, params, tokens, cache, pos,
+                                           q_block=256, remat=False,
+                                           logits_at=last_idx)
+            return logits[:, 0], cache
+
+        return jax.jit(step)
+
+    # The pool argument is DONATED in both paged steps: the engine holds
+    # the only reference (mutation is serialized by _paged_lock and
+    # self.pool is reassigned from the return value), so the update is
+    # in-place on backends with donation — no transient second pool.
+    def _build_paged_step(self):
+        cfg = self.cfg
+
+        def step(params, tokens, pool, tables, pos):
+            logits, pool, _ = apply_model(cfg, params, tokens, pool, pos,
+                                          q_block=256, remat=False,
+                                          logits_slice=1,
+                                          block_tables=tables)
+            return logits[:, -1], pool
+
+        return jax.jit(step, donate_argnums=(2,))
+
+    def _build_paged_prefill_step(self):
+        cfg = self.cfg
+
+        def step(params, tokens, pool, tables, pos, last_idx):
+            logits, pool, _ = apply_model(cfg, params, tokens, pool, pos,
+                                          q_block=256, remat=False,
+                                          logits_at=last_idx,
+                                          block_tables=tables)
+            return logits[:, 0], pool
+
+        return jax.jit(step, donate_argnums=(2,))
+
+    def new_state(self):
+        if self.paged:
+            return PagedSeqState()
         return SeqState(cache=kvc.init_cache(self.cfg, 1, self.max_len))
 
-    def fork_state(self, st: SeqState) -> SeqState:
+    def fork_state(self, st):
+        """Copy-on-write fork: paged mode shares every block (refcount
+        bump per table entry, no tensor copies); dense mode shares the
+        immutable cache arrays until the next functional write."""
+        if self.paged:
+            with self._paged_lock:
+                for b in st.table:
+                    self.alloc.incref(b)
+                return PagedSeqState(table=list(st.table), pos=st.pos,
+                                     last_token=st.last_token)
         return SeqState(cache=jax.tree.map(lambda a: a, st.cache),
                         pos=st.pos, last_token=st.last_token)
+
+    # -- paged block planning ----------------------------------------------
+    # (all helpers below require self._paged_lock held)
+    def _blocks_needed(self, st: PagedSeqState, n_new: int) -> int:
+        """Worst-case NEW blocks a write of n_new tokens at st.pos needs:
+        table growth plus copy-on-write of shared blocks in the write
+        range."""
+        bs = self.block_size
+        first, last = st.pos // bs, (st.pos + n_new - 1) // bs
+        grow = max(0, last + 1 - len(st.table))
+        cow = sum(1 for bi in range(first, min(last + 1, len(st.table)))
+                  if self.alloc.refcount(st.table[bi]) > 1)
+        return grow + cow
+
+    def _prepare_write(self, st: PagedSeqState, n_new: int) -> int:
+        """Make st.table cover positions [0, pos+n_new) with exclusively
+        owned blocks over the write range: grow the table from the free
+        list and copy-on-write any shared block about to be written —
+        all COW pairs in ONE batched (donated) copy, and decref only
+        AFTER the copy, so concurrent owners keep seeing refcount>1 and
+        COW their own writes. Returns blocks consumed (reservation
+        drawdown)."""
+        bs = self.block_size
+        first, last = st.pos // bs, (st.pos + n_new - 1) // bs
+        consumed = 0
+        srcs, dsts = [], []
+        for bi in range(first, last + 1):
+            if bi < len(st.table):
+                b = st.table[bi]
+                if self.alloc.refcount(b) > 1:
+                    dst = self.alloc.alloc()
+                    consumed += 1
+                    srcs.append(b)
+                    dsts.append(dst)
+                    st.table[bi] = dst
+            else:
+                st.table.append(self.alloc.alloc())
+                consumed += 1
+        if srcs:
+            self.pool = kvc.copy_pool_blocks(self.pool, srcs, dsts)
+            for b in srcs:
+                self.alloc.decref(b)
+        return consumed
+
+    def _reserved_locked(self) -> int:
+        return sum(self._decode_reserved.values())
+
+    def _reserved_snapshot(self) -> int:
+        """Lock-free reservation total for wait predicates: dict(d) is a
+        C-level (GIL-atomic) copy, so concurrent try_admit/release
+        mutations cannot raise mid-iteration. Must NOT take _paged_lock —
+        the caller holds the allocator condition, and lock-holders call
+        back into the allocator (lock-order inversion)."""
+        return sum(dict(self._decode_reserved).values())
+
+    def _table_batch(self, states: List[PagedSeqState], B: int, n_new,
+                     pad_new: Optional[int] = None):
+        """Block-table + position arrays for a padded batch: width is the
+        bucketed max of ceil((pos+n_new)/bs) — n_new a scalar or a
+        per-state list; padding rows cover pad_new (default n_new) write
+        positions with the reserved pad block (their writes land on
+        scratch)."""
+        bs = self.block_size
+        ns = n_new if isinstance(n_new, list) else [n_new] * len(states)
+        need = [kvc.blocks_for(s.pos + n, bs) for s, n in zip(states, ns)]
+        need.append(kvc.blocks_for(
+            pad_new if pad_new is not None else max(ns, default=1), bs))
+        if max(need) > self._blk_buckets[-1]:
+            # loud failure instead of silent table truncation + clamped
+            # scatter corrupting the last block
+            raise ValueError(
+                f"{self.name}: write needs {max(need)} blocks but tables "
+                f"cap at {self._blk_buckets[-1]} (max_len {self.max_len})")
+        maxblk = _bucket(max(need), self._blk_buckets)
+        tables = np.full((B, maxblk), kvc.PAD_BLOCK, np.int32)
+        for i, s in enumerate(states):
+            n = min(len(s.table), maxblk)
+            tables[i, :n] = s.table[:n]
+        pos = np.zeros((B,), np.int32)
+        pos[:len(states)] = [s.pos for s in states]
+        return jnp.asarray(tables), jnp.asarray(pos)
+
+    def _acquire_with_blocks(self, pairs):
+        """Admission backpressure: acquire self._paged_lock WITH enough
+        unreserved free blocks to cover the planned writes — `pairs` is
+        [(state, n_new_tokens), ...] — (the check and the subsequent
+        allocation happen under one lock hold, so admitted decodes'
+        reservations cannot race in between). Waits unlocked so the
+        decode loop keeps draining; caller must release the lock."""
+        deadline = time.time() + self.ALLOC_TIMEOUT
+        timed_out = False
+        while True:
+            self._paged_lock.acquire()
+            needed = sum(self._blocks_needed(s, n) for s, n in pairs)
+            if needed <= self.alloc.free_blocks() - self._reserved_locked():
+                return
+            self._paged_lock.release()
+            # one authoritative under-lock recheck happens above even
+            # after a wait timeout (a missed wakeup must not fail a
+            # request the pool could serve)
+            if timed_out:
+                raise kvc.OutOfBlocks(
+                    f"{self.name}: paged KV pool exhausted "
+                    f"({self.alloc.capacity} blocks, "
+                    f"{self.alloc.free_blocks()} free, need {needed})")
+            timed_out = not self.alloc.wait_for_free(
+                needed, timeout=deadline - time.time(),
+                reserved_fn=self._reserved_snapshot)
 
     # -- batched execution -------------------------------------------------
     def _stack_states(self, states: List[SeqState]):
@@ -136,37 +391,61 @@ class LLMEngine(DecodeLoopMixin):
         return cache, pos
 
     def _unstack(self, cache, states: List[SeqState]):
-        n = len(states)
         for i, s in enumerate(states):
             s.cache = jax.tree.map(lambda a, i=i: a[:, i:i + 1], cache)
 
     def prefill_batch(self, items):
         """items: list of (state, token_list). Pads to a (B,S) bucket and
-        runs one chunked-prefill step per sequence position offset."""
+        runs one chunked-prefill step per sequence position offset. The
+        returned per-sequence logits are EXACT: gathered at chunk index
+        len(t)-1, so bucketed (right-padded) prefill matches unpadded
+        prefill token-for-token."""
         t0 = time.time()
         B = _bucket(len(items), BUCKETS_B)
         S = _bucket(max(len(t) for _, t in items), BUCKETS_S)
-        states = [s for s, _ in items]
-        pad_states = states + [self.new_state()
-                               for _ in range(B - len(states))]
         toks = np.zeros((B, S), np.int32)
+        last_idx = np.zeros((B,), np.int32)
         for i, (_, t) in enumerate(items):
             toks[i, :len(t)] = t[:S]
-        cache, pos = self._stack_states(pad_states)
-        logits, cache = self._step(self.params, jnp.asarray(toks), cache,
-                                   pos)
-        self._unstack(cache, pad_states)
+            last_idx[i] = min(len(t), S) - 1
+        if self.paged:
+            logits = self._paged_prefill(items, B, S, toks, last_idx)
+        else:
+            states = [s for s, _ in items]
+            pad_states = states + [self.new_state()
+                                   for _ in range(B - len(states))]
+            cache, pos = self._stack_states(pad_states)
+            logits, cache = self._pstep(self.params, jnp.asarray(toks),
+                                        cache, pos, jnp.asarray(last_idx))
+            self._unstack(cache, pad_states)
         for i, (s, t) in enumerate(items):
             s.pos += len(t)
-            # note: last VALID logit belongs to position len(t)-1; with
-            # right-padding the final-position logit is only exact when
-            # len(t)==S, so keep last_token from argmax over the padded
-            # tail — acceptable for the engine-scale demo.
             s.last_token = int(jnp.argmax(logits[i]))
         with self._stats_lock:
             self.stats["prefill_tokens"] += sum(len(t) for _, t in items)
             self.stats["calls"] += 1
             self.stats["busy_s"] += time.time() - t0
+
+    def _paged_prefill(self, items, B, S, toks, last_idx):
+        """Paged prefill: allocate/COW only the blocks the REAL tokens
+        write — padding-tail positions beyond each row's last block fall
+        through to the reserved pad block (the batch table defaults to
+        it), and the causal mask keeps every real query blind to keys
+        past its own position, so bucket padding costs zero capacity.
+        One step then indexes the shared pool through the batch table."""
+        states = [s for s, _ in items]
+        lens = [min(len(t), S) for _, t in items]
+        self._acquire_with_blocks(list(zip(states, lens)))
+        try:
+            for s, n in zip(states, lens):
+                self._prepare_write(s, n)
+            tables, pos = self._table_batch(states, B, S)
+            logits, self.pool = self._paged_pstep(
+                self.params, jnp.asarray(toks), self.pool, tables, pos,
+                jnp.asarray(last_idx))
+        finally:
+            self._paged_lock.release()
+        return logits
 
     def decode_batch(self, items, on_chunk=None):
         """items: list of (state, n_tokens). Greedy continuous decode; all
@@ -178,30 +457,33 @@ class LLMEngine(DecodeLoopMixin):
         n_max = max(n for _, n in items)
         B = _bucket(len(items), BUCKETS_B)
         states = [s for s, _ in items]
-        pad_states = states + [self.new_state()
-                               for _ in range(B - len(states))]
-        cache, pos = self._stack_states(pad_states)
-        cur = jnp.array([[s.last_token] for s in pad_states], jnp.int32)
-        outs = [[] for _ in pad_states]
-        emitted = [0] * len(items)
-        for t in range(n_max):
-            logits, cache = self._step(self.params, cur, cache, pos)
-            nxt = jnp.argmax(logits, axis=-1)
-            for i in range(len(pad_states)):
-                outs[i].append(int(nxt[i]))
-            cur = nxt[:, None].astype(jnp.int32)
-            pos = pos + 1
-            if on_chunk and ((t + 1) % self.stream_chunk == 0
-                             or t + 1 == n_max):
-                for i, (_, n) in enumerate(items):
-                    m = min(t + 1, n)
-                    if m > emitted[i]:
-                        emitted[i] = m
-                        on_chunk(i, outs[i][:m])
-        self._unstack(cache, pad_states)
+        if self.paged:
+            outs = self._paged_decode_batch(items, B, n_max, on_chunk)
+        else:
+            pad_states = states + [self.new_state()
+                                   for _ in range(B - len(states))]
+            cache, pos = self._stack_states(pad_states)
+            cur = jnp.array([[s.last_token] for s in pad_states], jnp.int32)
+            outs = [[] for _ in pad_states]
+            emitted = [0] * len(items)
+            for t in range(n_max):
+                logits, cache = self._step(self.params, cur, cache, pos)
+                nxt = jnp.argmax(logits, axis=-1)
+                for i in range(len(pad_states)):
+                    outs[i].append(int(nxt[i]))
+                cur = nxt[:, None].astype(jnp.int32)
+                pos = pos + 1
+                if on_chunk and ((t + 1) % self.stream_chunk == 0
+                                 or t + 1 == n_max):
+                    for i, (_, n) in enumerate(items):
+                        m = min(t + 1, n)
+                        if m > emitted[i]:
+                            emitted[i] = m
+                            on_chunk(i, outs[i][:m])
+            self._unstack(cache, pad_states)
         results = []
         for i, (s, n) in enumerate(items):
-            s.pos = int(pos[i]) - (n_max - n)
+            s.pos += n          # overshoot steps (n_max - n) are discarded
             s.last_token = outs[i][n - 1]
             results.append(outs[i][:n])
         with self._stats_lock:
@@ -209,6 +491,47 @@ class LLMEngine(DecodeLoopMixin):
             self.stats["calls"] += 1
             self.stats["busy_s"] += time.time() - t0
         return results
+
+    def _paged_decode_batch(self, items, B, n_max, on_chunk):
+        """Run-to-completion decode over the paged pool: pre-allocate
+        each sequence's OWN n-step write range (COW resolved up front),
+        then step with a FIXED batch block table. A shorter member's
+        position FREEZES at its own horizon once it finishes — surplus
+        steps rewrite its next-to-write slot, beyond its valid region —
+        so no overshoot blocks are ever allocated."""
+        states = [s for s, _ in items]
+        self._acquire_with_blocks(list(items))
+        try:
+            for s, n in items:
+                self._prepare_write(s, n)
+            tables, pos = self._table_batch(
+                states, B, [n for _, n in items], pad_new=1)
+            limit = np.ones((B,), np.int32)
+            limit[:len(states)] = [s.pos + n for s, n in items]
+            limit = jnp.asarray(limit)
+            cur = np.ones((B, 1), np.int32)
+            cur[:len(states), 0] = [s.last_token for s in states]
+            cur = jnp.asarray(cur)
+            outs = [[] for _ in range(B)]
+            emitted = [0] * len(items)
+            for t in range(n_max):
+                logits, self.pool = self._paged_step(
+                    self.params, cur, self.pool, tables, pos)
+                nxt = jnp.argmax(logits, axis=-1)
+                for i in range(B):
+                    outs[i].append(int(nxt[i]))
+                cur = nxt[:, None].astype(jnp.int32)
+                pos = jnp.minimum(pos + 1, limit)
+                if on_chunk and ((t + 1) % self.stream_chunk == 0
+                                 or t + 1 == n_max):
+                    for i, (_, n) in enumerate(items):
+                        m = min(t + 1, n)
+                        if m > emitted[i]:
+                            emitted[i] = m
+                            on_chunk(i, outs[i][:m])
+        finally:
+            self._paged_lock.release()
+        return outs
 
     # -- iteration-level continuous batching --------------------------------
     # (loop lifecycle — start/stop/slots — comes from DecodeLoopMixin)
@@ -218,18 +541,58 @@ class LLMEngine(DecodeLoopMixin):
         `max_new` tokens. on_text(text_so_far) fires every iteration;
         on_done(seq) fires at eviction. Returns the DecodeSeq handle."""
         st = self.states[sid]
+        max_new = self._clamp_new(st, max_new)
+        if self.paged and \
+                kvc.blocks_for(st.pos + max_new, self.block_size) > \
+                self.alloc.capacity:
+            raise ValueError(
+                f"decode {sid}: pos {st.pos} + {max_new} new tokens can "
+                f"never fit the {self.alloc.capacity}-block pool")
         seq = DecodeSeq(sid, st, max_new,
                         text_fn=lambda s: self.tok.decode(s.tokens),
                         on_text=on_text, on_done=on_done)
         return self.start_decode_loop().submit(seq)
 
+    def try_admit(self, seq: DecodeSeq) -> bool:
+        """Block-level admission control (decode-loop hook): admit only
+        when the pool's unreserved free blocks cover this sequence's
+        worst-case growth, and RESERVE them — admitted sequences can then
+        never hit OutOfBlocks mid-decode. Dense mode always admits.
+
+        NON-BLOCKING on the pool lock: the loop calls this while holding
+        its condition variable (which slots_free/submit and the pool
+        router also take), so waiting here for a long-held _paged_lock
+        (a prefill step, a run-to-completion decode) would stall routing
+        for every replica. If the pool is busy, defer — the loop retries
+        next iteration."""
+        if not self.paged:
+            return True
+        if not self._paged_lock.acquire(blocking=False):
+            return False
+        try:
+            needed = self._blocks_needed(seq.state, seq.n)
+            if needed <= (self.alloc.free_blocks()
+                          - self._reserved_locked()):
+                self._decode_reserved[seq.sid] = needed
+                return True
+            return False
+        finally:
+            self._paged_lock.release()
+
     def note_slot_acquired(self, seq: DecodeSeq):
         self.meter.acquire_slot(seq.sid)
 
     def note_slot_released(self, seq: DecodeSeq):
-        # an evicted sequence's KV must be current in its own state
-        # before the slot is reused (its sid may decode again later)
-        self._flush_batch_cache()
+        if self.paged:
+            with self._paged_lock:
+                dropped = self._decode_reserved.pop(seq.sid, None)
+            if dropped:
+                # headroom improved without a decref — wake prefill waiters
+                self.alloc.notify_waiters()
+        else:
+            # an evicted sequence's KV must be current in its own state
+            # before the slot is reused (its sid may decode again later)
+            self._flush_batch_cache()
         self.meter.release_slot(seq.sid)
 
     def _pad_states(self, k: int) -> List[SeqState]:
@@ -258,22 +621,44 @@ class LLMEngine(DecodeLoopMixin):
         or eviction) — steady-state iterations pay no per-token
         stack/unstack of the KV pytree. KV occupancy advances per
         iteration — one token per resident sequence — not per batch up
-        front."""
+        front.
+
+        In PAGED mode residency changes are free: there is no stacked
+        batch cache at all — every iteration scatters one token per
+        sequence into the shared pool through a block table rebuilt from
+        host-side lists (B*maxblk int32s, trivial next to the KV pytree
+        restack the dense path pays on every admission/eviction)."""
         t0 = time.time()
         B = _bucket(len(seqs), BUCKETS_B)
-        key = tuple(id(r) for r in seqs)
-        if key != self._batch_key:
-            self._flush_batch_cache()
-            self._batch_states = [r.state for r in seqs] + \
-                self._pad_states(B - len(seqs))
-            self._batch_cache, self._batch_pos = \
-                self._stack_states(self._batch_states)
-            self._batch_key = key
-        cur = jnp.array([[s.last_token] for s in self._batch_states],
-                        jnp.int32)
-        logits, self._batch_cache = self._step(
-            self.params, cur, self._batch_cache, self._batch_pos)
-        self._batch_pos = self._batch_pos + 1
+        if self.paged:
+            with self._paged_lock:
+                for r in seqs:
+                    got = self._prepare_write(r.state, 1)
+                    if got:
+                        resv = self._decode_reserved.get(r.sid)
+                        if resv is not None:
+                            self._decode_reserved[r.sid] = max(0,
+                                                               resv - got)
+                states = [r.state for r in seqs]
+                tables, pos = self._table_batch(states, B, 1)
+                cur = np.ones((B, 1), np.int32)
+                cur[:len(states), 0] = [s.last_token for s in states]
+                logits, self.pool = self._paged_step(
+                    self.params, jnp.asarray(cur), self.pool, tables, pos)
+        else:
+            key = tuple(id(r) for r in seqs)
+            if key != self._batch_key:
+                self._flush_batch_cache()
+                self._batch_states = [r.state for r in seqs] + \
+                    self._pad_states(B - len(seqs))
+                self._batch_cache, self._batch_pos = \
+                    self._stack_states(self._batch_states)
+                self._batch_key = key
+            cur = jnp.array([[s.last_token] for s in self._batch_states],
+                            jnp.int32)
+            logits, self._batch_cache = self._step(
+                self.params, cur, self._batch_cache, self._batch_pos)
+            self._batch_pos = self._batch_pos + 1
         nxt = jnp.argmax(logits, axis=-1)
         for i, r in enumerate(seqs):
             tok = int(nxt[i])
@@ -287,35 +672,84 @@ class LLMEngine(DecodeLoopMixin):
             self.stats["busy_s"] += time.time() - t0
 
     # -- high-level ops used by the schedulers ------------------------------
+    def _match_prefix_locked(self, toks):
+        """Longest cached instruction whose TOKEN sequence prefixes
+        `toks` (self._lock held; token lists are cached at warmup, so
+        matching is pure list comparison). Returns
+        (prefix_state, prefix_tokens) or (None, None)."""
+        best_st, best_ptoks = None, None
+        for instr, st in self.prefix_cache.items():
+            ptoks = self._prefix_toks.get(instr)
+            if ptoks is None:
+                ptoks = self._prefix_toks[instr] = self.tok.encode(instr)
+            if len(ptoks) <= len(toks) and toks[:len(ptoks)] == ptoks \
+                    and (best_ptoks is None or len(ptoks) > len(best_ptoks)):
+                best_st, best_ptoks = st, ptoks
+        return best_st, best_ptoks
+
     def op_prefill(self, task_batch):
         """task_batch: list of dicts with keys:
-        sid, text, continue_partial(bool), prefix_instruction(str|None)."""
+        sid, text, continue_partial(bool), prefix_state(optional).
+
+        With ``use_prefix_cache`` on (set by the orchestrator's prefix
+        warmup), a FRESH sequence whose prompt starts with a cached
+        instruction forks that instruction's KV state instead of
+        re-prefilling it — in paged mode an O(table) copy-on-write block
+        share, in dense mode a functional pytree share. Only the
+        remaining suffix tokens are prefilled (chunked prefill makes
+        this exactly equivalent to prefilling the whole prompt)."""
         items = []
         for t in task_batch:
             sid = t["sid"]
+            toks = self.tok.encode(t["text"])
+            forked = False
             with self._lock:
                 st = self.states.get(sid)
                 if st is None:
-                    if t.get("prefix_state") is not None:
-                        st = self.fork_state(t["prefix_state"])
-                    else:
-                        st = self.new_state()
+                    ps = t.get("prefix_state")
+                    if ps is None and self.use_prefix_cache:
+                        ps, ptoks = self._match_prefix_locked(toks)
+                        if ps is not None:
+                            toks = toks[len(ptoks):]
+                    st = self.fork_state(ps) if ps is not None \
+                        else self.new_state()
                     self.states[sid] = st
-            toks = self.tok.encode(t["text"])[: self.max_len - st.pos - 8]
+                    forked = ps is not None
+            toks = toks[: self.max_len - st.pos - 8]
+            if forked and not toks:
+                # prompt == cached instruction: the forked state is
+                # already complete (pos and last_token carried over) —
+                # prefilling a spurious SEP would diverge from the cold
+                # path
+                continue
             toks = toks or [HashTokenizer.SEP]
             self.meter.advance(sid, len(toks))
             items.append((st, toks))
-        self.prefill_batch(items)
+        if items:
+            self.prefill_batch(items)
         return [None] * len(task_batch)
 
+    def _clamp_new(self, st, n: int) -> int:
+        """Cap a decode request to the sequence's remaining KV capacity —
+        writes past max_len would silently clamp into the last cache
+        slots (dense) or the last table block (paged) and corrupt it."""
+        cap = self.max_len - st.pos
+        if cap <= 0:
+            raise ValueError(
+                f"{self.name}: sequence at pos {st.pos} has no KV "
+                f"capacity left (max_len {self.max_len})")
+        return min(int(n), cap)
+
     def op_decode(self, task_batch, on_chunk=None):
-        """task_batch: list of dicts: sid, max_new. Returns texts.
+        """task_batch: list of dicts: sid, max_new (capped to the
+        sequence's remaining max_len capacity). Returns texts.
         on_chunk(i, text_so_far): incremental decode emission."""
         items = []
         for t in task_batch:
             st = self.states[t["sid"]]
-            self.meter.advance(t["sid"], int(t["max_new"]))
-            items.append((st, int(t["max_new"])))
+            n = self._clamp_new(st, int(t["max_new"]))
+            self.meter.advance(t["sid"], n)
+            items.append((st, n))
         cb = None
         if on_chunk is not None:
             cb = lambda i, ids: on_chunk(i, self.tok.decode(ids))  # noqa: E731
@@ -332,9 +766,17 @@ class LLMEngine(DecodeLoopMixin):
             self.prefill_batch([(st, toks)])
             with self._lock:
                 self.prefix_cache[instruction] = st
+                self._prefix_toks[instruction] = toks
         return st
 
     def release(self, sid: str):
         with self._lock:
-            self.states.pop(sid, None)
+            st = self.states.pop(sid, None)
+        if self.paged and st is not None:
+            with self._paged_lock:
+                for b in st.table:
+                    self.alloc.decref(b)      # frees when refcount hits 0
+                dropped = self._decode_reserved.pop(sid, None)
+            if dropped:
+                self.alloc.notify_waiters()
         self.meter.release(sid)

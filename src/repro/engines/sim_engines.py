@@ -63,9 +63,19 @@ class SimLLMEngine(DecodeLoopMixin):
                  prefill_ms_per_tok: float = 0.235, prefill_setup: float = 20,
                  decode_ms_per_step: float = 25.0,
                  decode_ms_per_extra_seq: float = 2.0,
-                 batch_factor: float = 0.78, stream_chunk: int = 4):
+                 batch_factor: float = 0.78, stream_chunk: int = 4,
+                 paged: bool = False, block_size: int = 16,
+                 num_blocks: int = 0):
         self.name = name
         self.max_batch = max_batch
+        # paged-KV ACCOUNTING (the sim models latency, not tensors): load
+        # is reported in allocated blocks — block-quantized resident
+        # tokens with shared instruction prefixes counted once — matching
+        # the real engine's block-based occupancy. num_blocks>0 also
+        # enables kv_free_blocks() for router backpressure.
+        self.paged = paged
+        self.block_size = block_size
+        self.num_blocks = num_blocks
         self.pf_tok = prefill_ms_per_tok
         self.pf_setup = prefill_setup
         self.dec_step = decode_ms_per_step
@@ -89,13 +99,36 @@ class SimLLMEngine(DecodeLoopMixin):
             prefill_ms_per_tok=self.pf_tok, prefill_setup=self.pf_setup,
             decode_ms_per_step=self.dec_step,
             decode_ms_per_extra_seq=self.dec_extra, batch_factor=self.bf,
-            stream_chunk=self.stream_chunk)
+            stream_chunk=self.stream_chunk, paged=self.paged,
+            block_size=self.block_size, num_blocks=self.num_blocks)
         c.prefix_cache = self.prefix_cache
         c.use_prefix_cache = self.use_prefix_cache
         return c
 
+    def kv_blocks(self) -> int:
+        """Allocated-block count: per-sequence positions block-quantized,
+        plus the shared instruction prefixes ONCE (their tokens are
+        excluded from forked sequences' pos by op_prefill)."""
+        bs = self.block_size
+        with self._lock:
+            blocks = sum(-(-st.get("pos", 0) // bs)
+                         for st in self.states.values())
+            blocks += sum(-(-st.get("pos", 0) // bs)
+                          for st in self.prefix_cache.values())
+        return blocks
+
+    def kv_free_blocks(self):
+        """Free pool blocks (None when no pool bound — dense accounting
+        or unbounded sim)."""
+        if not self.paged or not self.num_blocks:
+            return None
+        return max(0, self.num_blocks - self.kv_blocks())
+
     def kv_occupancy(self) -> int:
-        """Resident KV tokens on this replica (pool-router load input)."""
+        """Resident KV tokens on this replica (pool-router load input).
+        Paged accounting reports block-quantized true memory."""
+        if self.paged:
+            return self.kv_blocks() * self.block_size
         with self._lock:
             return sum(st.get("pos", 0) for st in self.states.values())
 
@@ -296,7 +329,9 @@ class SimSearchAPI(SearchAPIEngine):
 
 def build_sim_engines(*, llm_max_batch: int = 8, core_decode_ms: float = 25.0,
                       lite_scale: float = 0.25,
-                      llm_instances: int = 1) -> dict:
+                      llm_instances: int = 1,
+                      paged_kv: bool = False,
+                      kv_block_size: int = 16) -> dict:
     """Engine set with paper-calibrated profiles. lite_llm (gemma-2-2B
     contextualizer / llama-7B judge) is ~4x faster than the core LLM.
     llm_instances>1 puts the LLM engines behind EnginePools (the paper's
@@ -306,13 +341,15 @@ def build_sim_engines(*, llm_max_batch: int = 8, core_decode_ms: float = 25.0,
     from repro.core.engine_pool import EnginePool
 
     core = SimLLMEngine("core_llm", max_batch=llm_max_batch,
-                        decode_ms_per_step=core_decode_ms)
+                        decode_ms_per_step=core_decode_ms,
+                        paged=paged_kv, block_size=kv_block_size)
     lite = SimLLMEngine(
         "lite_llm", max_batch=llm_max_batch * 2,
         prefill_ms_per_tok=0.235 * lite_scale,
         prefill_setup=8,
         decode_ms_per_step=core_decode_ms * lite_scale,
-        decode_ms_per_extra_seq=0.5)
+        decode_ms_per_extra_seq=0.5,
+        paged=paged_kv, block_size=kv_block_size)
 
     n = llm_instances
     if n > 1:

@@ -13,6 +13,8 @@ from functools import partial
 import jax
 
 from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.decode_attention import \
+    paged_decode_attention as _paged_decode
 from repro.kernels.flash_prefill import flash_prefill as _prefill
 from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv
 
@@ -42,6 +44,16 @@ def decode_attention(q, k, v, length, *, window=None, cap=None, scale=None,
     interpret = default_interpret() if interpret is None else interpret
     return _decode(q, k, v, length, window=window, cap=cap, scale=scale,
                    bk=bk, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("window", "cap", "scale", "interpret"))
+def paged_decode_attention(q, k_pool, v_pool, block_tables, length, *,
+                           window=None, cap=None, scale=None,
+                           interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _paged_decode(q, k_pool, v_pool, block_tables, length,
+                         window=window, cap=cap, scale=scale,
+                         interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -55,6 +55,22 @@ def decode_attention_ref(q, k, v, length, *, window=None, cap=None,
     return jnp.einsum("bht,bthd->bhd", p, vr).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, length, *,
+                               window=None, cap=None, scale=None):
+    """XLA `take`-based paged decode path (also the CPU serving path):
+    gather each sequence's blocks into a contiguous linear view through
+    its block table, then run dense masked decode attention. k_pool/v_pool
+    (num_blocks, block_size, K, hd); block_tables (B, maxblk) int32."""
+    B, maxblk = block_tables.shape
+    bs = k_pool.shape[1]
+    k = jnp.take(k_pool, block_tables, axis=0).reshape(
+        B, maxblk * bs, *k_pool.shape[2:])
+    v = jnp.take(v_pool, block_tables, axis=0).reshape(
+        B, maxblk * bs, *v_pool.shape[2:])
+    return decode_attention_ref(q, k, v, length, window=window, cap=cap,
+                                scale=scale)
+
+
 def rwkv6_scan_ref(r, k, v, w, u, state0):
     """r,k,v,w (B,S,H,hd); u (H,hd); state0 (B,H,hd,hd) fp32.
     Sequential reference recurrence:

@@ -10,7 +10,10 @@ on the engine pool and serve queries.
 least-loaded replica). --streaming enables decode->downstream chunk
 pipelining; --continuous-batching dispatches decodes into each replica's
 persistent decode loop (iteration-level continuous batching) instead of
-run-to-completion batches (both Teola scheme only).
+run-to-completion batches (both Teola scheme only). --paged-kv carves
+each replica's KV cache into refcounted token blocks (copy-on-write
+instruction-prefix sharing, block-table indexed decode, occupancy and
+router backpressure counted in allocated blocks).
 """
 from __future__ import annotations
 
@@ -48,13 +51,18 @@ def main():
     ap.add_argument("--continuous-batching", action="store_true",
                     help="iteration-level decode batching (persistent "
                          "decode loop with per-iteration admission)")
+    ap.add_argument("--paged-kv", action="store_true",
+                    help="block-paged KV cache: COW prefix sharing, "
+                         "block-table decode, block-based occupancy "
+                         "routing with pool backpressure")
     args = ap.parse_args()
 
     if args.sim:
         from repro.engines.sim_engines import build_sim_engines
-        engines = build_sim_engines(llm_instances=args.llm_instances)
+        engines = build_sim_engines(llm_instances=args.llm_instances,
+                                    paged_kv=args.paged_kv)
     else:
-        engines = build_engines()
+        engines = build_engines(paged_kv=args.paged_kv)
         if args.llm_instances > 1:
             engines = build_pools(engines, {
                 "core_llm": args.llm_instances,

@@ -76,7 +76,6 @@ def build_case(cfg: ModelConfig, ishape: InputShape, mesh, *,
     step_fn(*args) is what the dry-run lowers and compiles."""
     B, S = ishape.global_batch, ishape.seq_len
     stub = cfg.embed_stub is not None
-    bspec = sr.data_spec(mesh, (B,))
 
     if ishape.mode == "train":
         params = abstract_params(cfg, mesh, jnp.float32)   # fp32 master

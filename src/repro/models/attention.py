@@ -141,9 +141,34 @@ def init_gqa_params(key, cfg, dtype):
     return p
 
 
-def gqa_layer(cfg, spec, p, x, cache, pos, q_block=512):
+def paged_write(pool, chunk, block_tables, positions):
+    """Scatter a (B,S,...) chunk into a (nb,bs,...) pool through per-seq
+    block tables: token (b,i) at absolute position p = positions[b,i]
+    lands in physical block block_tables[b, p // bs] at offset p % bs.
+    Distinct sequences own distinct blocks, so batch scatters never
+    collide (padding rows all target the reserved pad block — last write
+    wins on scratch data)."""
+    bs = pool.shape[1]
+    bid = jnp.take_along_axis(block_tables, positions // bs, axis=1)
+    return pool.at[bid, positions % bs].set(chunk.astype(pool.dtype))
+
+
+def paged_gather(pool, block_tables):
+    """Gather a sequence-contiguous (B, maxblk*bs, ...) linear view of the
+    pool through the block tables (the XLA `take` path; the Pallas kernel
+    streams blocks by table instead of materializing this view)."""
+    B, maxblk = block_tables.shape
+    g = jnp.take(pool, block_tables, axis=0)      # (B, maxblk, bs, ...)
+    return g.reshape(B, maxblk * pool.shape[1], *pool.shape[2:])
+
+
+def gqa_layer(cfg, spec, p, x, cache, pos, q_block=512, block_tables=None):
     """x (B,S,d). cache: elem dict or None (train). pos: dynamic scalar
-    (tokens already in cache; 0 for train). Returns (out, new_cache)."""
+    (tokens already in cache; 0 for train). With ``block_tables``
+    (B,maxblk), cache elems are PAGED POOLS (nb,bs,K,hd) shared across
+    sequences: writes scatter through the table, reads gather a linear
+    view, and sliding windows are enforced by the position mask alone
+    (no ring buffer). Returns (out, new_cache)."""
     B, S, d = x.shape
     hd = cfg.resolved_head_dim
     H, K = cfg.num_heads, cfg.num_kv_heads
@@ -172,6 +197,16 @@ def gqa_layer(cfg, spec, p, x, cache, pos, q_block=512):
                           q_block=q_block,
                           causal_skip=optflags.has("causal_skip"))
         new_cache = None
+    elif block_tables is not None:
+        kp = paged_write(cache["k"], k, block_tables, positions)
+        vp = paged_write(cache["v"], v, block_tables, positions)
+        new_cache = {"k": kp, "v": vp}
+        kb = paged_gather(kp, block_tables)
+        vb = paged_gather(vp, block_tables)
+        k_pos = kvc.slot_positions_linear(kb.shape[1], pos + S)
+        o = gqa_attention(q, kb.astype(x.dtype), vb.astype(x.dtype),
+                          positions, k_pos, scale=scale, window=spec.window,
+                          cap=cfg.attn_logit_softcap, q_block=q_block)
     else:
         kb, vb = cache["k"], cache["v"]
         T = kb.shape[1]
@@ -240,7 +275,7 @@ def _mla_core(q_eff, q_rope, ckv, krope, q_pos, k_pos, scale, window):
     return ctx.astype(q_eff.dtype)
 
 
-def mla_layer(cfg, spec, p, x, cache, pos, q_block=512):
+def mla_layer(cfg, spec, p, x, cache, pos, q_block=512, block_tables=None):
     m = cfg.mla
     B, S, d = x.shape
     H = cfg.num_heads
@@ -271,6 +306,13 @@ def mla_layer(cfg, spec, p, x, cache, pos, q_block=512):
         ckv, krope = ckv_new, krope_new
         k_pos = positions
         new_cache = None
+    elif block_tables is not None:
+        cp = paged_write(cache["ckv"], ckv_new, block_tables, positions)
+        kp = paged_write(cache["krope"], krope_new, block_tables, positions)
+        new_cache = {"ckv": cp, "krope": kp}
+        ckv = paged_gather(cp, block_tables).astype(x.dtype)
+        krope = paged_gather(kp, block_tables).astype(x.dtype)
+        k_pos = kvc.slot_positions_linear(ckv.shape[1], pos + S)
     else:
         ckv = kvc.write_linear(cache["ckv"], ckv_new, pos)
         krope = kvc.write_linear(cache["krope"], krope_new, pos)

@@ -95,8 +95,9 @@ def _ffn(cfg, p, x):
     return h @ p["w_down"]
 
 
-def apply_layer(cfg, spec, p, x, ce, pos, q_block):
-    """One transformer layer. ce: cache elem dict or None. Returns
+def apply_layer(cfg, spec, p, x, ce, pos, q_block, block_tables=None):
+    """One transformer layer. ce: cache elem dict or None (paged pool
+    elems when ``block_tables`` is given). Returns
     (x, new_cache_elem, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     B, S, d = x.shape
@@ -130,10 +131,12 @@ def apply_layer(cfg, spec, p, x, ce, pos, q_block):
                          if k in ("k", "v", "ckv", "krope")}
     if cfg.attention_kind == "mla":
         a_out, a_cache = attn.mla_layer(cfg, spec, p["attn"], h,
-                                        attn_cache_in, pos, q_block)
+                                        attn_cache_in, pos, q_block,
+                                        block_tables)
     else:
         a_out, a_cache = attn.gqa_layer(cfg, spec, p["attn"], h,
-                                        attn_cache_in, pos, q_block)
+                                        attn_cache_in, pos, q_block,
+                                        block_tables)
     nc = dict(a_cache) if a_cache is not None else None
 
     if spec.kind == "hybrid":
@@ -165,12 +168,17 @@ def apply_layer(cfg, spec, p, x, ce, pos, q_block):
 
 
 def apply_model(cfg: ModelConfig, params, inputs, cache=None, pos=0, *,
-                q_block=512, remat=True, logits_slice=None):
+                q_block=512, remat=True, logits_slice=None,
+                block_tables=None, logits_at=None):
     """inputs: int tokens (B,S) or float embeddings (B,S,d) for
     modality-frontend-stub archs. Returns (logits, new_cache, aux_loss).
 
     cache/pos implement chunked (partial) prefill and decode; cache=None is
-    training/eval over the full sequence.
+    training/eval over the full sequence. ``block_tables`` (B,maxblk)
+    switches the cache to the PAGED layout (shared block pools indexed per
+    sequence — see serving/kv_cache.py). ``logits_at`` (B,) computes the
+    head only at one per-sequence chunk index (exact last-token logits
+    under right-padded bucketed prefill), returning (B,1,vocab).
     """
     if jnp.issubdtype(inputs.dtype, jnp.integer):
         x = params["embed"][inputs]
@@ -194,7 +202,8 @@ def apply_model(cfg: ModelConfig, params, inputs, cache=None, pos=0, *,
             new_elems = []
             aux = jnp.zeros((), jnp.float32)
             for spec, pe, ce in zip(st.pattern, elems, caches):
-                x, nce, a = apply_layer(cfg, spec, pe, x, ce, pos, q_block)
+                x, nce, a = apply_layer(cfg, spec, pe, x, ce, pos, q_block,
+                                        block_tables)
                 aux = aux + a
                 if cache_present:
                     new_elems.append(nce)
@@ -212,7 +221,9 @@ def apply_model(cfg: ModelConfig, params, inputs, cache=None, pos=0, *,
         aux_total = aux_total + jnp.sum(auxs)
 
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    if logits_slice is not None:
+    if logits_at is not None:
+        x = x[jnp.arange(x.shape[0]), logits_at][:, None, :]
+    elif logits_slice is not None:
         x = x[:, -logits_slice:, :]
     head = (params["embed"].T if cfg.tie_embeddings
             else params["lm_head"])

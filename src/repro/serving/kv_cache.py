@@ -26,6 +26,7 @@ dry-run to build AOT inputs without allocating terabytes.
 from __future__ import annotations
 
 import threading
+import time
 from typing import Dict
 
 import jax
@@ -115,6 +116,189 @@ def cache_bytes(cfg: ModelConfig, batch: int, max_len: int,
 
 
 # ---------------------------------------------------------------------------
+# Paged KV pool (block-granular cache with copy-on-write prefix sharing)
+#
+# Instead of one dense (R,B,max_len,...) cache per sequence, a replica owns
+# ONE physical pool per cache array, carved into fixed-size token blocks:
+#
+#     k: (R, num_blocks, block_size, K, hd)
+#
+# Every sequence holds a *block table* — a host-side list of physical block
+# ids covering its logical positions [0, pos) — instead of a private cache
+# pytree. Admission/eviction never stacks or unstacks KV; forking a prefix
+# state is O(table) refcount bumps (copy-on-write: a shared block is copied
+# only when a writer appends into it). Blocks are refcounted and free-listed
+# by BlockAllocator; block 0 is RESERVED as the batch-padding scratch block
+# (padding rows write there, so it is never handed to a sequence).
+
+PAD_BLOCK = 0
+
+
+class OutOfBlocks(RuntimeError):
+    """The paged KV pool has no free block (admission backpressure)."""
+
+
+class BlockAllocator:
+    """Refcounted free-list allocator over ``num_blocks`` fixed-size blocks.
+
+    Block ``PAD_BLOCK`` (0) is reserved for batch-padding writes and is
+    never allocated. All methods are thread-safe; ``wait_for_free`` blocks
+    until at least ``n`` blocks are free (a ``decref`` to zero notifies),
+    which is the prefill-side backpressure point when the pool is full.
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is the pad block)")
+        self.num_blocks = num_blocks
+        self._refs = [0] * num_blocks
+        self._free = list(range(num_blocks - 1, 0, -1))   # pop() -> low ids
+        self._cv = threading.Condition()
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable blocks (excludes the reserved pad block)."""
+        return self.num_blocks - 1
+
+    def alloc(self) -> int:
+        with self._cv:
+            if not self._free:
+                raise OutOfBlocks(
+                    f"paged KV pool exhausted ({self.capacity} blocks)")
+            b = self._free.pop()
+            self._refs[b] = 1
+            return b
+
+    def incref(self, b: int):
+        with self._cv:
+            assert self._refs[b] > 0, f"incref on free block {b}"
+            self._refs[b] += 1
+
+    def decref(self, b: int):
+        with self._cv:
+            assert self._refs[b] > 0, f"decref on free block {b}"
+            self._refs[b] -= 1
+            if self._refs[b] == 0:
+                self._free.append(b)
+                self._cv.notify_all()
+
+    def refcount(self, b: int) -> int:
+        with self._cv:
+            return self._refs[b]
+
+    def notify_waiters(self):
+        """Wake wait_for_free waiters whose predicate improved for a
+        reason other than a decref — e.g. a decode RESERVATION was
+        dropped (evicted sequence), freeing headroom without freeing a
+        block."""
+        with self._cv:
+            self._cv.notify_all()
+
+    def free_blocks(self) -> int:
+        with self._cv:
+            return len(self._free)
+
+    def used_blocks(self) -> int:
+        with self._cv:
+            return self.capacity - len(self._free)
+
+    def wait_for_free(self, n: int, timeout: float = 30.0,
+                      reserved_fn=None) -> bool:
+        """Block until ``n`` blocks are free beyond ``reserved_fn()``
+        (blocks promised to admitted decodes). Returns False on timeout."""
+        deadline = time.time() + timeout
+        with self._cv:
+            while True:
+                reserved = reserved_fn() if reserved_fn else 0
+                if len(self._free) - reserved >= n:
+                    return True
+                remaining = deadline - time.time()
+                if remaining <= 0:
+                    return False
+                self._cv.wait(timeout=remaining)
+
+
+def blocks_for(pos_end: int, block_size: int) -> int:
+    """Blocks needed to cover logical positions [0, pos_end)."""
+    return -(-pos_end // block_size)
+
+
+def _paged_elem_shape(cfg: ModelConfig, spec: LayerSpec, repeat: int,
+                      num_blocks: int, block_size: int):
+    """Per-elem pool shapes: the token axis (T) of the dense layout becomes
+    (num_blocks, block_size). Sliding-window layers are paged LINEARLY —
+    the window is enforced by the position mask, not a ring buffer — so
+    every attention elem pages identically. Recurrent state (rwkv /
+    hybrid-SSM) is per-sequence, not per-token, and cannot be paged."""
+    if spec.kind in ("rwkv", "hybrid"):
+        raise ValueError(
+            f"paged KV cache does not support '{spec.kind}' layers "
+            "(recurrent state is per-sequence, not per-token)")
+    out = {}
+    hd = cfg.resolved_head_dim
+    if cfg.attention_kind == "mla":
+        m = cfg.mla
+        out["ckv"] = ((repeat, num_blocks, block_size, m.kv_lora_rank),
+                      jnp.bfloat16)
+        out["krope"] = ((repeat, num_blocks, block_size, m.qk_rope_head_dim),
+                        jnp.bfloat16)
+    else:
+        out["k"] = ((repeat, num_blocks, block_size, cfg.num_kv_heads, hd),
+                    jnp.bfloat16)
+        out["v"] = ((repeat, num_blocks, block_size, cfg.num_kv_heads, hd),
+                    jnp.bfloat16)
+    return out
+
+
+def init_paged_pool(cfg: ModelConfig, num_blocks: int, block_size: int, *,
+                    abstract: bool = False):
+    """Physical block pool pytree (mirrors init_cache's stage structure,
+    with the token axis carved into (num_blocks, block_size))."""
+    stages = []
+    for st in cfg.stages:
+        elems = []
+        for spec in st.pattern:
+            shapes = _paged_elem_shape(cfg, spec, st.repeat, num_blocks,
+                                       block_size)
+            elems.append({name: _mk(shape, dtype, abstract)
+                          for name, (shape, dtype) in shapes.items()})
+        stages.append(elems)
+    return {"stages": stages}
+
+
+def paged_block_bytes(cfg: ModelConfig, block_size: int) -> int:
+    """True memory of ONE pool block across all layers — the unit the
+    block-based OccupancyMeter reports."""
+    total = 0
+    for st in cfg.stages:
+        for spec in st.pattern:
+            for shape, dtype in _paged_elem_shape(
+                    cfg, spec, st.repeat, 1, block_size).values():
+                total += int(np.prod(shape)) * jnp.dtype(dtype).itemsize
+    return total
+
+
+def _copy_blocks_jit(pool, srcs, dsts):
+    """One gather/scatter for ALL pending COW pairs (block axis is axis
+    1, after the scanned repeat axis); the pool buffer is donated, so on
+    backends with donation this is an in-place block copy rather than a
+    full-pool duplication per pair."""
+    return jax.tree.map(lambda a: a.at[:, dsts].set(a[:, srcs]), pool)
+
+
+_copy_blocks_jit = jax.jit(_copy_blocks_jit, donate_argnums=(0,))
+
+
+def copy_pool_blocks(pool, srcs, dsts):
+    """Copy-on-write realization: duplicate physical blocks ``srcs[i]``
+    into ``dsts[i]`` across every pool array. CAUTION: the input pool's
+    buffers are donated — callers must drop their reference in favor of
+    the returned pool."""
+    return _copy_blocks_jit(pool, jnp.asarray(srcs, jnp.int32),
+                            jnp.asarray(dsts, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
 # Occupancy accounting (engine-pool load routing)
 
 def bytes_per_token(cfg: ModelConfig, chunk: int = 256) -> int:
@@ -141,11 +325,22 @@ class OccupancyMeter:
     eviction, so ``slots_used()`` reports which sequences are actively
     stepping. Note the pool's slot-aware decode router consults the
     loop's own ``decode_slots_free()`` (which also counts sequences
-    WAITING for a slot), not this meter."""
+    WAITING for a slot), not this meter.
 
-    def __init__(self, bytes_per_tok: int = 0, decode_slots: int = 0):
+    When bound to a ``BlockAllocator`` (paged engines), ``tokens()`` and
+    ``bytes()`` report ALLOCATED BLOCKS — the true memory footprint,
+    counting a shared prefix once and quantizing at block granularity —
+    instead of the per-sid amortized token ledger. The per-sid ledger is
+    still maintained for ``seqs()`` and slot introspection."""
+
+    def __init__(self, bytes_per_tok: int = 0, decode_slots: int = 0, *,
+                 allocator: "BlockAllocator" = None, block_size: int = 0,
+                 block_bytes: int = 0):
         self.bytes_per_tok = bytes_per_tok
         self.decode_slots = decode_slots
+        self.allocator = allocator
+        self.block_size = block_size
+        self.block_bytes = block_bytes
         self._tokens: Dict[str, int] = {}
         self._slot_sids: set = set()
         self._lock = threading.Lock()
@@ -159,11 +354,19 @@ class OccupancyMeter:
             self._tokens.pop(sid, None)
 
     def tokens(self) -> int:
+        if self.allocator is not None:
+            return self.allocator.used_blocks() * self.block_size
         with self._lock:
             return sum(self._tokens.values())
 
     def bytes(self) -> int:
+        if self.allocator is not None:
+            return self.allocator.used_blocks() * self.block_bytes
         return self.tokens() * self.bytes_per_tok
+
+    def blocks(self) -> int:
+        """Allocated pool blocks (0 when not block-bound)."""
+        return 0 if self.allocator is None else self.allocator.used_blocks()
 
     def seqs(self) -> int:
         with self._lock:

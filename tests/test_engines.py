@@ -94,7 +94,6 @@ def test_sim_embedding_calibration_fig4():
     t = {}
     for bs in (4, 16):
         eng = SimEmbeddingEngine(max_batch=bs)
-        total = 0.0
         for i in range(0, 48, bs):
             eng.op_embed([{"texts": [f"c{j}" for j in range(i, i + bs)]}])
         t[bs] = eng.stats["busy_ms"]

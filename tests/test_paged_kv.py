@@ -1,0 +1,406 @@
+"""Paged KV cache: allocator semantics, paged==dense token-stream
+equivalence (prefill->decode, chunked prefill, continuous batching),
+copy-on-write prefix sharing, block-based occupancy, and pool-exhaustion
+backpressure."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.engine_pool import EnginePool
+from repro.engines.llm_engine import LLMEngine
+from repro.engines.sim_engines import SimLLMEngine
+from repro.models.transformer import apply_model
+from repro.serving import kv_cache as kvc
+
+
+def _engines(arch, **paged_kw):
+    dense = LLMEngine("d", get_config(arch), max_len=128, seed=0)
+    paged = LLMEngine("p", get_config(arch), max_len=128, seed=0,
+                      paged=True, block_size=8, **paged_kw)
+    return dense, paged
+
+
+# ---------------------------------------------------------------------------
+# allocator
+
+def test_block_allocator_refcount_and_free_list():
+    a = kvc.BlockAllocator(6)
+    assert a.capacity == 5 and a.free_blocks() == 5
+    b1, b2 = a.alloc(), a.alloc()
+    assert kvc.PAD_BLOCK not in (b1, b2)       # pad block never handed out
+    assert a.used_blocks() == 2
+    a.incref(b1)
+    a.decref(b1)
+    assert a.used_blocks() == 2                # still held once
+    a.decref(b1)
+    assert a.used_blocks() == 1 and a.free_blocks() == 4
+    for _ in range(4):
+        a.alloc()
+    with pytest.raises(kvc.OutOfBlocks):
+        a.alloc()
+    a.decref(b2)
+    assert a.alloc() is not None               # freed block is reusable
+
+
+def test_block_allocator_wait_for_free_unblocks_on_decref():
+    a = kvc.BlockAllocator(4)
+    held = [a.alloc() for _ in range(3)]
+    done = []
+
+    def waiter():
+        done.append(a.wait_for_free(2, timeout=10))
+
+    th = threading.Thread(target=waiter)
+    th.start()
+    time.sleep(0.05)
+    assert not done                            # still blocked
+    a.decref(held[0])
+    a.decref(held[1])
+    th.join(timeout=10)
+    assert done == [True]
+    assert not a.wait_for_free(4, timeout=0.05)   # can never reach 4
+
+
+# ---------------------------------------------------------------------------
+# paged == dense equivalence
+
+@pytest.mark.parametrize("arch", ["tiny-core-llm", "tiny-lite-llm"])
+def test_paged_matches_dense_prefill_decode(arch):
+    """Same prompts, same greedy decode: the paged pool (block-table
+    scatter/gather, windowed layers paged linearly) must produce the
+    dense path's token streams exactly — including a chunked (partial)
+    prefill extension mid-conversation."""
+    dense, paged = _engines(arch)
+    for eng in (dense, paged):
+        eng.op_prefill([{"sid": "x", "text": "alpha beta gamma"},
+                        {"sid": "y", "text": "delta epsilon zeta eta"}])
+    assert dense.op_decode([{"sid": "x", "max_new": 6},
+                            {"sid": "y", "max_new": 3}]) == \
+        paged.op_decode([{"sid": "x", "max_new": 6},
+                         {"sid": "y", "max_new": 3}])
+    for eng in (dense, paged):                 # partial prefill continuity
+        eng.op_prefill([{"sid": "x", "text": "more words appended now"}])
+    assert dense.op_decode([{"sid": "x", "max_new": 5}]) == \
+        paged.op_decode([{"sid": "x", "max_new": 5}])
+
+
+def test_paged_matches_dense_continuous_batching():
+    """Iteration-level decode loop over the paged pool: staggered
+    admissions/evictions (different max_new) must not disturb token
+    streams vs the dense loop."""
+    dense, paged = _engines("tiny-lite-llm")
+    outs = {}
+    for name, eng in (("d", dense), ("p", paged)):
+        eng.op_prefill([{"sid": "a", "text": "one two three"},
+                        {"sid": "b", "text": "four five six seven eight"},
+                        {"sid": "c", "text": "nine ten"}])
+        seqs = [eng.submit_decode("a", 5), eng.submit_decode("b", 9),
+                eng.submit_decode("c", 3)]
+        outs[name] = tuple(s.wait(120) for s in seqs)
+        eng.stop_decode_loop()
+    assert outs["d"] == outs["p"]
+
+
+def test_bucketed_prefill_last_token_exact():
+    """Satellite: right-padded bucketed prefill must yield the SAME next
+    token as an unpadded forward pass — per-sequence logits are gathered
+    at position len(t)-1, not argmaxed over the padded tail."""
+    for paged in (False, True):
+        eng = LLMEngine("e", get_config("tiny-core-llm"), max_len=128,
+                        seed=0, paged=paged, block_size=8)
+        text = "alpha beta gamma"              # 3 tokens, S bucket = 8
+        eng.op_prefill([{"sid": "s", "text": text}])
+        toks = eng.tok.encode(text)
+        full, _, _ = apply_model(eng.cfg, eng.params,
+                                 jnp.asarray([toks], jnp.int32))
+        expect = int(jnp.argmax(full[0, len(toks) - 1]))
+        assert eng.states["s"].last_token == expect, f"paged={paged}"
+
+
+def test_bucketed_prefill_batch_matches_solo():
+    """Mixed-length batched prefill equals per-sequence unpadded prefill
+    for EVERY member (not just the bucket-filling longest one)."""
+    a = LLMEngine("a", get_config("tiny-lite-llm"), max_len=128, seed=0)
+    b = LLMEngine("b", get_config("tiny-lite-llm"), max_len=128, seed=0)
+    a.op_prefill([{"sid": "x", "text": "alpha beta gamma"},
+                  {"sid": "y", "text": "delta epsilon zeta eta theta"}])
+    b.op_prefill([{"sid": "x", "text": "alpha beta gamma"}])
+    assert a.op_decode([{"sid": "x", "max_new": 3}])[0] == \
+        b.op_decode([{"sid": "x", "max_new": 3}])[0]
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write prefix sharing
+
+def test_prefix_fork_shares_blocks_and_matches_dense():
+    """Fork an instruction-prefix state into two branches: full prefix
+    blocks must be SHARED (refcounted, not duplicated), the partially
+    filled tail block copy-on-written per branch, and both branches'
+    outputs must equal the unshared dense path."""
+    cfg = get_config("tiny-core-llm")
+    instr = " ".join(f"w{i}" for i in range(30))     # 30 tokens, bs=8
+    paged = LLMEngine("p", cfg, max_len=128, seed=0, paged=True,
+                      block_size=8)
+    pre = paged.get_prefix_state(instr)
+    prefix_blocks = paged.alloc.used_blocks()
+    assert prefix_blocks == len(pre.table) == 4      # ceil(30/8)
+
+    paged.op_prefill([{"sid": "q1", "text": "question one here",
+                       "prefix_state": pre}])
+    paged.op_prefill([{"sid": "q2", "text": "question two other words",
+                       "prefix_state": pre}])
+    # 3 full prefix blocks (24 tokens) shared three ways: prefix + forks
+    assert [paged.alloc.refcount(b) for b in pre.table[:3]] == [3, 3, 3]
+    # each fork added 2 blocks (1 COW tail + 1 growth), NOT 4 duplicates
+    assert paged.alloc.used_blocks() == prefix_blocks + 4
+
+    dense = LLMEngine("d", cfg, max_len=128, seed=0)
+    pd = dense.get_prefix_state(instr)
+    dense.op_prefill([{"sid": "q1", "text": "question one here",
+                       "prefix_state": pd}])
+    dense.op_prefill([{"sid": "q2", "text": "question two other words",
+                       "prefix_state": pd}])
+    for sid in ("q1", "q2"):
+        assert paged.op_decode([{"sid": sid, "max_new": 4}]) == \
+            dense.op_decode([{"sid": sid, "max_new": 4}])
+    # the shared prefix itself must be untouched by either branch
+    assert [paged.alloc.refcount(b) for b in pre.table[:3]] == [3, 3, 3]
+
+
+def test_bucket_padding_costs_no_blocks():
+    """A prompt shorter than its S bucket must only allocate blocks for
+    its REAL tokens — padding-tail writes fall through to the reserved
+    pad block, so bucket padding never erodes pool capacity."""
+    paged = LLMEngine("p", get_config("tiny-lite-llm"), max_len=128,
+                      seed=0, paged=True, block_size=4)
+    paged.op_prefill([{"sid": "s", "text": "alpha beta gamma"}])
+    # 3 tokens pad to the S=8 bucket: 1 block (ceil(3/4)), not 2
+    assert paged.alloc.used_blocks() == 1
+    dense = LLMEngine("d", get_config("tiny-lite-llm"), max_len=128, seed=0)
+    dense.op_prefill([{"sid": "s", "text": "alpha beta gamma"}])
+    assert paged.op_decode([{"sid": "s", "max_new": 6}]) == \
+        dense.op_decode([{"sid": "s", "max_new": 6}])
+
+
+def test_op_prefill_forks_cached_instruction_prefix():
+    """End-to-end prefix reuse (the path the orchestrator's warmup
+    enables): op_prefill on a prompt starting with a cached instruction
+    must fork the cached KV (sharing blocks in paged mode) and prefill
+    only the suffix — with token streams identical to the cold path."""
+    cfg = get_config("tiny-core-llm")
+    instr = " ".join(f"w{i}" for i in range(24))
+    for paged in (False, True):
+        warm = LLMEngine("w", cfg, max_len=128, seed=0, paged=paged,
+                         block_size=8)
+        warm.use_prefix_cache = True
+        warm.get_prefix_state(instr)
+        before = warm.stats["prefill_tokens"]
+        warm.op_prefill([{"sid": "q", "text": instr + " tail question"}])
+        assert warm.stats["prefill_tokens"] - before == 2   # suffix only
+        assert warm.states["q"].pos == 26
+        if paged:
+            # the fork shares the instruction's full blocks
+            pre = warm.prefix_cache[instr]
+            assert [warm.alloc.refcount(b) for b in pre.table[:3]] == \
+                [2, 2, 2]
+        cold = LLMEngine("c", cfg, max_len=128, seed=0, paged=paged,
+                         block_size=8)
+        cold.op_prefill([{"sid": "q", "text": instr + " tail question"}])
+        assert warm.op_decode([{"sid": "q", "max_new": 5}]) == \
+            cold.op_decode([{"sid": "q", "max_new": 5}]), f"paged={paged}"
+
+
+def test_decode_batch_overshoot_blocks_trimmed():
+    """Run-to-completion decode with mixed lengths: a short member must
+    not retain blocks allocated for the batch-wide n_max horizon."""
+    paged = LLMEngine("p", get_config("tiny-lite-llm"), max_len=128,
+                      seed=0, paged=True, block_size=8)
+    paged.op_prefill([{"sid": "a", "text": "one two three"},
+                      {"sid": "b", "text": "four five six"}])
+    paged.op_decode([{"sid": "a", "max_new": 24}, {"sid": "b", "max_new": 2}])
+    b = paged.states["b"]
+    assert b.pos == 5
+    assert len(b.table) == kvc.blocks_for(5, 8) == 1
+
+
+def test_release_frees_blocks():
+    paged = LLMEngine("p", get_config("tiny-lite-llm"), max_len=128,
+                      seed=0, paged=True, block_size=8)
+    assert paged.alloc.used_blocks() == 0
+    paged.op_prefill([{"sid": "s", "text": "some words to prefill"}])
+    paged.op_decode([{"sid": "s", "max_new": 8}])
+    assert paged.alloc.used_blocks() > 0
+    paged.release("s")
+    assert paged.alloc.used_blocks() == 0
+    assert "s" not in paged.states
+
+
+# ---------------------------------------------------------------------------
+# occupancy + backpressure
+
+def test_block_occupancy_counts_true_memory():
+    """kv_occupancy reports allocated blocks * block_size (shared prefix
+    counted once), and the meter's bytes() uses per-block bytes."""
+    paged = LLMEngine("p", get_config("tiny-lite-llm"), max_len=128,
+                      seed=0, paged=True, block_size=8)
+    paged.op_prefill([{"sid": "s", "text": "six words of prompt text here"}])
+    used = paged.alloc.used_blocks()
+    assert paged.kv_occupancy() == used * 8
+    assert paged.meter.blocks() == used
+    assert paged.meter.bytes() == \
+        used * kvc.paged_block_bytes(paged.cfg, 8)
+
+
+def test_decode_admission_backpressure_on_pool_exhaustion():
+    """With a pool sized for ~one sequence, the second decode must WAIT
+    (deferred admission, no OutOfBlocks crash) until the first sequence
+    is released, then complete correctly."""
+    cfg = get_config("tiny-lite-llm")
+    paged = LLMEngine("p", cfg, max_len=128, seed=0, paged=True,
+                      block_size=8, num_blocks=8)      # 7 usable blocks
+    paged.op_prefill([{"sid": "a", "text": "one two three"}])
+    sa = paged.submit_decode("a", 24)                  # a: needs 4 blocks
+    assert sa.wait(120)
+    # pool now holds a's 4 blocks; b needs 4 (prefill 1 + decode growth 3)
+    # -> prefill fits (3 free), but decode admission must defer
+    paged.op_prefill([{"sid": "b", "text": "four five six"}])
+    sb = paged.submit_decode("b", 24)
+    time.sleep(0.3)
+    assert not sb.done.is_set()                        # backpressured
+    loop = paged._decode_loop
+    assert loop.occupancy() == 1                       # waiting, unadmitted
+    paged.release("a")                                 # frees 4 blocks
+    out = sb.wait(120)
+    assert isinstance(out, str) and out
+    paged.stop_decode_loop()
+
+
+def test_decode_admission_timeout_fails_unsatisfiable_waiter():
+    """A waiter whose block need can never be met (blocks held by an
+    abandoned sequence) must be failed after admit_timeout instead of
+    starving the queue behind it."""
+    paged = LLMEngine("p", get_config("tiny-lite-llm"), max_len=128,
+                      seed=0, paged=True, block_size=8, num_blocks=6)
+    paged.op_prefill([{"sid": "a", "text": " ".join(["w"] * 24)}])  # 3 blk
+    loop = paged.start_decode_loop()
+    loop.admit_timeout = 0.3
+    paged.op_prefill([{"sid": "b", "text": "hi"}])                  # 1 blk
+    sb = paged.submit_decode("b", 32)        # needs 4 more blocks; 1 free
+    with pytest.raises(TimeoutError, match="not admitted"):
+        sb.wait(30)
+    # the queue behind the failed waiter keeps flowing
+    paged.op_prefill([{"sid": "c", "text": "ok"}])
+    sc = paged.submit_decode("c", 2)
+    assert sc.wait(60)
+    paged.stop_decode_loop()
+
+
+def test_decode_clamped_to_max_len():
+    """Decode requests past max_len are capped (not silently written
+    into clamped cache slots / block tables)."""
+    for paged in (False, True):
+        eng = LLMEngine("e", get_config("tiny-lite-llm"), max_len=32,
+                        seed=0, paged=paged, block_size=8)
+        eng.op_prefill([{"sid": "s", "text": "one two three four"}])
+        out = eng.op_decode([{"sid": "s", "max_new": 100}])[0]
+        assert eng.states["s"].pos == 32                 # capped exactly
+        assert len(out.split()) == 32 - 4
+        with pytest.raises(ValueError, match="no KV capacity"):
+            eng.op_decode([{"sid": "s", "max_new": 1}])
+
+
+def test_op_prefill_prompt_equal_to_instruction_matches_cold():
+    """Warm-path edge: a prompt EXACTLY equal to a cached instruction
+    must fork the finished prefix state as-is (no spurious SEP prefill)
+    and decode identically to the cold path."""
+    cfg = get_config("tiny-core-llm")
+    instr = " ".join(f"w{i}" for i in range(12))
+    for paged in (False, True):
+        warm = LLMEngine("w", cfg, max_len=128, seed=0, paged=paged,
+                         block_size=8)
+        warm.use_prefix_cache = True
+        warm.get_prefix_state(instr)
+        warm.op_prefill([{"sid": "q", "text": instr}])
+        assert warm.states["q"].pos == 12
+        cold = LLMEngine("c", cfg, max_len=128, seed=0, paged=paged,
+                         block_size=8)
+        cold.op_prefill([{"sid": "q", "text": instr}])
+        assert warm.op_decode([{"sid": "q", "max_new": 5}]) == \
+            cold.op_decode([{"sid": "q", "max_new": 5}]), f"paged={paged}"
+
+
+def test_submit_decode_rejects_impossible_request():
+    paged = LLMEngine("p", get_config("tiny-lite-llm"), max_len=128,
+                      seed=0, paged=True, block_size=8, num_blocks=4)
+    paged.op_prefill([{"sid": "a", "text": "hi"}])
+    with pytest.raises(ValueError, match="never fit"):
+        paged.submit_decode("a", 100)
+
+
+def test_prefill_backpressure_raises_after_timeout():
+    paged = LLMEngine("p", get_config("tiny-lite-llm"), max_len=128,
+                      seed=0, paged=True, block_size=8, num_blocks=6)
+    paged.ALLOC_TIMEOUT = 0.2
+    paged.op_prefill([{"sid": "a", "text": " ".join(["w"] * 30)}])
+    with pytest.raises(kvc.OutOfBlocks):
+        paged.op_prefill([{"sid": "b", "text": " ".join(["v"] * 30)}])
+    paged.release("a")                       # frees the pool -> b fits now
+    paged.op_prefill([{"sid": "b", "text": " ".join(["v"] * 30)}])
+
+
+def test_pool_routing_avoids_block_exhausted_replica():
+    """EnginePool routing: a replica whose block pool is exhausted loses
+    both batch and decode routing to a replica with free blocks, even at
+    higher token load."""
+    full = SimLLMEngine("r0", paged=True, block_size=8, num_blocks=4)
+    free = SimLLMEngine("r1", paged=True, block_size=8, num_blocks=4)
+    pool = EnginePool([full, free], name="llm")
+    full.states["s"] = {"pos": 32}                   # 4/4 blocks used
+    assert full.kv_free_blocks() == 0
+    pool.note_queued(1, 500)                         # r1 busier by tokens
+    assert pool.least_loaded() == 1
+    assert pool.least_loaded_decode() == 1
+    full.states.clear()                              # blocks freed
+    assert pool.least_loaded() == 0
+
+
+def test_sim_engine_block_accounting_counts_prefix_once():
+    sim = SimLLMEngine("s", paged=True, block_size=8)
+    sim.use_prefix_cache = True
+    instr = " ".join(f"i{k}" for k in range(16))     # 16 tok = 2 blocks
+    sim.get_prefix_state(instr)
+    assert sim.kv_blocks() == 2
+    # two queries sharing the instruction: its tokens are excluded from
+    # their pos, so the prefix's 2 blocks appear exactly once
+    sim.op_prefill([{"sid": "q1", "text": instr + " one two three"}])
+    sim.op_prefill([{"sid": "q2", "text": instr + " four five six"}])
+    assert sim.kv_blocks() == 2 + 1 + 1
+    assert sim.kv_occupancy() == 4 * 8
+
+
+# ---------------------------------------------------------------------------
+# model-level paged equivalence (MLA archs have no engine-scale config)
+
+def test_apply_model_paged_matches_dense_mla():
+    cfg = get_config("deepseek-v3-671b").reduced()
+    assert cfg.attention_kind == "mla"
+    from repro.models.transformer import init_params
+    params = init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 8), 0, cfg.vocab_size)
+    cache = kvc.init_cache(cfg, 2, 16)
+    ld, _, _ = apply_model(cfg, params, toks, cache, 0)
+    pool = kvc.init_paged_pool(cfg, 8, 4)
+    bt = jnp.array([[1, 2], [3, 4]], jnp.int32)
+    lp, _, _ = apply_model(cfg, params, toks, pool, 0, block_tables=bt)
+    np.testing.assert_allclose(np.asarray(ld[:, -1]), np.asarray(lp[:, -1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_init_paged_pool_rejects_recurrent_state():
+    with pytest.raises(ValueError, match="rwkv|hybrid"):
+        kvc.init_paged_pool(get_config("rwkv6-3b"), 8, 16)

@@ -124,7 +124,6 @@ def test_pass4_decode_pipelining_structure():
 def test_full_graph_opt_invariants(mk):
     app = _app(mk)
     g = graph_transform(app, Q)
-    before_produced = {k for n in g.nodes.values() for k in n.produces}
     g = graph_opt(g, app.engines)
     g.validate()
     # final answer still produced
