@@ -8,12 +8,10 @@ engines/sim_engines.py). Table 3 uses the REAL JAX engines.
 from __future__ import annotations
 
 import random
-import threading
 import time
 
 import numpy as np
 
-from repro.core.apps import ALL_APPS
 from repro.core.teola import AutoGenLike, LlamaDist, LlamaDistPC, Teola
 from repro.engines.sim_engines import SPEED, build_sim_engines
 from repro.training.data import doc_corpus

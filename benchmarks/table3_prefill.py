@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import time
 
-import jax
 
 from benchmarks.common import fmt_row
 from repro.configs.base import get_config

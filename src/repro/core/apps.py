@@ -11,7 +11,6 @@ plus a shared engine pool factory.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.configs.base import get_config
 from repro.core.workflow import APP, EngineSpec, Node

@@ -186,6 +186,17 @@ def primary_of(eng):
     return replicas_of(eng)[0]
 
 
+def pair_replicas(target, draft) -> List[tuple]:
+    """Draft/target placement for speculative decoding: pair replica i of
+    the target pool with replica ``i % len(draft)`` of the draft pool —
+    the index-aligned co-location the paper's shared app pool already
+    provides (core_llm replica i sits next to lite_llm replica i), cycled
+    when the pools are sized differently. Works on bare engines, legacy
+    replica lists, and EnginePools."""
+    t, d = replicas_of(target), replicas_of(draft)
+    return [(t[i], d[i % len(d)]) for i in range(len(t))]
+
+
 def build_pools(engines: Dict[str, Any],
                 sizes: Dict[str, int]) -> Dict[str, Any]:
     """Replace selected engines with pools: sizes maps engine name -> n.

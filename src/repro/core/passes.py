@@ -20,7 +20,6 @@ from typing import Dict, Optional
 
 from repro.core import primitives as P
 from repro.core.primitives import Graph, Primitive
-from repro.core.workflow import APP
 
 _uid = itertools.count()
 

@@ -10,7 +10,7 @@ preserves prefill/decode ordering for free.
 from __future__ import annotations
 
 import itertools
-from typing import Dict, List
+from typing import Dict
 
 from repro.core import primitives as P
 from repro.core.primitives import Graph, Primitive

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Set
+from typing import Any, Dict, List, Set
 
 # Primitive ops (Table 2). White = common engine ops, blue = decomposed
 # LLM ops, gray = control flow.

@@ -13,7 +13,6 @@ import threading
 import time
 from typing import Dict, List, Optional
 
-from repro.core import primitives as P
 from repro.core.engine_pool import replicas_of
 from repro.core.passes import ALL_PASSES, graph_opt
 from repro.core.pgraph import graph_transform

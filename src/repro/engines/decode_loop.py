@@ -196,6 +196,12 @@ class ContinuousDecodeLoop(threading.Thread):
                     f"{self.admit_timeout}s (KV pool backpressure)"))
             if not batch:
                 continue
+            # an engine may emit SEVERAL tokens per sequence per pass
+            # (speculative decoding: a verified draft chunk); progress is
+            # the number of tokens appended, floor 1 for engines that
+            # track progress elsewhere — plain engines append exactly one
+            # token, preserving the legacy step-per-iteration behavior
+            before = [len(seq.tokens) for seq in batch]
             try:
                 self.engine.decode_iteration(batch)
             except Exception as e:  # noqa: BLE001 — fail resident seqs
@@ -207,8 +213,8 @@ class ContinuousDecodeLoop(threading.Thread):
                 continue
             self.iterations += 1
             finished, errored = [], []
-            for seq in batch:
-                seq.steps += 1
+            for seq, n_before in zip(batch, before):
+                seq.steps += max(1, len(seq.tokens) - n_before)
                 # a failing per-sequence emission (on_text runs stream
                 # plumbing and the first-chunk early-release hook) fails
                 # THAT sequence, never the shared loop

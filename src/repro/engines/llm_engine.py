@@ -135,6 +135,7 @@ class LLMEngine(DecodeLoopMixin):
         self._stats_lock = threading.Lock()
         self._decode_loop: Optional[ContinuousDecodeLoop] = None
         self._pads: List[SeqState] = []   # reusable batch-padding states
+        self.spec = None                  # SpeculativeDecoder (opt-in)
         self._reset_batch_cache()
 
     def clone(self, idx: int = 1) -> "LLMEngine":
@@ -184,8 +185,32 @@ class LLMEngine(DecodeLoopMixin):
         c._stats_lock = threading.Lock()
         c._decode_loop = None            # per-replica decode loop
         c._pads = []
+        c.spec = None                    # re-attach per replica if wanted
         c._reset_batch_cache()
         return c
+
+    def enable_speculative(self, draft: "LLMEngine" = None, k: int = 4,
+                           max_ngram: int = 3):
+        """Attach a SpeculativeDecoder to this replica: decode paths
+        (run-to-completion batches AND the continuous decode loop) switch
+        to draft-k/verify-once iterations. ``draft`` is a co-located
+        draft engine (``engine_pool.pair_replicas`` picks it pool-wide);
+        None drafts via model-free prompt lookup. Greedy outputs stay
+        token-identical to the plain paths."""
+        from repro.engines.spec_decode import (EngineDrafter,
+                                               SpeculativeDecoder)
+        if draft is not None and draft.cfg.vocab_size != self.cfg.vocab_size:
+            raise ValueError(
+                f"draft vocab {draft.cfg.vocab_size} != target vocab "
+                f"{self.cfg.vocab_size}: draft token ids would not "
+                f"transfer")
+        self._vstep = self._build_verify_step()
+        if self.paged:
+            self._paged_vstep = self._build_paged_verify_step()
+        drafter = EngineDrafter(draft) if draft is not None else None
+        self.spec = SpeculativeDecoder(self, drafter=drafter, k=k,
+                                       max_ngram=max_ngram)
+        return self.spec
 
     def kv_occupancy(self) -> int:
         """Resident KV tokens on this replica (pool-router load input).
@@ -256,6 +281,100 @@ class LLMEngine(DecodeLoopMixin):
             return logits[:, 0], pool
 
         return jax.jit(step, donate_argnums=(2,))
+
+    # -- speculative verification steps: write a (k+1)-token chunk and
+    # return logits at EVERY chunk position (the causal position mask
+    # keeps draft token i blind to drafts > i, so one forward scores the
+    # whole chunk — q_len generalizes the decode step's q_len=1).
+    def _build_verify_step(self):
+        cfg = self.cfg
+
+        def step(params, tokens, cache, pos):
+            logits, cache, _ = apply_model(cfg, params, tokens, cache, pos,
+                                           q_block=256, remat=False)
+            return logits, cache
+
+        # the stacked cache is freshly concatenated per call — donate it
+        # so verification never holds two copies of the batch KV
+        return jax.jit(step, donate_argnums=(2,))
+
+    def _build_paged_verify_step(self):
+        cfg = self.cfg
+
+        def step(params, tokens, pool, tables, pos):
+            logits, pool, _ = apply_model(cfg, params, tokens, pool, pos,
+                                          q_block=256, remat=False,
+                                          block_tables=tables)
+            return logits, pool
+
+        return jax.jit(step, donate_argnums=(2,))
+
+    def spec_verify(self, chunk_items, loop_sids=None):
+        """ONE multi-position target forward over drafted chunks.
+
+        chunk_items: list of (state, chunk) with chunk =
+        [last_token, d1..dk] (uniform length k+1). Writes the chunk's KV
+        at state positions [pos, pos+k] and returns the greedy
+        next-token prediction at every chunk position as an int array of
+        shape (len(items), k+1) — prediction j answers "what follows
+        position pos+j". State positions are NOT advanced here; the
+        caller commits the accepted prefix and rolls the rest back.
+
+        ``loop_sids`` marks the continuous-decode-loop path: resident
+        sequences hold admission reservations covering their full budget
+        horizon, so the write draws down reservations directly instead
+        of waiting for UNRESERVED free blocks (which would double-count
+        their own reservation)."""
+        S = len(chunk_items[0][1])
+        B = _bucket(len(chunk_items), BUCKETS_B)
+        states = [s for s, _ in chunk_items]
+        toks = np.ones((B, S), np.int32)
+        for i, (_, ch) in enumerate(chunk_items):
+            toks[i] = ch
+        if self.paged:
+            if loop_sids is None:
+                self._acquire_with_blocks([(s, S) for s in states])
+            else:
+                self._paged_lock.acquire()
+            try:
+                sids = loop_sids or [None] * len(states)
+                for s, sid in zip(states, sids):
+                    got = self._prepare_write(s, S)
+                    if got and sid is not None:
+                        resv = self._decode_reserved.get(sid)
+                        if resv is not None:
+                            self._decode_reserved[sid] = max(0, resv - got)
+                tables, pos = self._table_batch(states, B, S)
+                logits, self.pool = self._paged_vstep(
+                    self.params, jnp.asarray(toks), self.pool, tables, pos)
+            finally:
+                self._paged_lock.release()
+        else:
+            # pad with the engine's reusable scratch states (their rows
+            # are discarded), not fresh max_len caches per call
+            pad_states = states + self._pad_states(B - len(states))
+            cache, pos = self._stack_states(pad_states)
+            logits, cache = self._vstep(self.params, jnp.asarray(toks),
+                                        cache, pos)
+            self._unstack(cache, pad_states)
+        return np.asarray(jnp.argmax(logits, axis=-1))[:len(states)]
+
+    def spec_rollback(self, st, sid=None):
+        """Roll back rejected draft tokens: ``st.pos`` already stands at
+        the accepted prefix (stale KV beyond it is masked by position and
+        overwritten by the next chunk); on the paged path additionally
+        trim overshoot table blocks back to the pool. For a loop-resident
+        sequence (``sid``) the freed blocks are re-credited to its
+        admission reservation, preserving the no-OOM guarantee."""
+        if not self.paged:
+            return
+        with self._paged_lock:
+            freed = kvc.trim_table(self.alloc, st.table, st.pos,
+                                   self.block_size)
+            if freed and sid is not None:
+                resv = self._decode_reserved.get(sid)
+                if resv is not None:
+                    self._decode_reserved[sid] = resv + freed
 
     def new_state(self):
         if self.paged:
@@ -448,11 +567,19 @@ class LLMEngine(DecodeLoopMixin):
         return logits
 
     def decode_batch(self, items, on_chunk=None):
-        """items: list of (state, n_tokens). Greedy continuous decode; all
-        sequences step together for max(n) steps (finished ones keep
-        writing into their own slots but results are truncated).
-        on_chunk(i, token_ids_so_far): called every `stream_chunk` steps
-        per live item — the streaming-decode emission point."""
+        """items: list of (state, n_tokens). Greedy continuous decode.
+        With speculative decoding enabled the batch runs draft-k/verify
+        iterations (token-identical outputs, fewer target forwards);
+        otherwise all sequences step together for max(n) steps (finished
+        ones keep writing into their own slots but results are
+        truncated). on_chunk(i, token_ids_so_far): called every
+        `stream_chunk` steps per live item — the streaming-decode
+        emission point."""
+        if self.spec is not None:
+            return self.spec.decode_batch(items, on_chunk=on_chunk)
+        return self._decode_batch_base(items, on_chunk)
+
+    def _decode_batch_base(self, items, on_chunk=None):
         t0 = time.time()
         n_max = max(n for _, n in items)
         B = _bucket(len(items), BUCKETS_B)
@@ -615,6 +742,16 @@ class LLMEngine(DecodeLoopMixin):
         self._reset_batch_cache()
 
     def decode_iteration(self, seqs: List[DecodeSeq]):
+        """One loop pass for every resident sequence. With speculative
+        decoding enabled, sequences with enough remaining budget advance
+        by a whole verified draft chunk per pass (the loop counts their
+        emitted tokens); the rest — and everything, with it disabled —
+        take the legacy single-token step."""
+        if self.spec is not None:
+            return self.spec.decode_iteration(seqs)
+        return self._decode_iteration_base(seqs)
+
+    def _decode_iteration_base(self, seqs: List[DecodeSeq]):
         """One decode step for every resident sequence (called by the
         loop each iteration). The stacked batch cache persists across
         iterations and is rebuilt only when RESIDENCY changes (admission
@@ -699,18 +836,23 @@ class LLMEngine(DecodeLoopMixin):
         remaining suffix tokens are prefilled (chunked prefill makes
         this exactly equivalent to prefilling the whole prompt)."""
         items = []
+        notes = []            # (sid, prefix_tokens, suffix_tokens)
         for t in task_batch:
             sid = t["sid"]
             toks = self.tok.encode(t["text"])
             forked = False
+            ptoks = []
             with self._lock:
                 st = self.states.get(sid)
                 if st is None:
                     ps = t.get("prefix_state")
-                    if ps is None and self.use_prefix_cache:
-                        ps, ptoks = self._match_prefix_locked(toks)
+                    if ps is not None:
+                        ptoks = self._prefix_tokens_of_locked(ps)
+                    elif self.use_prefix_cache:
+                        ps, mtoks = self._match_prefix_locked(toks)
                         if ps is not None:
-                            toks = toks[len(ptoks):]
+                            ptoks = mtoks
+                            toks = toks[len(mtoks):]
                     st = self.fork_state(ps) if ps is not None \
                         else self.new_state()
                     self.states[sid] = st
@@ -721,13 +863,34 @@ class LLMEngine(DecodeLoopMixin):
                 # already complete (pos and last_token carried over) —
                 # prefilling a spurious SEP would diverge from the cold
                 # path
+                notes.append((sid, ptoks, []))
                 continue
             toks = toks or [HashTokenizer.SEP]
             self.meter.advance(sid, len(toks))
             items.append((st, toks))
+            notes.append((sid, ptoks, toks))
         if items:
             self.prefill_batch(items)
+        if self.spec is not None:
+            # record token contexts (prompt-lookup drafting) and mirror
+            # the prefill onto the draft engine — AFTER prefill_batch so
+            # each state's next-token prediction is final
+            for sid, ptoks, toks in notes:
+                self.spec.note_prefill(sid, ptoks, toks)
         return [None] * len(task_batch)
+
+    def _prefix_tokens_of_locked(self, ps) -> list:
+        """Token list of an explicitly passed prefix state (identity
+        lookup against the instruction cache; self._lock held). Unknown
+        states — e.g. hand-built in tests — map to [] (prompt-lookup
+        context just starts at the suffix)."""
+        for instr, st in self.prefix_cache.items():
+            if st is ps:
+                toks = self._prefix_toks.get(instr)
+                if toks is None:
+                    toks = self._prefix_toks[instr] = self.tok.encode(instr)
+                return list(toks)
+        return []
 
     def _clamp_new(self, st, n: int) -> int:
         """Cap a decode request to the sequence's remaining KV capacity —
@@ -770,6 +933,8 @@ class LLMEngine(DecodeLoopMixin):
         return st
 
     def release(self, sid: str):
+        if self.spec is not None:
+            self.spec.release(sid)     # drop ctx + draft-engine mirror
         with self._lock:
             st = self.states.pop(sid, None)
         if self.paged and st is not None:

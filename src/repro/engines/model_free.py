@@ -10,7 +10,7 @@ from __future__ import annotations
 import copy
 import threading
 import time
-from typing import Dict, List
+from typing import Dict
 
 import numpy as np
 

@@ -24,7 +24,7 @@ from __future__ import annotations
 import hashlib
 import threading
 import time
-from typing import Dict, List
+from typing import Dict
 
 import numpy as np
 
@@ -65,9 +65,22 @@ class SimLLMEngine(DecodeLoopMixin):
                  decode_ms_per_extra_seq: float = 2.0,
                  batch_factor: float = 0.78, stream_chunk: int = 4,
                  paged: bool = False, block_size: int = 16,
-                 num_blocks: int = 0):
+                 num_blocks: int = 0, speculative: bool = False,
+                 draft_k: int = 4, spec_accept: float = 0.7,
+                 spec_draft_cost: float = 0.25):
         self.name = name
         self.max_batch = max_batch
+        # speculative step ACCOUNTING: with `speculative` on, each target
+        # step carries draft_k draft-model steps (each spec_draft_cost of
+        # a target step — the lite/core latency ratio) and emits
+        # mean_accept_len tokens (expected accepted prefix + bonus under
+        # per-token acceptance rate spec_accept), so scheduler
+        # simulations see the same target-steps-per-token reduction the
+        # real SpeculativeDecoder delivers. Decoded TEXT is unchanged.
+        self.speculative = speculative
+        self.draft_k = draft_k
+        self.spec_accept = spec_accept
+        self.spec_draft_cost = spec_draft_cost
         # paged-KV ACCOUNTING (the sim models latency, not tensors): load
         # is reported in allocated blocks — block-quantized resident
         # tokens with shared instruction prefixes counted once — matching
@@ -100,10 +113,26 @@ class SimLLMEngine(DecodeLoopMixin):
             decode_ms_per_step=self.dec_step,
             decode_ms_per_extra_seq=self.dec_extra, batch_factor=self.bf,
             stream_chunk=self.stream_chunk, paged=self.paged,
-            block_size=self.block_size, num_blocks=self.num_blocks)
+            block_size=self.block_size, num_blocks=self.num_blocks,
+            speculative=self.speculative, draft_k=self.draft_k,
+            spec_accept=self.spec_accept,
+            spec_draft_cost=self.spec_draft_cost)
         c.prefix_cache = self.prefix_cache
         c.use_prefix_cache = self.use_prefix_cache
         return c
+
+    def mean_accept_len(self) -> float:
+        """Expected tokens emitted per target verification step: the
+        accepted draft prefix (geometric under per-token rate p) plus
+        the bonus token — 1 + p + p^2 + ... + p^k."""
+        return 1.0 + sum(self.spec_accept ** i
+                         for i in range(1, self.draft_k + 1))
+
+    def _spec_step_ms(self, b: int) -> float:
+        """Modeled cost of ONE speculative iteration at batch size b:
+        the target verify forward plus draft_k draft-model steps."""
+        return (self.dec_step * (1.0 + self.draft_k * self.spec_draft_cost)
+                + self.dec_extra * (b - 1))
 
     def kv_blocks(self) -> int:
         """Allocated-block count: per-sequence positions block-quantized,
@@ -164,7 +193,13 @@ class SimLLMEngine(DecodeLoopMixin):
     def op_decode(self, tasks, on_chunk=None):
         n_max = max(int(t["max_new"]) for t in tasks)
         b = len(tasks)
-        dur = n_max * (self.dec_step + self.dec_extra * (b - 1))
+        if self.speculative:
+            # ceil(n / mean_accept_len) target steps, each carrying the
+            # draft cost — the run-to-completion speculative latency
+            steps = int(np.ceil(n_max / self.mean_accept_len()))
+            dur = steps * self._spec_step_ms(b)
+        else:
+            dur = n_max * (self.dec_step + self.dec_extra * (b - 1))
         if on_chunk is None:
             _sleep(dur)
             out = []
@@ -224,15 +259,33 @@ class SimLLMEngine(DecodeLoopMixin):
     def decode_iteration(self, seqs):
         """One modeled decode step for the resident batch: per-iteration
         latency depends on the CURRENT batch size (the iteration-level
-        analogue of the legacy per-batch formula)."""
+        analogue of the legacy per-batch formula). In speculative mode
+        the step carries the draft cost and releases mean_accept_len
+        tokens per sequence (error-diffused to integers so long runs hit
+        the mean exactly) — the loop advances each sequence by the
+        emitted count, exactly like the real SpeculativeDecoder."""
         b = len(seqs)
-        dur = self.dec_step + self.dec_extra * (b - 1)
-        _sleep(dur)
-        for r in seqs:
-            if len(r.tokens) < len(r.words):
-                r.tokens.append(r.words[len(r.tokens)])
+        emitted = 0
+        if self.speculative:
+            dur = self._spec_step_ms(b)
+            _sleep(dur)
+            for r in seqs:
+                carry = getattr(r, "spec_carry", 0.0) + self.mean_accept_len()
+                emit = max(1, int(carry))
+                r.spec_carry = carry - emit
+                for _ in range(emit):
+                    if len(r.tokens) < len(r.words):
+                        r.tokens.append(r.words[len(r.tokens)])
+                        emitted += 1
+        else:
+            dur = self.dec_step + self.dec_extra * (b - 1)
+            _sleep(dur)
+            for r in seqs:
+                if len(r.tokens) < len(r.words):
+                    r.tokens.append(r.words[len(r.tokens)])
+            emitted = b
         with self._stats_lock:
-            self.stats["decode_tokens"] += b
+            self.stats["decode_tokens"] += emitted
             self.stats["decode_iters"] += 1
             self.stats["busy_ms"] += dur
 
@@ -331,18 +384,24 @@ def build_sim_engines(*, llm_max_batch: int = 8, core_decode_ms: float = 25.0,
                       lite_scale: float = 0.25,
                       llm_instances: int = 1,
                       paged_kv: bool = False,
-                      kv_block_size: int = 16) -> dict:
+                      kv_block_size: int = 16,
+                      speculative: bool = False,
+                      draft_k: int = 4) -> dict:
     """Engine set with paper-calibrated profiles. lite_llm (gemma-2-2B
     contextualizer / llama-7B judge) is ~4x faster than the core LLM.
     llm_instances>1 puts the LLM engines behind EnginePools (the paper's
     testbed provisions two instances per LLM); the pooled lower-tier
     scheduler routes fused batches to the least-loaded replica with
-    sequence affinity."""
+    sequence affinity. ``speculative`` switches the CORE LLM to
+    draft-verify step accounting (drafted on the co-located lite profile:
+    spec_draft_cost = lite_scale)."""
     from repro.core.engine_pool import EnginePool
 
     core = SimLLMEngine("core_llm", max_batch=llm_max_batch,
                         decode_ms_per_step=core_decode_ms,
-                        paged=paged_kv, block_size=kv_block_size)
+                        paged=paged_kv, block_size=kv_block_size,
+                        speculative=speculative, draft_k=draft_k,
+                        spec_draft_cost=lite_scale)
     lite = SimLLMEngine(
         "lite_llm", max_batch=llm_max_batch * 2,
         prefill_ms_per_tok=0.235 * lite_scale,

@@ -14,7 +14,6 @@ Tiling: grid (B, H, Sq/bq, T/bk), q/o blocks (bq, hd) and kv blocks
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -15,6 +15,7 @@ import jax
 from repro.kernels.decode_attention import decode_attention as _decode
 from repro.kernels.decode_attention import \
     paged_decode_attention as _paged_decode
+from repro.kernels.decode_attention import verify_attention as _verify
 from repro.kernels.flash_prefill import flash_prefill as _prefill
 from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv
 
@@ -54,6 +55,16 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, length, *,
     return _paged_decode(q, k_pool, v_pool, block_tables, length,
                          window=window, cap=cap, scale=scale,
                          interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("window", "cap", "scale", "interpret"))
+def verify_attention(q, k_pool, v_pool, block_tables, length, *,
+                     window=None, cap=None, scale=None, interpret=None):
+    """Speculative-verification attention (paged, q_len = draft_k + 1);
+    q_len == 1 reduces to paged_decode_attention."""
+    interpret = default_interpret() if interpret is None else interpret
+    return _verify(q, k_pool, v_pool, block_tables, length, window=window,
+                   cap=cap, scale=scale, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -71,6 +71,41 @@ def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, length, *,
                                 scale=scale)
 
 
+def verify_attention_ref(q, k_pool, v_pool, block_tables, length, *,
+                         window=None, cap=None, scale=None):
+    """XLA `take`-based speculative-verification path (also the CPU
+    serving path): gather each sequence's paged blocks into a contiguous
+    view, then run multi-query masked attention with the chunk's queries
+    at absolute positions length - Sq + i (causal intra-chunk mask).
+    q (B,Sq,H,hd); k_pool/v_pool (num_blocks, block_size, K, hd);
+    block_tables (B, maxblk) int32; length (B,) int32 total valid length
+    INCLUDING the Sq chunk positions."""
+    B, Sq, H, hd = q.shape
+    maxblk = block_tables.shape[1]
+    bs, K = k_pool.shape[1], k_pool.shape[2]
+    G = H // K
+    if scale is None:
+        scale = hd ** -0.5
+    k = jnp.take(k_pool, block_tables, axis=0).reshape(
+        B, maxblk * bs, *k_pool.shape[2:])
+    v = jnp.take(v_pool, block_tables, axis=0).reshape(
+        B, maxblk * bs, *v_pool.shape[2:])
+    kr = jnp.repeat(k, G, axis=2).astype(jnp.float32)    # (B,T,H,hd)
+    vr = jnp.repeat(v, G, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32), kr) * scale
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    T = maxblk * bs
+    q_pos = length[:, None] - Sq + jnp.arange(Sq)[None, :]      # (B,Sq)
+    k_pos = jnp.arange(T)
+    mask = k_pos[None, None, :] <= q_pos[:, :, None]            # (B,Sq,T)
+    if window is not None:
+        mask &= k_pos[None, None, :] > (q_pos[:, :, None] - window)
+    s = jnp.where(mask[:, None], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", p, vr).astype(q.dtype)
+
+
 def rwkv6_scan_ref(r, k, v, w, u, state0):
     """r,k,v,w (B,S,H,hd); u (H,hd); state0 (B,H,hd,hd) fp32.
     Sequential reference recurrence:

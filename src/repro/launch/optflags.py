@@ -15,6 +15,11 @@ hypothesis-driven change, recorded before/after in EXPERIMENTS.md:
   microbatches=N    — override the train gradient-accumulation depth
                       (fewer microbatch loop trips => fewer FSDP
                       gathers, more activation memory).
+  pallas_paged_attn — route paged GQA attention (decode S=1 and
+                      speculative verification S=k+1) through the Pallas
+                      verify_attention kernel (block-table index maps)
+                      instead of the XLA gather path. Read at TRACE time:
+                      set before building an engine's jitted steps.
 """
 from __future__ import annotations
 

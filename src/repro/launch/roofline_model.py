@@ -19,7 +19,6 @@ the loop trip products (~100-1000x). We therefore:
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass
 
 from repro.configs.base import InputShape, ModelConfig
 

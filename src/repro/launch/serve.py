@@ -13,7 +13,11 @@ persistent decode loop (iteration-level continuous batching) instead of
 run-to-completion batches (both Teola scheme only). --paged-kv carves
 each replica's KV cache into refcounted token blocks (copy-on-write
 instruction-prefix sharing, block-table indexed decode, occupancy and
-router backpressure counted in allocated blocks).
+router backpressure counted in allocated blocks). --speculative enables
+draft-verify speculative decoding on core_llm (--draft-k tokens drafted
+per target verification step; --spec-drafter picks the model-free
+prompt-lookup drafter or the co-located lite_llm replica pairing);
+greedy outputs stay token-identical to plain decode.
 """
 from __future__ import annotations
 
@@ -36,7 +40,7 @@ SCHEMES = {
 }
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--app", default="advanced_rag", choices=ALL_APPS)
     ap.add_argument("--scheme", default="Teola", choices=SCHEMES)
@@ -55,18 +59,72 @@ def main():
                     help="block-paged KV cache: COW prefix sharing, "
                          "block-table decode, block-based occupancy "
                          "routing with pool backpressure")
+    ap.add_argument("--speculative", action="store_true",
+                    help="draft-verify speculative decoding on core_llm "
+                         "(token-identical greedy outputs, fewer target "
+                         "steps per token)")
+    ap.add_argument("--draft-k", type=int, default=None,
+                    help="draft tokens per verification step (default 4; "
+                         "requires --speculative)")
+    ap.add_argument("--spec-drafter", choices=("ngram", "lite_llm"),
+                    default=None,
+                    help="drafter: model-free prompt lookup (default) or "
+                         "the co-located lite_llm replica (requires "
+                         "--speculative)")
+    return ap
+
+
+def validate_args(ap: argparse.ArgumentParser, args) -> None:
+    """Reject incompatible flag combinations with a clear argparse error
+    (exit code 2 + usage) instead of a deep runtime stack trace. Fills in
+    speculative defaults after validation."""
+    if args.draft_k is not None and not args.speculative:
+        ap.error("--draft-k requires --speculative")
+    if args.spec_drafter is not None and not args.speculative:
+        ap.error("--spec-drafter requires --speculative")
+    if args.speculative:
+        if args.scheme != "Teola":
+            ap.error("--speculative requires --scheme Teola (baseline "
+                     "orchestrators drive run-to-completion decode "
+                     "batches outside the speculative decode loop)")
+        if not args.continuous_batching:
+            ap.error("--speculative requires --continuous-batching (the "
+                     "speculative path runs inside each replica's "
+                     "persistent decode loop)")
+        if args.draft_k is not None and args.draft_k < 1:
+            ap.error(f"--draft-k must be >= 1, got {args.draft_k}")
+        if args.sim and args.spec_drafter == "lite_llm":
+            ap.error("--spec-drafter lite_llm needs real engines (the "
+                     "sim models speculative cost with the lite profile "
+                     "already; drop --sim or use --spec-drafter ngram)")
+    args.draft_k = args.draft_k if args.draft_k is not None else 4
+    args.spec_drafter = args.spec_drafter or "ngram"
+
+
+def main():
+    ap = build_parser()
     args = ap.parse_args()
+    validate_args(ap, args)
 
     if args.sim:
         from repro.engines.sim_engines import build_sim_engines
         engines = build_sim_engines(llm_instances=args.llm_instances,
-                                    paged_kv=args.paged_kv)
+                                    paged_kv=args.paged_kv,
+                                    speculative=args.speculative,
+                                    draft_k=args.draft_k)
     else:
         engines = build_engines(paged_kv=args.paged_kv)
         if args.llm_instances > 1:
             engines = build_pools(engines, {
                 "core_llm": args.llm_instances,
                 "lite_llm": args.llm_instances})
+        if args.speculative:
+            from repro.engines.spec_decode import attach_speculative
+            attach_speculative(
+                engines,
+                draft="lite_llm" if args.spec_drafter == "lite_llm"
+                else None,
+                k=args.draft_k)
     app = ALL_APPS[args.app](engines)
     cls, policy = SCHEMES[args.scheme]
     if cls is Teola:

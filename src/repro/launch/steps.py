@@ -3,13 +3,11 @@ the bridge between model substrate and the multi-pod dry-run / launchers.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.configs.base import InputShape, ModelConfig
 from repro.launch import shard_rules as sr
 from repro.models.transformer import apply_model, param_shapes
 from repro.serving import kv_cache as kvc

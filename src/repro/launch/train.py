@@ -14,9 +14,8 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs.base import INPUT_SHAPES, get_config
+from repro.configs.base import get_config
 from repro.models.transformer import init_params
 from repro.training.checkpoint import save_checkpoint
 from repro.training.data import SyntheticLM

@@ -13,9 +13,6 @@ checkpointed blocks) so peak memory is O(q_block * Skv), not O(S^2).
 """
 from __future__ import annotations
 
-import math
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
@@ -201,12 +198,26 @@ def gqa_layer(cfg, spec, p, x, cache, pos, q_block=512, block_tables=None):
         kp = paged_write(cache["k"], k, block_tables, positions)
         vp = paged_write(cache["v"], v, block_tables, positions)
         new_cache = {"k": kp, "v": vp}
-        kb = paged_gather(kp, block_tables)
-        vb = paged_gather(vp, block_tables)
-        k_pos = kvc.slot_positions_linear(kb.shape[1], pos + S)
-        o = gqa_attention(q, kb.astype(x.dtype), vb.astype(x.dtype),
-                          positions, k_pos, scale=scale, window=spec.window,
-                          cap=cfg.attn_logit_softcap, q_block=q_block)
+        from repro.launch import optflags
+        if optflags.has("pallas_paged_attn"):
+            # accelerator serving path: stream physical blocks through the
+            # scalar-prefetched table index maps instead of materializing
+            # the gathered view. verify_attention covers decode (S=1) and
+            # speculative multi-token verification (S=k+1) alike — the
+            # chunk's queries sit at positions (pos+S) - S + i. The flag
+            # is read at TRACE time: set it before building jitted steps.
+            from repro.kernels import ops as kops
+            o = kops.verify_attention(
+                q, kp, vp, block_tables, pos + S, window=spec.window,
+                cap=cfg.attn_logit_softcap, scale=scale).astype(q.dtype)
+        else:
+            kb = paged_gather(kp, block_tables)
+            vb = paged_gather(vp, block_tables)
+            k_pos = kvc.slot_positions_linear(kb.shape[1], pos + S)
+            o = gqa_attention(q, kb.astype(x.dtype), vb.astype(x.dtype),
+                              positions, k_pos, scale=scale,
+                              window=spec.window,
+                              cap=cfg.attn_logit_softcap, q_block=q_block)
     else:
         kb, vb = cache["k"], cache["v"]
         T = kb.shape[1]

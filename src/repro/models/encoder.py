@@ -7,8 +7,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import (act_fn, dense_init, embed_init, rms_norm,
-                                 split_keys)
+from repro.models.common import dense_init, embed_init, rms_norm, split_keys
 
 
 @dataclass(frozen=True)

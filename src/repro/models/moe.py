@@ -19,8 +19,6 @@ the DeepSeek-V3 / Qwen-MoE shared-expert structure.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

@@ -12,13 +12,10 @@ long_500k shape tractable for these families.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import (act_fn, dense_init, group_norm_heads,
-                                 split_keys)
+from repro.models.common import dense_init, group_norm_heads, split_keys
 
 CHUNK = 128
 

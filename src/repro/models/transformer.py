@@ -7,7 +7,6 @@ Teola's Partial/Full Prefilling), and decode (S==1).
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +18,6 @@ from repro.models import ssm as ssm_mod
 from repro.models.common import (act_fn, dense_init, embed_init, rms_norm,
                                  softcap, split_keys)
 from repro.models.sharding import hint
-from repro.serving import kv_cache as kvc
 
 
 # ---------------------------------------------------------------------------

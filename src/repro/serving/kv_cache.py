@@ -223,6 +223,22 @@ def blocks_for(pos_end: int, block_size: int) -> int:
     return -(-pos_end // block_size)
 
 
+def trim_table(alloc: "BlockAllocator", table, pos_end: int,
+               block_size: int) -> int:
+    """Speculative-decode rollback: drop trailing block-table entries
+    that cover ONLY positions >= pos_end (rejected draft tokens /
+    overshoot), decref'ing each — a shared trailing block is released,
+    an exclusively-owned one returns to the free list. Mutates ``table``
+    in place and returns the number of entries dropped. Caller must hold
+    the engine's paged lock."""
+    keep = blocks_for(pos_end, block_size)
+    dropped = 0
+    while len(table) > keep:
+        alloc.decref(table.pop())
+        dropped += 1
+    return dropped
+
+
 def _paged_elem_shape(cfg: ModelConfig, spec: LayerSpec, repeat: int,
                       num_blocks: int, block_size: int):
     """Per-elem pool shapes: the token axis (T) of the dense layout becomes

@@ -64,7 +64,7 @@ def test_windowed_cache_is_smaller():
     full = cache_bytes(cfg, 1, 524288)
     # a hypothetical all-global variant: replace windows with None
     import dataclasses
-    from repro.configs.base import Stage, LayerSpec
+    from repro.configs.base import Stage
     stages = tuple(
         Stage(pattern=tuple(dataclasses.replace(sp, window=None)
                             for sp in st.pattern), repeat=st.repeat)

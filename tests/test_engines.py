@@ -1,7 +1,6 @@
 """Engine-level tests: encoders, vector DB, LLM engine state handling,
 prefix cache, sim-engine calibration."""
 import numpy as np
-import pytest
 
 from repro.configs.base import get_config
 from repro.engines.encoder_engines import EmbeddingEngine, RerankEngine

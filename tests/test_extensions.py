@@ -1,7 +1,6 @@
 """Paper-adjacent extensions: e-graph caching (§4.2), multi-instance
 engines with sequence affinity (§6/§7.1), priority scheduling (§7.2)."""
 import numpy as np
-import pytest
 
 from repro.core.apps import advanced_rag, naive_rag
 from repro.core.teola import Teola

@@ -118,6 +118,119 @@ def test_paged_decode_attention_window_softcap():
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("B,Sq,H,K,hd,nb,bs,maxblk", [
+    (2, 5, 4, 2, 64, 16, 16, 8),       # GQA, draft_k=4 chunk
+    (1, 3, 8, 8, 128, 8, 32, 4),       # MHA, bigger head dim
+    (3, 8, 4, 1, 64, 40, 8, 12),       # MQA, chunk spans blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_verify_attention_sweep(B, Sq, H, K, hd, nb, bs, maxblk, dtype):
+    """Pallas multi-token verification kernel (q_len=Sq, causal
+    intra-chunk mask, block-table index maps) vs the XLA take-based
+    reference on randomly permuted physical blocks."""
+    ks = jax.random.split(jax.random.key(11), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), dtype)
+    k_pool = jax.random.normal(ks[1], (nb, bs, K, hd), dtype)
+    v_pool = jax.random.normal(ks[2], (nb, bs, K, hd), dtype)
+    perm = jax.random.permutation(jax.random.key(12), nb)
+    tables = perm[: B * maxblk].reshape(B, maxblk).astype(jnp.int32) % nb
+    length = jnp.arange(1, B + 1) * (maxblk * bs // (B + 1)) + Sq
+    o = ops.verify_attention(q, k_pool, v_pool, tables, length)
+    o_ref = ref.verify_attention_ref(q, k_pool, v_pool, tables, length)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), **TOL[dtype])
+
+
+def test_verify_attention_window_softcap():
+    ks = jax.random.split(jax.random.key(13), 3)
+    B, Sq, H, K, hd, nb, bs, maxblk = 2, 4, 4, 2, 64, 16, 16, 8
+    q = jax.random.normal(ks[0], (B, Sq, H, hd))
+    k_pool = jax.random.normal(ks[1], (nb, bs, K, hd))
+    v_pool = jax.random.normal(ks[2], (nb, bs, K, hd))
+    tables = jnp.arange(B * maxblk, dtype=jnp.int32).reshape(B, maxblk) % nb
+    length = jnp.array([90, 128])
+    o = ops.verify_attention(q, k_pool, v_pool, tables, length,
+                             window=48, cap=30.0)
+    o_ref = ref.verify_attention_ref(q, k_pool, v_pool, tables, length,
+                                     window=48, cap=30.0)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_verify_attention_qlen1_equals_paged_decode():
+    """Sq == 1 must reduce exactly to the paged decode kernel (the
+    speculative verify path generalizes it, never forks from it)."""
+    ks = jax.random.split(jax.random.key(14), 3)
+    B, H, K, hd, nb, bs, maxblk = 2, 4, 2, 64, 16, 16, 8
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    k_pool = jax.random.normal(ks[1], (nb, bs, K, hd))
+    v_pool = jax.random.normal(ks[2], (nb, bs, K, hd))
+    tables = jnp.arange(B * maxblk, dtype=jnp.int32).reshape(B, maxblk) % nb
+    length = jnp.array([70, 113])
+    o = ops.verify_attention(q, k_pool, v_pool, tables, length)
+    od = ops.paged_decode_attention(q[:, 0], k_pool, v_pool, tables, length)
+    np.testing.assert_allclose(np.asarray(o[:, 0]), np.asarray(od),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_verify_attention_causal_intra_chunk():
+    """Draft position i must be blind to drafts > i: extending the chunk
+    with different future tokens cannot change earlier positions'
+    outputs (the property greedy-prefix acceptance relies on)."""
+    ks = jax.random.split(jax.random.key(15), 4)
+    B, Sq, H, K, hd, nb, bs, maxblk = 1, 4, 4, 2, 64, 8, 16, 4
+    q = jax.random.normal(ks[0], (B, Sq, H, hd))
+    k_pool = jax.random.normal(ks[1], (nb, bs, K, hd))
+    v_pool = jax.random.normal(ks[2], (nb, bs, K, hd))
+    tables = jnp.arange(B * maxblk, dtype=jnp.int32).reshape(B, maxblk)
+    length = jnp.array([40])
+    o = ops.verify_attention(q, k_pool, v_pool, tables, length)
+    # perturb the KV at the LAST chunk position (absolute pos 39)
+    k2 = k_pool.at[39 // bs, 39 % bs].add(3.0)
+    v2 = v_pool.at[39 // bs, 39 % bs].add(3.0)
+    o2 = ops.verify_attention(q, k2, v2, tables, length)
+    np.testing.assert_allclose(np.asarray(o[:, :-1]),
+                               np.asarray(o2[:, :-1]), rtol=2e-5,
+                               atol=2e-5)
+    assert not np.allclose(np.asarray(o[:, -1]), np.asarray(o2[:, -1]))
+
+
+def test_pallas_paged_attn_optflag_matches_gather_path():
+    """Model-level integration: with the 'pallas_paged_attn' optflag the
+    paged GQA layers route through the Pallas verify kernel; logits must
+    match the XLA gather path for prefill-shaped AND verify-shaped
+    chunks."""
+    from repro.configs.base import get_config
+    from repro.launch import optflags
+    from repro.models.transformer import apply_model, init_params
+    from repro.serving import kv_cache as kvc
+
+    cfg = get_config("tiny-lite-llm")     # includes a sliding-window layer
+    params = init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 5), 0, cfg.vocab_size)
+    tables = jnp.array([[1, 2, 3], [4, 5, 6]], jnp.int32)
+    pos = jnp.array([7, 3], jnp.int32)
+
+    def run_once():
+        pool = kvc.init_paged_pool(cfg, 8, 8)
+        # context before the chunk, then the 5-token verify chunk
+        ctx = jax.random.randint(jax.random.key(2), (2, 3), 0,
+                                 cfg.vocab_size)
+        _, pool, _ = apply_model(cfg, params, ctx, pool, pos - 3,
+                                 block_tables=tables)
+        logits, _, _ = apply_model(cfg, params, toks, pool, pos,
+                                   block_tables=tables)
+        return np.asarray(logits)
+
+    base = run_once()
+    optflags.set_flags(["pallas_paged_attn"])
+    try:
+        got = run_once()
+    finally:
+        optflags.set_flags([])
+    np.testing.assert_allclose(got, base, rtol=2e-4, atol=2e-4)
+
+
 @pytest.mark.parametrize("B,S,H,hd,chunk", [
     (1, 64, 2, 32, 16), (2, 128, 4, 64, 64), (1, 96, 3, 64, 32),
 ])

@@ -4,11 +4,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.configs.base import MoEConfig, get_config
+from repro.configs.base import get_config
 from repro.models import moe as moe_mod
-from repro.models.sharding import mesh_context
 
 
 def _cfg(capacity_factor=8.0, experts=4, topk=2):

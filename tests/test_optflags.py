@@ -1,6 +1,5 @@
 """Beyond-paper optimization flags: numerical equivalence + spec sanity."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

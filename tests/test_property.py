@@ -10,7 +10,7 @@ import hypothesis.strategies as st  # noqa: E402
 from hypothesis import given, settings  # noqa: E402
 
 from repro.core import primitives as P
-from repro.core.passes import graph_opt, pass1_prune_dependencies
+from repro.core.passes import pass1_prune_dependencies
 from repro.core.primitives import Graph, Primitive
 from repro.engines.tokenizer import HashTokenizer
 from repro.serving import kv_cache as kvc
@@ -99,6 +99,97 @@ def test_ring_write_matches_linear_tail(pos, s):
         if pos <= p < pos + s:
             np.testing.assert_allclose(np.asarray(br[0, i]),
                                        np.asarray(bl[0, p]))
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator invariants (paged KV pool)
+
+@given(st.integers(3, 24),
+       st.lists(st.tuples(st.integers(0, 2), st.integers(0, 100)),
+                min_size=1, max_size=80))
+@settings(max_examples=80, deadline=None)
+def test_block_allocator_conservation(num_blocks, program):
+    """Random alloc / COW-fork (incref) / release (decref) sequences:
+    free-list + allocated blocks always partition the capacity, per-block
+    refcounts always equal the references we hold, the reserved pad block
+    is never handed out, and releasing everything restores the full free
+    list."""
+    a = kvc.BlockAllocator(num_blocks)
+    held = []                                  # our refs (multiset)
+    for op, idx in program:
+        if op == 0:                            # alloc (grow a table)
+            if a.free_blocks() > 0:
+                b = a.alloc()
+                assert b != kvc.PAD_BLOCK      # pad block never allocated
+                held.append(b)
+            else:
+                with pytest.raises(kvc.OutOfBlocks):
+                    a.alloc()
+        elif op == 1 and held:                 # COW fork: share a block
+            b = held[idx % len(held)]
+            a.incref(b)
+            held.append(b)
+        elif op == 2 and held:                 # release one reference
+            b = held.pop(idx % len(held))
+            a.decref(b)
+        # conservation + refcount ground truth after EVERY step
+        assert a.free_blocks() + a.used_blocks() == a.capacity
+        assert a.used_blocks() == len(set(held))
+        for b in set(held):
+            assert a.refcount(b) == held.count(b)
+    for b in held:
+        a.decref(b)
+    assert a.free_blocks() == a.capacity and a.used_blocks() == 0
+
+
+@given(st.integers(2, 6), st.integers(0, 80), st.integers(0, 80),
+       st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_trim_table_rollback_conserves_blocks(bs_exp, pos_hi, pos_lo,
+                                              share_tail):
+    """Speculative-rollback trims: a table grown to cover pos_hi then
+    trimmed to pos_lo keeps exactly blocks_for(pos_lo) entries, returns
+    the difference to the free list (shared tail blocks lose only OUR
+    reference), and never underflows a refcount."""
+    bs = 2 ** bs_exp
+    pos_hi, pos_lo = max(pos_hi, pos_lo), min(pos_hi, pos_lo)
+    need = kvc.blocks_for(pos_hi, bs)
+    a = kvc.BlockAllocator(max(2, need + 2))
+    table = [a.alloc() for _ in range(need)]
+    if share_tail and table:
+        a.incref(table[-1])                    # someone else holds it too
+    freed = kvc.trim_table(a, table, pos_lo, bs)
+    keep = kvc.blocks_for(pos_lo, bs)
+    assert len(table) == keep and freed == need - keep
+    assert a.used_blocks() == keep + (1 if share_tail and need > keep
+                                      else 0)
+    assert a.free_blocks() + a.used_blocks() == a.capacity
+    # refcounts of kept blocks untouched
+    for b in table:
+        assert a.refcount(b) >= 1
+
+
+@given(st.lists(st.integers(0, 1), min_size=1, max_size=20))
+@settings(max_examples=30, deadline=None)
+def test_block_allocator_refcount_never_negative(program):
+    """decref below zero must trip the allocator's assertion rather than
+    silently corrupting the free list."""
+    a = kvc.BlockAllocator(8)
+    b = a.alloc()
+    refs = 1
+    for op in program:
+        if refs == 0:
+            # the block is back on the free list: BOTH ref ops must trip
+            # the guard assertion instead of corrupting the free list
+            with pytest.raises(AssertionError):
+                a.incref(b) if op == 0 else a.decref(b)
+        elif op == 0:
+            a.incref(b)
+            refs += 1
+        else:
+            a.decref(b)
+            refs -= 1
+        assert a.used_blocks() == (1 if refs else 0)
 
 
 # ---------------------------------------------------------------------------

@@ -1,8 +1,5 @@
 """Roofline cost-model unit tests: analytic formulas + nested HLO
 collective accounting."""
-import jax
-import jax.numpy as jnp
-import pytest
 
 from repro.configs.base import INPUT_SHAPES, get_config
 from repro.launch.roofline_model import (analytic_bytes, analytic_flops,

@@ -1,7 +1,5 @@
 """End-to-end runtime tests on real JAX engines and on sim engines."""
-import threading
 
-import numpy as np
 import pytest
 
 from repro.core.apps import (advanced_rag, build_engines,
@@ -83,7 +81,6 @@ def test_llm_states_released_after_query():
 
 def test_teola_not_slower_than_llamadist_sim():
     """The headline claim, in its weakest testable form on sim engines."""
-    import time
     lat = {}
     for cls, name in [(LlamaDist, "llamadist"), (Teola, "teola")]:
         engines = build_sim_engines()

@@ -1,7 +1,6 @@
 """Engine-scheduler batching policy unit tests (Algorithm 2)."""
 import time
 
-import pytest
 
 from repro.core import primitives as P
 from repro.core.primitives import Graph, Primitive

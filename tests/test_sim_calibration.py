@@ -1,7 +1,5 @@
 """Sim-engine latency profiles must keep tracking the paper's anchors —
 if someone retunes them, these tests pin the calibration."""
-import numpy as np
-import pytest
 
 from repro.engines.sim_engines import (SPEED, SimEmbeddingEngine,
                                        SimLLMEngine)

@@ -1,0 +1,280 @@
+"""Speculative decoding: token-identity vs baseline greedy decode across
+dense/paged KV and legacy/continuous decode paths, rollback block
+hygiene, drafter behavior, pool-aware draft/target placement, sim-engine
+step accounting, and serve.py flag validation."""
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.engine_pool import EnginePool, pair_replicas
+from repro.engines.llm_engine import LLMEngine
+from repro.engines.sim_engines import SimLLMEngine
+from repro.engines.spec_decode import PromptLookupDrafter
+from repro.serving import kv_cache as kvc
+
+PROMPTS = [("a", "alpha beta gamma delta"),
+           ("b", "one two three four five six"),
+           ("c", "the quick brown fox jumps")]
+
+
+def _engine(*, paged=False, spec=False, draft=None, k=3, max_len=128,
+            **kw):
+    eng = LLMEngine("e", get_config("tiny-core-llm"), max_len=max_len,
+                    seed=0, paged=paged, block_size=8, **kw)
+    if spec:
+        eng.enable_speculative(draft=draft, k=k)
+    return eng
+
+
+def _prefill(eng, prompts=PROMPTS):
+    eng.op_prefill([{"sid": s, "text": t} for s, t in prompts])
+
+
+def _same_weights_draft(max_len=128):
+    return LLMEngine("draft", get_config("tiny-core-llm"), max_len=max_len,
+                     seed=0)
+
+
+# ---------------------------------------------------------------------------
+# token identity: run-to-completion (legacy) decode path
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_spec_matches_baseline_legacy(paged):
+    """op_decode with speculative decoding on must produce the exact
+    baseline greedy token streams — mixed lengths, dense and paged."""
+    reqs = [{"sid": "a", "max_new": 20}, {"sid": "b", "max_new": 7},
+            {"sid": "c", "max_new": 13}]
+    base = _engine()
+    _prefill(base)
+    expect = base.op_decode([dict(r) for r in reqs])
+    eng = _engine(paged=paged, spec=True)
+    _prefill(eng)
+    assert eng.op_decode([dict(r) for r in reqs]) == expect
+    s = eng.spec.stats
+    assert s["tokens_emitted"] == 40
+    assert s["target_steps"] + s["fallback_steps"] > 0
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_spec_matches_baseline_draft_engine(paged):
+    """A REAL draft engine (same weights: the acceptance ceiling) must
+    stay token-identical while cutting target steps to ~n/(k+1)."""
+    base = _engine()
+    _prefill(base)
+    expect = base.op_decode([{"sid": "a", "max_new": 24}])
+    eng = _engine(paged=paged, spec=True, draft=_same_weights_draft(), k=3)
+    _prefill(eng)
+    assert eng.op_decode([{"sid": "a", "max_new": 24}]) == expect
+    s = eng.spec.stats
+    assert s["seq_steps"] <= -(-24 // 4) + 1      # near-perfect acceptance
+    assert s["accepted"] >= 18
+
+
+# ---------------------------------------------------------------------------
+# token identity: continuous decode loop (incl. mid-stream admission)
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_spec_matches_baseline_continuous(paged):
+    """Speculative mode inside the continuous decode loop: staggered
+    lengths force mid-stream evictions (and admissions once slots free
+    up); streams must equal the non-speculative loop's streams."""
+    outs = {}
+    for tag, spec in (("base", False), ("spec", True)):
+        eng = _engine(paged=paged, spec=spec, max_batch=2)
+        _prefill(eng)
+        # 3 seqs into 2 slots: c is admitted mid-stream after a evicts
+        seqs = [eng.submit_decode("a", 5), eng.submit_decode("b", 17),
+                eng.submit_decode("c", 11)]
+        outs[tag] = tuple(s.wait(120) for s in seqs)
+        eng.stop_decode_loop()
+        if spec:
+            assert eng.spec.stats["target_steps"] > 0
+    assert outs["base"] == outs["spec"]
+
+
+def test_spec_continuous_draft_engine_paged():
+    """Loop + paged target + real draft engine: identity holds and the
+    loop finishes in far fewer iterations than tokens."""
+    base = _engine(max_batch=4)
+    _prefill(base)
+    sb = [base.submit_decode(s, 16) for s, _ in PROMPTS]
+    expect = tuple(s.wait(120) for s in sb)
+    base.stop_decode_loop()
+
+    eng = _engine(paged=True, spec=True, draft=_same_weights_draft(), k=3,
+                  max_batch=4)
+    _prefill(eng)
+    seqs = [eng.submit_decode(s, 16) for s, _ in PROMPTS]
+    assert tuple(s.wait(120) for s in seqs) == expect
+    loop = eng._decode_loop
+    assert loop.iterations < 16          # 48 tokens in < 16 loop passes
+    eng.stop_decode_loop()
+
+
+def test_spec_rollback_frees_overshoot_blocks():
+    """Rejected draft tokens must not retain pool blocks: after release
+    the allocator is empty, and DURING decode the resident footprint
+    stays within the accepted positions' block need."""
+    eng = _engine(paged=True, spec=True, k=4)
+    _prefill(eng, PROMPTS[:1])
+    eng.op_decode([{"sid": "a", "max_new": 10}])
+    st = eng.states["a"]
+    assert len(st.table) == kvc.blocks_for(st.pos, 8)   # trimmed exactly
+    eng.release("a")
+    assert eng.alloc.used_blocks() == 0
+
+
+def test_spec_prefix_fork_identity():
+    """Speculative decode on a COW-forked instruction prefix (the warmed
+    op_prefill path) must match the cold baseline."""
+    instr = " ".join(f"w{i}" for i in range(24))
+    outs = {}
+    for tag, spec in (("base", False), ("spec", True)):
+        eng = _engine(paged=True, spec=spec)
+        eng.use_prefix_cache = True
+        eng.get_prefix_state(instr)
+        eng.op_prefill([{"sid": "q", "text": instr + " tail question"}])
+        outs[tag] = eng.op_decode([{"sid": "q", "max_new": 12}])
+    assert outs["base"] == outs["spec"]
+
+
+# ---------------------------------------------------------------------------
+# drafters
+
+def test_prompt_lookup_drafter_matches_ngrams():
+    d = PromptLookupDrafter(max_ngram=3)
+    # context repeats "7 8 9" after "5 6" twice — trailing [5, 6] matches
+    ctx = [1, 2, 5, 6, 7, 8, 9, 3, 4, 5, 6]
+    assert d.propose(ctx, 3) == [7, 8, 9]
+    assert d.propose(ctx, 5) == [7, 8, 9, 3, 4]
+    # no match: repeat last token
+    assert d.propose([1, 2, 3], 2) == [3, 3]
+    assert d.propose([], 2) == [1, 1]
+
+
+def test_engine_drafter_failure_degrades_to_lookup():
+    """A draft engine that cannot serve (tiny paged pool) must never fail
+    the target decode — proposals fall back to prompt lookup."""
+    draft = LLMEngine("d", get_config("tiny-core-llm"), max_len=128,
+                      seed=0, paged=True, block_size=8, num_blocks=2)
+    base = _engine()
+    _prefill(base, PROMPTS[:1])
+    expect = base.op_decode([{"sid": "a", "max_new": 10}])
+    eng = _engine(spec=True, draft=draft)
+    _prefill(eng, PROMPTS[:1])
+    assert eng.op_decode([{"sid": "a", "max_new": 10}]) == expect
+
+
+def test_enable_speculative_rejects_vocab_mismatch():
+    eng = _engine()
+    bad = LLMEngine("d", get_config("tiny-lite-llm"), max_len=128, seed=0)
+    bad.cfg = bad.cfg  # tiny-lite has the same vocab; fabricate mismatch
+    import dataclasses
+    bad.cfg = dataclasses.replace(bad.cfg, vocab_size=1024)
+    with pytest.raises(ValueError, match="vocab"):
+        eng.enable_speculative(draft=bad)
+
+
+# ---------------------------------------------------------------------------
+# pool placement + sim accounting
+
+def test_pair_replicas_index_aligned_and_cycled():
+    tgt = EnginePool.replicate(SimLLMEngine("core"), 4, name="core")
+    drf = EnginePool.replicate(SimLLMEngine("lite"), 2, name="lite")
+    pairs = pair_replicas(tgt, drf)
+    assert [t.name for t, _ in pairs] == [r.name for r in tgt.replicas]
+    assert [d.name for _, d in pairs] == \
+        [drf[0].name, drf[1].name, drf[0].name, drf[1].name]
+    # bare engines work too
+    t, d = SimLLMEngine("t"), SimLLMEngine("d")
+    assert pair_replicas(t, d) == [(t, d)]
+
+
+def test_attach_speculative_covers_every_target_replica():
+    from repro.engines.spec_decode import attach_speculative
+    cfg = get_config("tiny-core-llm")
+    pool = EnginePool.replicate(
+        LLMEngine("core", cfg, max_len=64, seed=0), 2, name="core")
+    lite = EnginePool.replicate(
+        LLMEngine("lite", get_config("tiny-core-llm"), max_len=64, seed=1),
+        2, name="lite")
+    specs = attach_speculative({"core_llm": pool, "lite_llm": lite}, k=2)
+    assert len(specs) == 2
+    for i, rep in enumerate(pool):
+        assert rep.spec is specs[i]
+        assert rep.spec.engine_drafter.engine is lite[i]
+
+
+def test_sim_speculative_step_accounting():
+    """Sim speculative mode: identical text, ~1/mean_accept_len decode
+    iterations, and per-step latency carrying the draft cost."""
+    plain = SimLLMEngine("p", decode_ms_per_step=1.0)
+    spec = SimLLMEngine("s", decode_ms_per_step=1.0, speculative=True,
+                        draft_k=4, spec_accept=0.7)
+    texts = {}
+    for eng in (plain, spec):
+        eng.op_prefill([{"sid": "x", "text": "hello world"}])
+        seq = eng.submit_decode("x", 24)
+        texts[eng.name] = seq.wait(60)
+        eng.stop_decode_loop()
+    assert texts["p"] == texts["s"]
+    mean = spec.mean_accept_len()
+    assert mean > 2.0
+    expect_iters = int(np.ceil(24 / mean))
+    assert spec.stats["decode_iters"] <= expect_iters + 2
+    assert plain.stats["decode_iters"] >= 24
+    # run-to-completion: modeled duration reflects fewer (costlier) steps
+    plain.op_decode([{"sid": "x", "max_new": 24}])
+    spec.op_decode([{"sid": "x", "max_new": 24}])
+    assert spec.stats["busy_ms"] < plain.stats["busy_ms"]
+
+
+def test_trim_table_frees_only_overshoot():
+    a = kvc.BlockAllocator(10)
+    table = [a.alloc() for _ in range(5)]
+    shared = table[4]
+    a.incref(shared)                     # trailing block shared elsewhere
+    freed = kvc.trim_table(a, table, pos_end=17, block_size=8)  # keep 3
+    assert freed == 2 and len(table) == 3
+    assert a.refcount(shared) == 1       # released our ref, not theirs
+    assert a.used_blocks() == 4          # 3 kept + the shared survivor
+    assert kvc.trim_table(a, table, 17, 8) == 0   # idempotent
+
+
+# ---------------------------------------------------------------------------
+# serve.py flag validation (satellite)
+
+def _validate(argv):
+    from repro.launch.serve import build_parser, validate_args
+    ap = build_parser()
+    args = ap.parse_args(argv)
+    validate_args(ap, args)
+    return args
+
+
+@pytest.mark.parametrize("argv,msg", [
+    (["--speculative"], "--continuous-batching"),
+    (["--speculative", "--continuous-batching", "--scheme",
+      "LlamaDist-TO"], "--scheme Teola"),
+    (["--speculative", "--continuous-batching", "--draft-k", "0"],
+     "--draft-k must be >= 1"),
+    (["--draft-k", "4"], "--draft-k requires --speculative"),
+    (["--spec-drafter", "ngram"], "--spec-drafter requires"),
+    (["--sim", "--speculative", "--continuous-batching",
+      "--spec-drafter", "lite_llm"], "real engines"),
+])
+def test_serve_rejects_incompatible_flags(argv, msg, capsys):
+    with pytest.raises(SystemExit) as e:
+        _validate(argv)
+    assert e.value.code == 2             # argparse error, not a traceback
+    assert msg in capsys.readouterr().err
+
+
+def test_serve_accepts_valid_speculative_flags():
+    args = _validate(["--speculative", "--continuous-batching"])
+    assert args.draft_k == 4 and args.spec_drafter == "ngram"
+    args = _validate(["--speculative", "--continuous-batching",
+                      "--draft-k", "6", "--spec-drafter", "lite_llm"])
+    assert args.draft_k == 6 and args.spec_drafter == "lite_llm"
+    args = _validate([])                 # plain serve untouched
+    assert not args.speculative

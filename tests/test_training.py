@@ -1,6 +1,5 @@
 """Training substrate: loss descent, microbatch equivalence, data
 pipeline determinism, checkpoint round-trip."""
-import os
 import tempfile
 
 import jax
@@ -13,7 +12,7 @@ from repro.models.transformer import init_params
 from repro.training.checkpoint import load_checkpoint, save_checkpoint
 from repro.training.data import SyntheticLM, doc_corpus
 from repro.training.optimizer import AdamWConfig, init_opt_state, lr_at
-from repro.training.train_step import make_train_step, next_token_loss
+from repro.training.train_step import make_train_step
 
 
 def test_loss_decreases_dense():
