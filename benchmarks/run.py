@@ -32,7 +32,8 @@ def main() -> None:
         ("fig10_ablation_graph", lambda: fig10_ablation_graph.run()),
         ("fig11_ablation_sched", lambda: fig11_ablation_sched.run()),
         ("fig12_critical_path", lambda: fig12_critical_path.run()),
-        ("table3_prefill", lambda: table3_prefill.run()),
+        ("table3_prefill", lambda: table3_prefill.run_table3()),
+        ("chunked_prefill", lambda: table3_prefill.run_chunked()),
         ("fig_paged_kv", lambda: fig_paged_kv.run()),
         ("fig_spec_decode", lambda: fig_spec_decode.run()),
         ("instances_scaling", lambda: instances_scaling.run()),

@@ -1,14 +1,32 @@
-"""Paper Table 3: decomposed (partial + full) prefilling vs one complete
-prefill — REAL JAX engine on CPU (not the simulation profiles): measures
-the actual execution-efficiency cost of Teola's prefill split.
+"""Paper Table 3 + chunked prefill: decomposed / chunked prefilling vs
+one complete prefill — REAL JAX engine on CPU (not the simulation
+profiles).
 
-Paper splits (tokens): 200+800, 850+850, 2500+500 on llama-2-7B; here the
-engine-scale model uses proportionally scaled splits within its context.
+Two studies:
+
+(a) Table 3 (paper): decomposed (partial + full) prefilling vs one
+    complete prefill — the execution-efficiency cost of Teola's prefill
+    split. Paper splits (tokens): 200+800, 850+850, 2500+500 on
+    llama-2-7B; here the engine-scale model uses proportionally scaled
+    splits within its context.
+
+(b) Stall-free chunked prefill: the latency metric Table 3 cannot see.
+    A long prompt arrives while decodes are resident in the continuous
+    loop. Monolithic prefill head-of-line-blocks every decode iteration
+    for a whole-prompt forward (on the paged path it holds the pool
+    lock for the full step), spiking decode time-between-tokens (TBT);
+    chunked prefill lands the same prompt in bounded chunks BETWEEN
+    decode iterations, so TBT is bounded by one chunk's compute. Both
+    configs are asserted token-identical; results land in
+    BENCH_chunked_prefill.json.
 """
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
+import numpy as np
 
 from benchmarks.common import fmt_row
 from repro.configs.base import get_config
@@ -19,12 +37,19 @@ from repro.engines.llm_engine import LLMEngine
 # paper's 1:4 / 1:1 / 5:1
 SPLITS = [(128, 256), (256, 256), (384, 128)]
 
+# study (b) shape: a 448-token prompt arriving over two 48-token decodes
+PROMPT_TOK = 448
+DECODE_TOK = 48
+N_DECODES = 2
+CHUNK = 64
+MAX_LEN = 512
 
-def _words(n):
-    return " ".join(f"tok{i}" for i in range(n))
+
+def _words(n, tag="tok"):
+    return " ".join(f"{tag}{i}" for i in range(n))
 
 
-def run(reps: int = 5):
+def run_table3(reps: int = 5):
     eng = LLMEngine("bench_llm", get_config("tiny-core-llm"), max_len=768)
     print("partial_tok,full_tok,decomposed_ms,single_ms,overhead_pct")
     for pa, fu in SPLITS:
@@ -51,6 +76,101 @@ def run(reps: int = 5):
         s = 1000 * min(sing)
         print(fmt_row(pa, fu, round(d, 2), round(s, 2),
                       round(100 * (d - s) / s, 2)))
+
+
+def _run_chunked_study(chunked: bool):
+    """Resident decodes + one long-prompt arrival. A full REHEARSAL pass
+    runs first and is discarded — it compiles every jit shape the
+    scenario touches (decode block-table width buckets included), so the
+    measured pass contains no one-time compiles, for both configs alike.
+    Returns per-decode iteration timestamps, prefill wall time, total
+    wall and outputs of the measured pass."""
+    eng = LLMEngine("bench_chunk", get_config("tiny-core-llm"),
+                    max_len=MAX_LEN, max_batch=4, paged=True,
+                    block_size=16, chunked_prefill=chunked,
+                    prefill_chunk=CHUNK)
+    for phase in ("warm", "meas"):
+        for i in range(N_DECODES):
+            eng.op_prefill([{"sid": f"{phase}_d{i}",
+                             "text": _words(16, f"p{i}_")}])
+        stamps = [[] for _ in range(N_DECODES)]
+        seqs = []
+        t0 = time.time()
+        for i in range(N_DECODES):
+            seqs.append(eng.submit_decode(
+                f"{phase}_d{i}", DECODE_TOK,
+                on_text=lambda _txt, i=i: stamps[i].append(time.time())))
+        deadline = time.time() + 120
+        while seqs[0].steps < 4:          # prompt arrives mid-decode
+            if seqs[0].done.is_set() or time.time() > deadline:
+                raise RuntimeError(
+                    f"decode never reached arrival point: {seqs[0]}")
+            time.sleep(0.001)
+        t_arrival = time.time()
+        if chunked:
+            job = eng.submit_prefill({"sid": f"{phase}_long",
+                                      "text": _words(PROMPT_TOK)})
+            job.wait(300)
+        else:
+            # monolithic: one whole-prompt forward on this thread while
+            # the decode loop contends for the pool lock and the cores
+            eng.op_prefill([{"sid": f"{phase}_long",
+                             "text": _words(PROMPT_TOK)}])
+        t_prefill = time.time() - t_arrival
+        outs = [s.wait(300) for s in seqs]
+        wall = time.time() - t0
+        outs.append(eng.op_decode([{"sid": f"{phase}_long",
+                                    "max_new": 8}])[0])
+        for i in range(N_DECODES):
+            eng.release(f"{phase}_d{i}")
+        eng.release(f"{phase}_long")
+    eng.stop_decode_loop()
+    return stamps, t_prefill, wall, outs
+
+
+def run_chunked(out_path: Path = None):
+    print("\nconfig,tbt_p50_ms,tbt_p99_ms,prefill_ms,wall_s,tok_per_s")
+    results = {}
+    outputs = {}
+    for chunked in (False, True):
+        tag = "chunked" if chunked else "monolithic"
+        stamps, t_prefill, wall, outs = _run_chunked_study(chunked)
+        tbt = np.concatenate([np.diff(s) for s in stamps if len(s) > 1])
+        total_tok = N_DECODES * DECODE_TOK + PROMPT_TOK
+        results[tag] = {
+            "tbt_p50_ms": round(float(np.percentile(tbt, 50)) * 1000, 2),
+            "tbt_p99_ms": round(float(np.percentile(tbt, 99)) * 1000, 2),
+            "tbt_max_ms": round(float(tbt.max()) * 1000, 2),
+            "prefill_ms": round(t_prefill * 1000, 2),
+            "wall_s": round(wall, 3),
+            "tok_per_s": round(total_tok / wall, 1),
+        }
+        outputs[tag] = outs
+        r = results[tag]
+        print(fmt_row(tag, r["tbt_p50_ms"], r["tbt_p99_ms"],
+                      r["prefill_ms"], r["wall_s"], r["tok_per_s"]))
+    assert outputs["chunked"] == outputs["monolithic"], \
+        "chunked prefill diverged from monolithic tokens!"
+    speedup = results["monolithic"]["tbt_p99_ms"] / \
+        max(results["chunked"]["tbt_p99_ms"], 1e-9)
+    results["tbt_p99_speedup"] = round(speedup, 2)
+    results["token_identical"] = True
+    results["setup"] = {"prompt_tok": PROMPT_TOK, "decode_tok": DECODE_TOK,
+                        "n_decodes": N_DECODES, "prefill_chunk": CHUNK}
+    print(f"decode TBT p99 under long-prompt arrival: "
+          f"{results['monolithic']['tbt_p99_ms']}ms -> "
+          f"{results['chunked']['tbt_p99_ms']}ms "
+          f"({speedup:.1f}x better, outputs token-identical)")
+    out_path = out_path or Path(__file__).parent / \
+        "BENCH_chunked_prefill.json"
+    out_path.write_text(json.dumps(results, indent=2))
+    print(f"wrote {out_path}")
+    return results
+
+
+def run(reps: int = 5):
+    run_table3(reps)
+    run_chunked()
 
 
 if __name__ == "__main__":

@@ -73,6 +73,20 @@ def _prompt_text(prim, store) -> str:
     return " ".join(x for x in pieces if x)
 
 
+def _prefill_payload(prim, ctx) -> List[dict]:
+    """Per-sequence prefill payload dicts for one task — shared by the
+    batch executor and the chunked-loop dispatch so the sid/text
+    construction can never diverge between the two paths."""
+    store = ctx.store
+    if prim.config.get("per_item_seq"):
+        rng = prim.config.get("item_range", (0, 0))
+        return [{"sid": _sid(prim, ctx, rng[0] + i),
+                 "text": (prim.config.get("instruction", "") + " "
+                          + _textify(it_))}
+                for i, it_ in enumerate(_items(store, prim))]
+    return [{"sid": _sid(prim, ctx), "text": _prompt_text(prim, store)}]
+
+
 # ---------------------------------------------------------------------------
 
 def execute_batch(engine, tasks: List):
@@ -177,18 +191,7 @@ def execute_batch(engine, tasks: List):
     if op in (P.PREFILL, P.PARTIAL_PREFILL, P.FULL_PREFILL):
         payload = []
         for t in tasks:
-            prim, store = t.prim, t.ctx.store
-            if prim.config.get("per_item_seq"):
-                items = _items(store, prim)
-                for i, it_ in enumerate(items):
-                    rng = prim.config.get("item_range", (0, 0))
-                    text = (prim.config.get("instruction", "") + " "
-                            + _textify(it_))
-                    payload.append({"sid": _sid(prim, t.ctx, rng[0] + i),
-                                    "text": text})
-            else:
-                payload.append({"sid": _sid(prim, t.ctx),
-                                "text": _prompt_text(prim, store)})
+            payload.extend(_prefill_payload(t.prim, t.ctx))
         engine.op_prefill(payload)
         for t in tasks:
             for k in t.prim.produces:
@@ -260,6 +263,70 @@ def _write_decode_outputs(t, texts: List[str]):
     for k2 in prim.produces:
         if k2.startswith("state:"):
             store[k2] = True
+
+
+def submit_prefill_task(engine, task, done, on_fail=None):
+    """Chunked-prefill dispatch of ONE prefill NodeTask: every sequence
+    of the task is queued into the engine's continuous loop as a
+    resumable PrefillJob (``submit_prefill``) — the loop lands
+    budget-bounded chunks BETWEEN decode iterations instead of running
+    one monolithic whole-prompt forward that would head-of-line-block
+    every co-resident decode. The scheduler thread returns immediately;
+    when the task's LAST job completes, the store is written exactly as
+    the batch executor writes it and ``done(task)`` fires on the loop
+    thread. On a job error the query is failed like ``_fail_batch`` and
+    ``on_fail(task)``, if given, runs cleanup."""
+    prim, ctx = task.prim, task.ctx
+    store = ctx.store
+    payload = _prefill_payload(prim, ctx)
+
+    if not payload:                      # zero-item prefill: parity with
+        for k in prim.produces:          # the batch path's empty span
+            store[k] = True
+        done(task)
+        return
+
+    lock = threading.Lock()
+    remaining = [len(payload)]
+    errors: List = []
+
+    def fail(err):
+        if task.stream is not None:
+            task.stream.close()
+        ctx.error = err
+        ctx.done.set()
+        if on_fail is not None:
+            on_fail(task)
+
+    def job_done(job):
+        if job.error is not None:
+            errors.append(job.error)
+        with lock:
+            remaining[0] -= 1
+            last = remaining[0] == 0
+        if not last:
+            return
+        if errors:
+            fail(errors[0])
+            return
+        try:
+            for k in prim.produces:
+                store[k] = True
+        except Exception as e:  # noqa: BLE001
+            fail(e)
+            return
+        done(task)
+
+    for p in payload:
+        try:
+            engine.submit_prefill(p, on_done=job_done)
+        except Exception as e:  # noqa: BLE001 — count the failed job so
+            errors.append(e)    # the task still completes (as a failure)
+            with lock:
+                remaining[0] -= 1
+                last = remaining[0] == 0
+            if last:
+                fail(errors[0])
 
 
 def submit_decode_task(engine, task, done, on_fail=None):

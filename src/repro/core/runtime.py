@@ -175,15 +175,29 @@ def form_batch(pending: List[NodeTask], policy: str,
 
 # ops dispatched into the persistent decode loop under continuous batching
 CONTINUOUS_OPS = (P.DECODE, P.PARTIAL_DECODE)
+# prefill ops additionally loop-dispatched when the engine has CHUNKED
+# prefill enabled (prompts stream through mixed prefill/decode passes)
+PREFILL_OPS = (P.PREFILL, P.PARTIAL_PREFILL, P.FULL_PREFILL)
 
 
-def take_continuous(pending: List[NodeTask]) -> List[NodeTask]:
-    """Pull loop-destined decode tasks out of a pending list (caller
-    holds the scheduler's condition lock)."""
-    cont = [t for t in pending if t.prim.op in CONTINUOUS_OPS]
+def take_continuous(pending: List[NodeTask],
+                    include_prefill: bool = False) -> List[NodeTask]:
+    """Pull loop-destined tasks out of a pending list (caller holds the
+    scheduler's condition lock): decodes always; prefills too when the
+    engine runs chunked prefill inside the loop."""
+    ops = CONTINUOUS_OPS + PREFILL_OPS if include_prefill \
+        else CONTINUOUS_OPS
+    cont = [t for t in pending if t.prim.op in ops]
     for t in cont:
         pending.remove(t)
     return cont
+
+
+def chunked_prefill_enabled(engine) -> bool:
+    """True when prefill primitives should bypass batch formation and be
+    queued as chunked PrefillJobs in the engine's continuous loop."""
+    return bool(getattr(engine, "chunked_prefill", False)) and \
+        hasattr(engine, "submit_prefill")
 
 
 class EngineScheduler(threading.Thread):
@@ -193,7 +207,11 @@ class EngineScheduler(threading.Thread):
     decode primitives bypass batch formation: they are submitted straight
     into the engine's persistent decode loop — the decode-slot dispatch
     mode — so the scheduler thread never blocks an engine for a whole
-    decode batch and newly-arrived decodes join mid-flight."""
+    decode batch and newly-arrived decodes join mid-flight. When the
+    engine additionally runs CHUNKED prefill, prefill primitives are
+    loop-dispatched the same way (``submit_prefill_task``): the prompt
+    advances in budget-bounded chunks between decode iterations instead
+    of head-of-line-blocking them."""
 
     def __init__(self, engine, executor, policy: str = "topo",
                  period: float = 0.002, continuous: bool = False):
@@ -203,6 +221,7 @@ class EngineScheduler(threading.Thread):
         self.policy = policy
         self.period = period
         self.continuous = continuous and hasattr(engine, "submit_decode")
+        self.chunked = self.continuous and chunked_prefill_enabled(engine)
         self.pending: List[NodeTask] = []
         self.cv = threading.Condition()
         self.running = True
@@ -225,11 +244,14 @@ class EngineScheduler(threading.Thread):
         return form_batch(self.pending, self.policy, max_bs)
 
     def _submit_continuous(self, tasks: List[NodeTask]):
-        from repro.core.executors import submit_decode_task
+        from repro.core.executors import (submit_decode_task,
+                                          submit_prefill_task)
         for t in tasks:
             self.decode_submits.append((t.prim.num_requests, t.prim.op))
+            submit = submit_prefill_task if t.prim.op in PREFILL_OPS \
+                else submit_decode_task
             try:
-                submit_decode_task(self.engine, t, self.on_complete)
+                submit(self.engine, t, self.on_complete)
             except Exception as e:  # noqa: BLE001
                 _fail_batch([t], e)
 
@@ -239,8 +261,8 @@ class EngineScheduler(threading.Thread):
                 if not self.pending:
                     self.cv.wait(timeout=0.1)
                     continue
-                cont = take_continuous(self.pending) if self.continuous \
-                    else []
+                cont = take_continuous(self.pending, self.chunked) \
+                    if self.continuous else []
                 batch = self._form_batch()
                 for t in batch:
                     self.pending.remove(t)
@@ -312,7 +334,12 @@ class PooledEngineScheduler(threading.Thread):
     With ``continuous=True``, decode primitives skip the replica worker
     queues: each is routed (affinity first, then SLOT-AWARE least-load —
     a replica with a free decode slot beats a loaded one) and submitted
-    into that replica's persistent decode loop."""
+    into that replica's persistent decode loop. With chunked prefill
+    enabled on the replicas, prefill primitives are loop-dispatched the
+    same way — affinity binds a partially prefilled sequence to the
+    replica holding its KV; fresh prompts go to the least-loaded replica
+    (block-exhausted paged replicas demoted), whose loop then lands the
+    chunks between its decode iterations."""
 
     def __init__(self, pool: EnginePool, executor, policy: str = "topo",
                  period: float = 0.002, continuous: bool = False):
@@ -323,6 +350,7 @@ class PooledEngineScheduler(threading.Thread):
         self.policy = policy
         self.period = period
         self.continuous = continuous and hasattr(pool[0], "submit_decode")
+        self.chunked = self.continuous and chunked_prefill_enabled(pool[0])
         self.pending: List[NodeTask] = []
         self.cv = threading.Condition()
         self.running = True
@@ -359,15 +387,20 @@ class PooledEngineScheduler(threading.Thread):
         return form_batch(self.pending, self.policy, max_bs)
 
     def _submit_continuous(self, tasks: List[NodeTask]):
-        """Route each decode to a replica (KV affinity binds; otherwise
-        slot-aware least-load) and admit it into that replica's loop."""
-        from repro.core.executors import submit_decode_task
+        """Route each loop-destined task to a replica (KV affinity
+        binds; otherwise decodes go slot-aware least-load, prefill
+        chunks block-aware least-load) and admit it into that replica's
+        loop."""
+        from repro.core.executors import (submit_decode_task,
+                                          submit_prefill_task)
         for t in tasks:
+            is_prefill = t.prim.op in PREFILL_OPS
             key = _seq_key(t)
             with self._aff_lock:
                 idx = self.affinity.get(key) if key is not None else None
                 if idx is None:
-                    idx = self.pool.least_loaded_decode()
+                    idx = self.pool.least_loaded() if is_prefill \
+                        else self.pool.least_loaded_decode()
                     if key is not None:
                         self.affinity[key] = idx
             tokens = estimate_tokens(t.prim)
@@ -385,8 +418,10 @@ class PooledEngineScheduler(threading.Thread):
                 # not called on the error path)
                 self.pool.note_decode_finished(idx, tokens)
 
+            submit = submit_prefill_task if is_prefill \
+                else submit_decode_task
             try:
-                submit_decode_task(self.pool[idx], t, _done, on_fail=_fail)
+                submit(self.pool[idx], t, _done, on_fail=_fail)
             except Exception as e:  # noqa: BLE001
                 self.pool.note_decode_finished(idx, tokens)
                 _fail_batch([t], e)
@@ -427,8 +462,8 @@ class PooledEngineScheduler(threading.Thread):
                 if not self.pending:
                     self.cv.wait(timeout=0.1)
                     continue
-                cont = take_continuous(self.pending) if self.continuous \
-                    else []
+                cont = take_continuous(self.pending, self.chunked) \
+                    if self.continuous else []
                 batch = self._form_batch()
                 for t in batch:
                     self.pending.remove(t)

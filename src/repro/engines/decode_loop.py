@@ -17,12 +17,25 @@ re-forms the decode batch every iteration.
   4. evicts finished sequences IMMEDIATELY, freeing their slot for the
      next admission pass, and fires their ``on_done``.
 
+CHUNKED PREFILL (Sarathi-style stall-free mixed batches): with
+``prefill_chunk > 0`` the loop also owns a PREFILL queue of
+``PrefillJob``s — resumable per-sequence prompt cursors. Each pass packs
+all resident decode tokens FIRST, then fills the remaining per-pass
+``token_budget`` with prefill-chunk tokens, and hands both to the
+engine's ``mixed_iteration(seqs, prefill_items)``. A long prompt
+therefore advances in bounded chunks BETWEEN decode steps instead of
+head-of-line-blocking every co-resident decode for a whole-prompt
+forward: decode time-between-tokens is bounded by one chunk's compute,
+never by prompt length. Decodes always advance (the budget caps prefill
+admission, it never splits the resident decode batch); a pass with no
+budget headroom simply carries no prefill tokens.
+
 The engine owns all model state and numerics; the loop owns residency,
 slot accounting (mirrored into the engine via the optional
 ``note_slot_acquired`` / ``note_slot_released`` hooks, which the real
-engine forwards to its ``OccupancyMeter``), and completion signaling.
-Both the real ``LLMEngine`` and the latency-profile ``SimLLMEngine``
-drive the same loop.
+engine forwards to its ``OccupancyMeter``), the prefill token-budget
+admission, and completion signaling. Both the real ``LLMEngine`` and
+the latency-profile ``SimLLMEngine`` drive the same loop.
 """
 from __future__ import annotations
 
@@ -75,11 +88,55 @@ class DecodeSeq:
                 f"done={self.done.is_set()}>")
 
 
+class PrefillJob:
+    """One prompt's resumable residency in the loop's PREFILL queue.
+
+    ``state`` is the engine's per-sequence handle (its ``pos`` is the
+    authoritative write cursor); ``tokens`` is the full remaining token
+    list to prefill; ``cursor`` counts tokens already consumed by landed
+    chunks. The engine's ``mixed_iteration`` advances the cursor chunk
+    by chunk; the loop evicts the job (firing ``on_done``) once the
+    cursor reaches the end.
+    """
+
+    def __init__(self, sid: str, state, tokens: list, *,
+                 on_done: Optional[Callable[["PrefillJob"], None]] = None):
+        self.sid = sid
+        self.state = state
+        self.tokens = list(tokens)
+        self.cursor = 0
+        self.chunks = 0                     # landed chunk count
+        self.on_done = on_done
+        self.error: Optional[Exception] = None
+        self.done = threading.Event()
+        self.t_submit = time.time()
+        self.t_progress = time.time()       # last time a chunk landed
+        self.t_done: Optional[float] = None
+
+    def remaining(self) -> int:
+        return len(self.tokens) - self.cursor
+
+    def wait(self, timeout: float = 300):
+        """Block until the whole prompt has been prefilled."""
+        if not self.done.wait(timeout):
+            raise TimeoutError(
+                f"prefill {self.sid} not finished after {timeout}s "
+                f"({self.cursor}/{len(self.tokens)} tokens)")
+        if self.error is not None:
+            raise self.error
+
+    def __repr__(self):
+        return (f"<PrefillJob {self.sid} {self.cursor}/{len(self.tokens)} "
+                f"done={self.done.is_set()}>")
+
+
 class ContinuousDecodeLoop(threading.Thread):
-    """Persistent decode loop over an engine's decode slots."""
+    """Persistent decode loop over an engine's decode slots, optionally
+    mixing budget-bounded prefill chunks into each pass."""
 
     def __init__(self, engine, max_slots: int, idle_wait: float = 0.05,
-                 admit_timeout: float = 60.0):
+                 admit_timeout: float = 60.0, prefill_chunk: int = 0,
+                 token_budget: Optional[int] = None):
         super().__init__(
             daemon=True,
             name=f"decode-loop-{getattr(engine, 'name', '?')}")
@@ -91,7 +148,17 @@ class ContinuousDecodeLoop(threading.Thread):
         # without this, one unsatisfiable waiter starves every decode
         # submitted after it
         self.admit_timeout = admit_timeout
+        # chunked prefill: tokens per prefill chunk (0 disables the
+        # prefill queue) and the per-pass token budget shared by decode
+        # and prefill tokens. Default budget fits a full decode batch
+        # plus one full chunk, so decodes never shrink a chunk and a
+        # chunk never starves.
+        self.prefill_chunk = max(0, int(prefill_chunk or 0))
+        self.token_budget = int(token_budget) if token_budget else \
+            (self.prefill_chunk + self.max_slots if self.prefill_chunk
+             else 0)
         self.waiting: deque = deque()
+        self.prefill_waiting: deque = deque()
         self.active: List[DecodeSeq] = []
         self.cv = threading.Condition()
         self.running = True
@@ -101,6 +168,8 @@ class ContinuousDecodeLoop(threading.Thread):
         self.admissions: List[tuple] = []   # (sid, iteration_admitted)
         self.evictions: List[tuple] = []    # (sid, iteration_evicted, steps)
         self.callback_errors: List[tuple] = []   # (sid, exception)
+        self.prefill_chunks: List[tuple] = []    # (sid, iteration, ntokens)
+        self.mixed_log: List[tuple] = []    # (decode_cost, prefill_tokens)
 
     # -- producer side ------------------------------------------------------
     def submit(self, seq: DecodeSeq) -> DecodeSeq:
@@ -108,6 +177,18 @@ class ContinuousDecodeLoop(threading.Thread):
             self.waiting.append(seq)
             self.cv.notify()
         return seq
+
+    def submit_prefill(self, job: PrefillJob) -> PrefillJob:
+        """Queue a prompt for chunked prefill inside the loop. Requires
+        ``prefill_chunk > 0`` (the engine enables it)."""
+        if not self.prefill_chunk:
+            raise RuntimeError(
+                f"decode loop of {getattr(self.engine, 'name', '?')} has "
+                f"chunked prefill disabled (prefill_chunk=0)")
+        with self.cv:
+            self.prefill_waiting.append(job)
+            self.cv.notify()
+        return job
 
     def slots_free(self) -> int:
         """Slots not claimed by resident or already-queued sequences."""
@@ -127,6 +208,99 @@ class ContinuousDecodeLoop(threading.Thread):
             self.join(timeout=10)
 
     # -- loop internals -----------------------------------------------------
+    def _decode_cost(self, batch) -> int:
+        """Query tokens the decode part of this pass will carry (plain
+        engines: one per resident sequence; speculative engines report
+        k+1 for chunk-eligible sequences via ``decode_token_cost``)."""
+        fn = getattr(self.engine, "decode_token_cost", None)
+        return int(fn(batch)) if fn is not None else len(batch)
+
+    def _take_prefill_locked(self, decode_cost: int):
+        """Token-budget admission: plan prefill chunks for this pass —
+        FIFO over the prefill queue, each job contributing at most one
+        chunk of min(prefill_chunk, remaining, budget room) tokens.
+        Decode tokens are packed first; prefill only ever takes the
+        leftover budget (decodes never wait behind a prompt)."""
+        if not self.prefill_chunk or not self.prefill_waiting:
+            return []
+        room = self.token_budget - decode_cost
+        items = []
+        for job in self.prefill_waiting:
+            if room <= 0:
+                break
+            n = min(self.prefill_chunk, job.remaining(), room)
+            if n > 0:
+                items.append((job, n))
+                room -= n
+        return items
+
+    def _note_prefill_progress(self, pitems, cursors_before) -> int:
+        """Account chunks the engine landed this pass (it may decline a
+        planned chunk — e.g. paged pool momentarily out of unreserved
+        blocks — in which case the job just stays queued); evict jobs
+        whose prompt is fully resident. Returns tokens landed."""
+        landed = 0
+        finished = []
+        for (job, _n), c0 in zip(pitems, cursors_before):
+            got = job.cursor - c0
+            if got:
+                landed += got
+                job.chunks += 1
+                job.t_progress = time.time()
+                self.prefill_chunks.append((job.sid, self.iterations, got))
+                if job.remaining() == 0:
+                    finished.append(job)
+        with self.cv:
+            for job in finished:
+                if job in self.prefill_waiting:
+                    self.prefill_waiting.remove(job)
+            if landed:
+                # the queue is moving: refresh every waiter's progress
+                # stamp so the starvation guard only fires when prefill
+                # as a whole is stuck, not on tail jobs behind a long
+                # but advancing FIFO
+                now = time.time()
+                for job in self.prefill_waiting:
+                    job.t_progress = now
+        for job in finished:
+            self._evict_prefill(job)
+        return landed
+
+    def _expire_prefill(self):
+        """Fail prefill jobs that made no progress for admit_timeout
+        (paged pool can never serve their next chunk) — same starvation
+        guard as decode admission."""
+        if self.admit_timeout is None:
+            return
+        now = time.time()
+        stuck = []
+        with self.cv:
+            for job in list(self.prefill_waiting):
+                if now - job.t_progress > self.admit_timeout:
+                    self.prefill_waiting.remove(job)
+                    stuck.append(job)
+        for job in stuck:
+            self._evict_prefill(job, error=TimeoutError(
+                f"prefill {job.sid} made no progress within "
+                f"{self.admit_timeout}s (KV pool backpressure) at "
+                f"{job.cursor}/{len(job.tokens)} tokens"))
+
+    def _evict_prefill(self, job: PrefillJob,
+                       error: Optional[Exception] = None):
+        job.t_done = time.time()
+        job.error = error
+        if job.on_done is not None:
+            # on_done runs engine/runtime bookkeeping on the loop
+            # thread; a failure there must not kill the loop. It fires
+            # BEFORE done is set, so job.wait() returning implies the
+            # completion hooks (e.g. the speculative-drafter prefill
+            # note) have already run.
+            try:
+                job.on_done(job)
+            except Exception as e:  # noqa: BLE001
+                self.callback_errors.append((job.sid, e))
+        job.done.set()
+
     def _admit_locked(self):
         """Admit waiters into free slots; returns sequences that timed
         out waiting for engine admission (evicted by the caller OUTSIDE
@@ -185,16 +359,30 @@ class ContinuousDecodeLoop(threading.Thread):
                 if not self.running:
                     break
                 expired = self._admit_locked()
-                if not self.active and not expired:
+                if not self.active and not expired and \
+                        not self.prefill_waiting:
                     self.cv.wait(timeout=self.idle_wait)
                     continue
                 batch = list(self.active)
                 self.max_resident = max(self.max_resident, len(batch))
+                dcost = self._decode_cost(batch)
+                pitems = self._take_prefill_locked(dcost)
+                pwaiting = bool(self.prefill_waiting)
             for seq in expired:
                 self._evict(seq, error=TimeoutError(
                     f"decode {seq.sid} not admitted within "
                     f"{self.admit_timeout}s (KV pool backpressure)"))
-            if not batch:
+            if pwaiting and not pitems:
+                # prefill queued but no chunk planned — either resident
+                # decodes consume the whole budget every pass (room
+                # permanently <= 0, e.g. speculative cost with a small
+                # budget) or the queue drained between checks. The
+                # starvation guard must fire HERE too, not only on idle
+                # passes, so a budget-starved job fails loudly after
+                # admit_timeout instead of hanging its query forever.
+                self._expire_prefill()
+            if not batch and not pitems:
+                time.sleep(self.idle_wait)
                 continue
             # an engine may emit SEVERAL tokens per sequence per pass
             # (speculative decoding: a verified draft chunk); progress is
@@ -202,16 +390,46 @@ class ContinuousDecodeLoop(threading.Thread):
             # track progress elsewhere — plain engines append exactly one
             # token, preserving the legacy step-per-iteration behavior
             before = [len(seq.tokens) for seq in batch]
+            pbefore = [job.cursor for job, _ in pitems]
             try:
-                self.engine.decode_iteration(batch)
+                if pitems:
+                    # mixed pass: all resident decode tokens first, then
+                    # the budget's leftover as prefill chunks
+                    self.engine.mixed_iteration(batch, pitems)
+                else:
+                    self.engine.decode_iteration(batch)
             except Exception as e:  # noqa: BLE001 — fail resident seqs
                 with self.cv:
                     for seq in batch:
                         self.active.remove(seq)
+                    for job, _ in pitems:
+                        if job in self.prefill_waiting:
+                            self.prefill_waiting.remove(job)
                 for seq in batch:
                     self._evict(seq, error=e)
+                for job, _ in pitems:
+                    self._evict_prefill(job, error=e)
                 continue
             self.iterations += 1
+            landed = self._note_prefill_progress(pitems, pbefore)
+            if pitems:
+                self.mixed_log.append(
+                    (dcost, sum(n for _, n in pitems), landed))
+                if not landed:
+                    self._expire_prefill()
+                    if not batch:     # nothing advanced at all this pass
+                        time.sleep(self.idle_wait)
+            if landed:
+                # a prefill chunk landing changes pool block state
+                # mid-pass: re-check engine admission for deferred
+                # waiters NOW (try_admit is re-evaluated fresh — a
+                # pre-chunk admission decision must never be reused)
+                with self.cv:
+                    late = self._admit_locked()
+                for seq in late:
+                    self._evict(seq, error=TimeoutError(
+                        f"decode {seq.sid} not admitted within "
+                        f"{self.admit_timeout}s (KV pool backpressure)"))
             finished, errored = [], []
             for seq, n_before in zip(batch, before):
                 seq.steps += max(1, len(seq.tokens) - n_before)
@@ -239,10 +457,15 @@ class ContinuousDecodeLoop(threading.Thread):
         # stopped: unblock anything still resident or queued
         with self.cv:
             leftovers = list(self.active) + list(self.waiting)
+            pleft = list(self.prefill_waiting)
             self.active.clear()
             self.waiting.clear()
+            self.prefill_waiting.clear()
         for seq in leftovers:
             self._evict(seq, error=RuntimeError("decode loop stopped"))
+        for job in pleft:
+            self._evict_prefill(job,
+                                error=RuntimeError("decode loop stopped"))
 
 
 class DecodeLoopMixin:
@@ -251,12 +474,18 @@ class DecodeLoopMixin:
     ``_decode_loop = None``."""
 
     def start_decode_loop(self) -> ContinuousDecodeLoop:
-        """Start (or return) this replica's persistent decode loop."""
+        """Start (or return) this replica's persistent decode loop. An
+        engine with ``chunked_prefill`` enabled hands the loop its
+        prefill-chunk size and per-pass token budget, arming the loop's
+        prefill queue (``submit_prefill``)."""
         with self._lock:
             if self._decode_loop is None or \
                     not self._decode_loop.is_alive():
+                chunk = getattr(self, "prefill_chunk", 0) \
+                    if getattr(self, "chunked_prefill", False) else 0
                 self._decode_loop = ContinuousDecodeLoop(
-                    self, max_slots=self.max_batch)
+                    self, max_slots=self.max_batch, prefill_chunk=chunk,
+                    token_budget=getattr(self, "token_budget", None))
                 self._decode_loop.start()
             return self._decode_loop
 

@@ -36,7 +36,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.engines.decode_loop import (ContinuousDecodeLoop, DecodeLoopMixin,
-                                       DecodeSeq)
+                                       DecodeSeq, PrefillJob)
 from repro.engines.tokenizer import HashTokenizer
 from repro.models.transformer import apply_model, init_params
 from repro.serving import kv_cache as kvc
@@ -79,13 +79,31 @@ class LLMEngine(DecodeLoopMixin):
                  seed: int = 0, max_batch: int = 8, max_tokens: int = 1024,
                  dtype=jnp.float32, stream_chunk: int = 4,
                  paged: bool = False, block_size: int = 16,
-                 num_blocks: Optional[int] = None):
+                 num_blocks: Optional[int] = None,
+                 chunked_prefill: bool = False, prefill_chunk: int = 128,
+                 token_budget: Optional[int] = None):
         self.name = name
         self.cfg = cfg
         self.max_len = max_len
         self.max_batch = max_batch
         self.max_tokens = max_tokens
         self.stream_chunk = stream_chunk   # decode tokens per emitted chunk
+        # chunked prefill (Sarathi-style stall-free mixed batches): with
+        # the flag on, prompts are admitted into the continuous loop as
+        # resumable PrefillJobs and advance prefill_chunk tokens at a
+        # time between decode iterations, under the loop's per-pass
+        # token_budget (None = max_batch + prefill_chunk). Flag off
+        # keeps every prefill the monolithic whole-prompt forward.
+        if prefill_chunk < 1 or prefill_chunk > BUCKETS_S[-1]:
+            raise ValueError(
+                f"prefill_chunk must be in [1, {BUCKETS_S[-1]}], got "
+                f"{prefill_chunk}")
+        if token_budget is not None and token_budget < 1:
+            raise ValueError(f"token_budget must be >= 1, got "
+                             f"{token_budget}")
+        self.chunked_prefill = chunked_prefill
+        self.prefill_chunk = int(prefill_chunk)
+        self.token_budget = token_budget
         self.tok = HashTokenizer(cfg.vocab_size)
         self.params = init_params(cfg, jax.random.key(seed), dtype)
         self.states: Dict[str, SeqState] = {}
@@ -151,6 +169,9 @@ class LLMEngine(DecodeLoopMixin):
         c.max_batch = self.max_batch
         c.max_tokens = self.max_tokens
         c.stream_chunk = self.stream_chunk
+        c.chunked_prefill = self.chunked_prefill
+        c.prefill_chunk = self.prefill_chunk
+        c.token_budget = self.token_budget
         c.tok = self.tok
         c.params = self.params
         c.states = {}
@@ -513,6 +534,15 @@ class LLMEngine(DecodeLoopMixin):
         for i, s in enumerate(states):
             s.cache = jax.tree.map(lambda a, i=i: a[:, i:i + 1], cache)
 
+    def _prefill_toks(self, items, B, S):
+        """Padded (B,S) token grid + exact per-row last-chunk index."""
+        toks = np.zeros((B, S), np.int32)
+        last_idx = np.zeros((B,), np.int32)
+        for i, (_, t) in enumerate(items):
+            toks[i, :len(t)] = t[:S]
+            last_idx[i] = min(len(t), S) - 1
+        return toks, last_idx
+
     def prefill_batch(self, items):
         """items: list of (state, token_list). Pads to a (B,S) bucket and
         runs one chunked-prefill step per sequence position offset. The
@@ -522,21 +552,12 @@ class LLMEngine(DecodeLoopMixin):
         t0 = time.time()
         B = _bucket(len(items), BUCKETS_B)
         S = _bucket(max(len(t) for _, t in items), BUCKETS_S)
-        toks = np.zeros((B, S), np.int32)
-        last_idx = np.zeros((B,), np.int32)
-        for i, (_, t) in enumerate(items):
-            toks[i, :len(t)] = t[:S]
-            last_idx[i] = min(len(t), S) - 1
+        toks, last_idx = self._prefill_toks(items, B, S)
         if self.paged:
             logits = self._paged_prefill(items, B, S, toks, last_idx)
         else:
-            states = [s for s, _ in items]
-            pad_states = states + [self.new_state()
-                                   for _ in range(B - len(states))]
-            cache, pos = self._stack_states(pad_states)
-            logits, cache = self._pstep(self.params, jnp.asarray(toks),
-                                        cache, pos, jnp.asarray(last_idx))
-            self._unstack(cache, pad_states)
+            logits = self._dense_prefill_exec([s for s, _ in items], B,
+                                              toks, last_idx)
         for i, (s, t) in enumerate(items):
             s.pos += len(t)
             s.last_token = int(jnp.argmax(logits[i]))
@@ -544,6 +565,39 @@ class LLMEngine(DecodeLoopMixin):
             self.stats["prefill_tokens"] += sum(len(t) for _, t in items)
             self.stats["calls"] += 1
             self.stats["busy_s"] += time.time() - t0
+
+    def prefill_chunked(self, items, chunk: Optional[int] = None):
+        """Resumable chunked prefill: advance every item's prompt by at
+        most ``chunk`` tokens per step until all cursors reach the end.
+        Token-identical to one monolithic ``prefill_batch`` by
+        construction — each chunk is written at the state's cursor
+        against the already-resident prefix (the position-mask attention
+        path is the same), and chunk lengths land on the same bucketed
+        jit shapes as any other prefill, so compile count stays bounded.
+        This is the synchronous form; the continuous loop's PrefillJob
+        path interleaves the same chunks with decode iterations."""
+        chunk = int(chunk or self.prefill_chunk)
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        cursors = [0] * len(items)
+        while True:
+            sub = []
+            for i, (s, t) in enumerate(items):
+                if cursors[i] < len(t):
+                    sub.append((s, t[cursors[i]:cursors[i] + chunk]))
+                    cursors[i] += len(sub[-1][1])
+            if not sub:
+                return
+            self.prefill_batch(sub)
+
+    def _dense_prefill_exec(self, states, B, toks, last_idx):
+        pad_states = states + [self.new_state()
+                               for _ in range(B - len(states))]
+        cache, pos = self._stack_states(pad_states)
+        logits, cache = self._pstep(self.params, jnp.asarray(toks),
+                                    cache, pos, jnp.asarray(last_idx))
+        self._unstack(cache, pad_states)
+        return logits
 
     def _paged_prefill(self, items, B, S, toks, last_idx):
         """Paged prefill: allocate/COW only the blocks the REAL tokens
@@ -558,12 +612,18 @@ class LLMEngine(DecodeLoopMixin):
         try:
             for s, n in zip(states, lens):
                 self._prepare_write(s, n)
-            tables, pos = self._table_batch(states, B, S)
-            logits, self.pool = self._paged_pstep(
-                self.params, jnp.asarray(toks), self.pool, tables, pos,
-                jnp.asarray(last_idx))
+            logits = self._paged_prefill_exec(states, B, S, toks, last_idx)
         finally:
             self._paged_lock.release()
+        return logits
+
+    def _paged_prefill_exec(self, states, B, S, toks, last_idx):
+        """Run the jitted paged prefill step (caller holds _paged_lock
+        with the write range already prepared/COW-resolved)."""
+        tables, pos = self._table_batch(states, B, S)
+        logits, self.pool = self._paged_pstep(
+            self.params, jnp.asarray(toks), self.pool, tables, pos,
+            jnp.asarray(last_idx))
         return logits
 
     def decode_batch(self, items, on_chunk=None):
@@ -679,6 +739,116 @@ class LLMEngine(DecodeLoopMixin):
                         text_fn=lambda s: self.tok.decode(s.tokens),
                         on_text=on_text, on_done=on_done)
         return self.start_decode_loop().submit(seq)
+
+    def submit_prefill(self, task: dict, on_done=None) -> PrefillJob:
+        """Chunked-prefill admission into the continuous loop: the
+        prompt is tokenized (and instruction-prefix forked) NOW on the
+        caller's thread, then queued as a resumable PrefillJob whose
+        chunks the loop packs into mixed prefill/decode passes under the
+        token budget — co-resident decodes never wait behind the whole
+        prompt. ``task`` uses the op_prefill dict shape (sid, text,
+        optional prefix_state); on_done(job) fires on the loop thread
+        once the full prompt is resident (job.error set on failure)."""
+        if not self.chunked_prefill:
+            raise RuntimeError(
+                f"{self.name}: chunked_prefill is disabled")
+        sid = task["sid"]
+        st, toks, ptoks = self._prepare_prefill_task(task)
+
+        def _done(job):
+            if job.error is None and self.spec is not None:
+                self.spec.note_prefill(sid, ptoks, toks)
+            if on_done is not None:
+                on_done(job)
+
+        job = PrefillJob(sid, st, toks, on_done=_done)
+        if not toks:
+            # prompt fully covered by the forked instruction prefix —
+            # nothing to write; complete without touching the loop
+            job.t_done = time.time()
+            job.done.set()
+            _done(job)
+            return job
+        if self.paged and \
+                kvc.blocks_for(st.pos + len(toks), self.block_size) > \
+                self.alloc.capacity:
+            raise ValueError(
+                f"prefill {sid}: pos {st.pos} + {len(toks)} tokens can "
+                f"never fit the {self.alloc.capacity}-block pool")
+        return self.start_decode_loop().submit_prefill(job)
+
+    def decode_token_cost(self, seqs) -> int:
+        """Query tokens one decode pass over ``seqs`` carries (the
+        loop's token-budget input): 1 per sequence, or k+1 for sequences
+        the speculative decoder will verify as a chunk this pass."""
+        if self.spec is None:
+            return len(seqs)
+        k = self.spec.k
+        return sum(k + 1 if (r.n - len(r.tokens) >= k + 1 and
+                             r.state.pos + k + 1 <= self.max_len) else 1
+                   for r in seqs)
+
+    def mixed_iteration(self, seqs: List[DecodeSeq], pitems):
+        """One stall-free mixed pass (loop thread): the resident decode
+        batch advances FIRST, then this pass's budget-bounded prefill
+        chunks land back-to-back — a decode's time-between-tokens is
+        bounded by one chunk's compute, never by a whole prompt's."""
+        if seqs:
+            self.decode_iteration(seqs)
+        if pitems:
+            self._prefill_chunk_step(pitems)
+
+    def _prefill_chunk_step(self, pitems):
+        """Land one bucketed prefill chunk per planned (job, n) pair and
+        advance the jobs' cursors. Paged admission is NON-BLOCKING:
+        chunks take only UNRESERVED free blocks (admitted decodes'
+        reservations stay untouchable) and when the pool — or its lock,
+        held by a scheduler-side batch — is busy, the chunk is DECLINED:
+        the job stays queued and the loop retries next pass. The decode
+        loop must never sleep on prefill backpressure."""
+        t0 = time.time()
+        items = []                       # (job, chunk_token_list)
+        if self.paged:
+            if not self._paged_lock.acquire(blocking=False):
+                return
+            try:
+                free = self.alloc.free_blocks() - self._reserved_locked()
+                for job, n in pitems:
+                    chunk = job.tokens[job.cursor:job.cursor + n]
+                    need = self._blocks_needed(job.state, len(chunk))
+                    if need <= free:
+                        free -= need
+                        items.append((job, chunk))
+                if not items:
+                    return
+                for job, chunk in items:
+                    self._prepare_write(job.state, len(chunk))
+                B = _bucket(len(items), BUCKETS_B)
+                S = _bucket(max(len(c) for _, c in items), BUCKETS_S)
+                toks, last_idx = self._prefill_toks(
+                    [(j.state, c) for j, c in items], B, S)
+                logits = self._paged_prefill_exec(
+                    [j.state for j, _ in items], B, S, toks, last_idx)
+            finally:
+                self._paged_lock.release()
+        else:
+            items = [(job, job.tokens[job.cursor:job.cursor + n])
+                     for job, n in pitems]
+            B = _bucket(len(items), BUCKETS_B)
+            S = _bucket(max(len(c) for _, c in items), BUCKETS_S)
+            toks, last_idx = self._prefill_toks(
+                [(j.state, c) for j, c in items], B, S)
+            logits = self._dense_prefill_exec(
+                [j.state for j, _ in items], B, toks, last_idx)
+        for i, (job, chunk) in enumerate(items):
+            job.state.pos += len(chunk)
+            job.state.last_token = int(jnp.argmax(logits[i]))
+            job.cursor += len(chunk)
+            self.meter.advance(job.sid, len(chunk))
+        with self._stats_lock:
+            self.stats["prefill_tokens"] += sum(len(c) for _, c in items)
+            self.stats["calls"] += 1
+            self.stats["busy_s"] += time.time() - t0
 
     def try_admit(self, seq: DecodeSeq) -> bool:
         """Block-level admission control (decode-loop hook): admit only
@@ -824,6 +994,39 @@ class LLMEngine(DecodeLoopMixin):
                 best_st, best_ptoks = st, ptoks
         return best_st, best_ptoks
 
+    def _prepare_prefill_task(self, t: dict):
+        """Per-task prefill front half (shared by op_prefill and
+        submit_prefill): resolve/create the sequence state, fork a
+        cached instruction prefix when one matches, and return
+        (state, tokens_to_prefill, prefix_tokens). Empty tokens mean the
+        forked prefix already covers the whole prompt."""
+        sid = t["sid"]
+        toks = self.tok.encode(t["text"])
+        forked = False
+        ptoks = []
+        with self._lock:
+            st = self.states.get(sid)
+            if st is None:
+                ps = t.get("prefix_state")
+                if ps is not None:
+                    ptoks = self._prefix_tokens_of_locked(ps)
+                elif self.use_prefix_cache:
+                    ps, mtoks = self._match_prefix_locked(toks)
+                    if ps is not None:
+                        ptoks = mtoks
+                        toks = toks[len(mtoks):]
+                st = self.fork_state(ps) if ps is not None \
+                    else self.new_state()
+                self.states[sid] = st
+                forked = ps is not None
+        toks = toks[: self.max_len - st.pos - 8]
+        if forked and not toks:
+            # prompt == cached instruction: the forked state is already
+            # complete (pos and last_token carried over) — prefilling a
+            # spurious SEP would diverge from the cold path
+            return st, [], ptoks
+        return st, toks or [HashTokenizer.SEP], ptoks
+
     def op_prefill(self, task_batch):
         """task_batch: list of dicts with keys:
         sid, text, continue_partial(bool), prefix_state(optional).
@@ -834,46 +1037,36 @@ class LLMEngine(DecodeLoopMixin):
         re-prefilling it — in paged mode an O(table) copy-on-write block
         share, in dense mode a functional pytree share. Only the
         remaining suffix tokens are prefilled (chunked prefill makes
-        this exactly equivalent to prefilling the whole prompt)."""
+        this exactly equivalent to prefilling the whole prompt).
+
+        With ``chunked_prefill`` on, prompts STREAM through the
+        continuous loop as budget-bounded PrefillJob chunks instead of
+        one monolithic forward — this scheduler thread blocks until the
+        prompt is resident, but the engine keeps interleaving decode
+        iterations (and upstream primitives keep feeding other
+        sequences), so co-resident decodes never stall."""
+        if self.chunked_prefill:
+            # submit_prefill owns the whole per-task path (prep, loud
+            # capacity check, queueing, spec note on completion); this
+            # scheduler thread just waits for the prompts to be resident
+            jobs = [self.submit_prefill(t) for t in task_batch]
+            for job in jobs:
+                job.wait(300)     # raises the job's error on failure
+            return [None] * len(task_batch)
         items = []
         notes = []            # (sid, prefix_tokens, suffix_tokens)
         for t in task_batch:
-            sid = t["sid"]
-            toks = self.tok.encode(t["text"])
-            forked = False
-            ptoks = []
-            with self._lock:
-                st = self.states.get(sid)
-                if st is None:
-                    ps = t.get("prefix_state")
-                    if ps is not None:
-                        ptoks = self._prefix_tokens_of_locked(ps)
-                    elif self.use_prefix_cache:
-                        ps, mtoks = self._match_prefix_locked(toks)
-                        if ps is not None:
-                            ptoks = mtoks
-                            toks = toks[len(mtoks):]
-                    st = self.fork_state(ps) if ps is not None \
-                        else self.new_state()
-                    self.states[sid] = st
-                    forked = ps is not None
-            toks = toks[: self.max_len - st.pos - 8]
-            if forked and not toks:
-                # prompt == cached instruction: the forked state is
-                # already complete (pos and last_token carried over) —
-                # prefilling a spurious SEP would diverge from the cold
-                # path
-                notes.append((sid, ptoks, []))
+            st, toks, ptoks = self._prepare_prefill_task(t)
+            notes.append((t["sid"], ptoks, toks))
+            if not toks:
                 continue
-            toks = toks or [HashTokenizer.SEP]
-            self.meter.advance(sid, len(toks))
+            self.meter.advance(t["sid"], len(toks))
             items.append((st, toks))
-            notes.append((sid, ptoks, toks))
         if items:
             self.prefill_batch(items)
         if self.spec is not None:
             # record token contexts (prompt-lookup drafting) and mirror
-            # the prefill onto the draft engine — AFTER prefill_batch so
+            # the prefill onto the draft engine — AFTER the prefill so
             # each state's next-token prediction is final
             for sid, ptoks, toks in notes:
                 self.spec.note_prefill(sid, ptoks, toks)

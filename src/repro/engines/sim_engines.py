@@ -28,7 +28,7 @@ from typing import Dict
 
 import numpy as np
 
-from repro.engines.decode_loop import DecodeLoopMixin, DecodeSeq
+from repro.engines.decode_loop import DecodeLoopMixin, DecodeSeq, PrefillJob
 from repro.engines.model_free import ChunkerEngine, SearchAPIEngine, \
     VectorDBEngine
 
@@ -67,9 +67,21 @@ class SimLLMEngine(DecodeLoopMixin):
                  paged: bool = False, block_size: int = 16,
                  num_blocks: int = 0, speculative: bool = False,
                  draft_k: int = 4, spec_accept: float = 0.7,
-                 spec_draft_cost: float = 0.25):
+                 spec_draft_cost: float = 0.25,
+                 chunked_prefill: bool = False, prefill_chunk: int = 128,
+                 token_budget=None):
         self.name = name
         self.max_batch = max_batch
+        # chunked-prefill ACCOUNTING: prompts queued via submit_prefill
+        # advance prefill_chunk tokens per mixed loop pass, each pass
+        # paying the per-call setup plus per-token cost the monolithic
+        # prefill formula charges — scheduler simulations see both the
+        # bounded decode time-between-tokens AND the decomposition
+        # overhead (Table 3) the real engine pays. Decoded text is
+        # unchanged (pos advances to the same place before any decode).
+        self.chunked_prefill = chunked_prefill
+        self.prefill_chunk = int(prefill_chunk)
+        self.token_budget = token_budget
         # speculative step ACCOUNTING: with `speculative` on, each target
         # step carries draft_k draft-model steps (each spec_draft_cost of
         # a target step — the lite/core latency ratio) and emits
@@ -116,7 +128,10 @@ class SimLLMEngine(DecodeLoopMixin):
             block_size=self.block_size, num_blocks=self.num_blocks,
             speculative=self.speculative, draft_k=self.draft_k,
             spec_accept=self.spec_accept,
-            spec_draft_cost=self.spec_draft_cost)
+            spec_draft_cost=self.spec_draft_cost,
+            chunked_prefill=self.chunked_prefill,
+            prefill_chunk=self.prefill_chunk,
+            token_budget=self.token_budget)
         c.prefix_cache = self.prefix_cache
         c.use_prefix_cache = self.use_prefix_cache
         return c
@@ -164,20 +179,34 @@ class SimLLMEngine(DecodeLoopMixin):
     def _ntok(self, text: str) -> int:
         return max(1, len(text.split()))
 
+    def _prefill_task_len(self, t) -> tuple:
+        """(state, effective prompt tokens) for one prefill task —
+        instruction-prefix reuse skips cached prefix tokens exactly like
+        the batch path."""
+        text = t["text"]
+        n = self._ntok(text)
+        with self._lock:
+            fresh = t["sid"] not in self.states
+            st = self.states.setdefault(t["sid"], {"pos": 0})
+            if fresh and self.use_prefix_cache:
+                # instruction-prefix KV reuse: skip cached prefix tokens
+                for instr in self.prefix_cache:
+                    if text.startswith(instr):
+                        n = max(1, n - self._ntok(instr))
+                        break
+        return st, n
+
     def op_prefill(self, tasks):
+        if self.chunked_prefill:
+            # stream every prompt through the loop's prefill queue (the
+            # scheduler thread blocks; co-resident decodes keep ticking)
+            jobs = [self.submit_prefill(t) for t in tasks]
+            for job in jobs:
+                job.wait(300)
+            return [None] * len(tasks)
         toks = []
         for t in tasks:
-            text = t["text"]
-            n = self._ntok(text)
-            with self._lock:
-                fresh = t["sid"] not in self.states
-                st = self.states.setdefault(t["sid"], {"pos": 0})
-                if fresh and self.use_prefix_cache:
-                    # instruction-prefix KV reuse: skip cached prefix tokens
-                    for instr in self.prefix_cache:
-                        if text.startswith(instr):
-                            n = max(1, n - self._ntok(instr))
-                            break
+            st, n = self._prefill_task_len(t)
             st["pos"] = st.get("pos", 0) + n
             toks.append(n)
         b = len(tasks)
@@ -189,6 +218,42 @@ class SimLLMEngine(DecodeLoopMixin):
             self.stats["calls"] += 1
             self.stats["busy_ms"] += dur
         return [None] * b
+
+    def submit_prefill(self, task, on_done=None) -> PrefillJob:
+        """Chunked-prefill admission into the continuous loop (sim form
+        of ``LLMEngine.submit_prefill``): the job's cursor advances
+        prefill_chunk tokens per mixed pass with modeled chunk cost."""
+        if not self.chunked_prefill:
+            raise RuntimeError(f"{self.name}: chunked_prefill is disabled")
+        st, n = self._prefill_task_len(task)
+        job = PrefillJob(task["sid"], st, list(range(n)), on_done=on_done)
+        return self.start_decode_loop().submit_prefill(job)
+
+    def decode_token_cost(self, seqs) -> int:
+        """Loop token-budget input: speculative passes carry k+1 query
+        tokens per sequence, plain passes one."""
+        return len(seqs) * (self.draft_k + 1 if self.speculative else 1)
+
+    def mixed_iteration(self, seqs, pitems):
+        """One mixed pass: the resident decode batch advances first,
+        then the pass's prefill chunks land with the monolithic-prefill
+        cost formula applied per pass (per-call setup + per-token cost —
+        the decomposition overhead Table 3 measures)."""
+        if seqs:
+            self.decode_iteration(seqs)
+        if not pitems:
+            return
+        ntok = sum(n for _, n in pitems)
+        dur = self.pf_setup + self.pf_tok * ntok * \
+            (self.bf if len(pitems) > 1 else 1.0)
+        _sleep(dur)
+        for job, n in pitems:
+            job.state["pos"] = job.state.get("pos", 0) + n
+            job.cursor += n
+        with self._stats_lock:
+            self.stats["prefill_tokens"] += ntok
+            self.stats["calls"] += 1
+            self.stats["busy_ms"] += dur
 
     def op_decode(self, tasks, on_chunk=None):
         n_max = max(int(t["max_new"]) for t in tasks)
@@ -386,7 +451,10 @@ def build_sim_engines(*, llm_max_batch: int = 8, core_decode_ms: float = 25.0,
                       paged_kv: bool = False,
                       kv_block_size: int = 16,
                       speculative: bool = False,
-                      draft_k: int = 4) -> dict:
+                      draft_k: int = 4,
+                      chunked_prefill: bool = False,
+                      prefill_chunk: int = 128,
+                      token_budget=None) -> dict:
     """Engine set with paper-calibrated profiles. lite_llm (gemma-2-2B
     contextualizer / llama-7B judge) is ~4x faster than the core LLM.
     llm_instances>1 puts the LLM engines behind EnginePools (the paper's
@@ -401,14 +469,20 @@ def build_sim_engines(*, llm_max_batch: int = 8, core_decode_ms: float = 25.0,
                         decode_ms_per_step=core_decode_ms,
                         paged=paged_kv, block_size=kv_block_size,
                         speculative=speculative, draft_k=draft_k,
-                        spec_draft_cost=lite_scale)
+                        spec_draft_cost=lite_scale,
+                        chunked_prefill=chunked_prefill,
+                        prefill_chunk=prefill_chunk,
+                        token_budget=token_budget)
     lite = SimLLMEngine(
         "lite_llm", max_batch=llm_max_batch * 2,
         prefill_ms_per_tok=0.235 * lite_scale,
         prefill_setup=8,
         decode_ms_per_step=core_decode_ms * lite_scale,
         decode_ms_per_extra_seq=0.5,
-        paged=paged_kv, block_size=kv_block_size)
+        paged=paged_kv, block_size=kv_block_size,
+        chunked_prefill=chunked_prefill,
+        prefill_chunk=prefill_chunk,
+        token_budget=token_budget)
 
     n = llm_instances
     if n > 1:

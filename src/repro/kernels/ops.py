@@ -12,6 +12,8 @@ from functools import partial
 
 import jax
 
+from repro.kernels.chunk_prefill import \
+    chunk_prefill_attention as _chunk_prefill
 from repro.kernels.decode_attention import decode_attention as _decode
 from repro.kernels.decode_attention import \
     paged_decode_attention as _paged_decode
@@ -65,6 +67,20 @@ def verify_attention(q, k_pool, v_pool, block_tables, length, *,
     interpret = default_interpret() if interpret is None else interpret
     return _verify(q, k_pool, v_pool, block_tables, length, window=window,
                    cap=cap, scale=scale, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("window", "cap", "scale", "bq",
+                                   "interpret"))
+def chunk_prefill_attention(q, k_pool, v_pool, block_tables, start, *,
+                            window=None, cap=None, scale=None, bq=128,
+                            interpret=None):
+    """Chunked-prefill attention over the paged pool (q at absolute
+    positions start[b] + i); Sq == 1 at start = length - 1 reduces to
+    paged_decode_attention."""
+    interpret = default_interpret() if interpret is None else interpret
+    return _chunk_prefill(q, k_pool, v_pool, block_tables, start,
+                          window=window, cap=cap, scale=scale, bq=bq,
+                          interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -106,6 +106,23 @@ def verify_attention_ref(q, k_pool, v_pool, block_tables, length, *,
     return jnp.einsum("bhst,bthd->bshd", p, vr).astype(q.dtype)
 
 
+def chunk_prefill_attention_ref(q, k_pool, v_pool, block_tables, start, *,
+                                window=None, cap=None, scale=None):
+    """XLA `take`-based chunked-prefill path (also the CPU serving path):
+    gather each sequence's paged blocks into a contiguous view, then run
+    masked attention with the chunk's queries at absolute positions
+    ``start[b] + i`` — causal over the resident prefix AND inside the
+    chunk. q (B,Sq,H,hd); k_pool/v_pool (num_blocks, block_size, K, hd);
+    block_tables (B, maxblk) int32; start (B,) int32 chunk-start
+    positions (tokens resident before the chunk; the chunk's own KV is
+    already scattered into the pool). Equivalent to the verify oracle at
+    total length ``start + Sq``."""
+    Sq = q.shape[1]
+    return verify_attention_ref(q, k_pool, v_pool, block_tables,
+                                start + Sq, window=window, cap=cap,
+                                scale=scale)
+
+
 def rwkv6_scan_ref(r, k, v, w, u, state0):
     """r,k,v,w (B,S,H,hd); u (H,hd); state0 (B,H,hd,hd) fp32.
     Sequential reference recurrence:

@@ -20,6 +20,13 @@ hypothesis-driven change, recorded before/after in EXPERIMENTS.md:
                       verify_attention kernel (block-table index maps)
                       instead of the XLA gather path. Read at TRACE time:
                       set before building an engine's jitted steps.
+  pallas_chunk_prefill — route paged GQA PREFILL chunks (S>1) through
+                      the Pallas chunk_prefill_attention kernel: the
+                      chunk's queries stream the sequence's paged prefix
+                      blocks via scalar-prefetched block-table index
+                      maps with a causal intra-chunk mask, instead of
+                      materializing the XLA gathered KV view. Read at
+                      TRACE time, like pallas_paged_attn.
 """
 from __future__ import annotations
 

@@ -17,7 +17,12 @@ router backpressure counted in allocated blocks). --speculative enables
 draft-verify speculative decoding on core_llm (--draft-k tokens drafted
 per target verification step; --spec-drafter picks the model-free
 prompt-lookup drafter or the co-located lite_llm replica pairing);
-greedy outputs stay token-identical to plain decode.
+greedy outputs stay token-identical to plain decode. --chunked-prefill
+streams prompts through each replica's continuous loop as bounded
+chunks mixed with decode iterations (--prefill-chunk tokens per chunk
+under a per-iteration --token-budget), so a long prompt never
+head-of-line-blocks co-resident decodes; chunked prefill is
+token-identical to monolithic prefill by construction.
 """
 from __future__ import annotations
 
@@ -59,6 +64,18 @@ def build_parser() -> argparse.ArgumentParser:
                     help="block-paged KV cache: COW prefix sharing, "
                          "block-table decode, block-based occupancy "
                          "routing with pool backpressure")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="stall-free chunked prefill: prompts advance in "
+                         "bounded chunks between decode iterations under "
+                         "a per-pass token budget (requires "
+                         "--continuous-batching)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="tokens per prefill chunk (default 128; requires "
+                         "--chunked-prefill)")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="per-iteration token budget shared by decode and "
+                         "prefill tokens (default: decode slots + one "
+                         "chunk; requires --chunked-prefill)")
     ap.add_argument("--speculative", action="store_true",
                     help="draft-verify speculative decoding on core_llm "
                          "(token-identical greedy outputs, fewer target "
@@ -78,6 +95,27 @@ def validate_args(ap: argparse.ArgumentParser, args) -> None:
     """Reject incompatible flag combinations with a clear argparse error
     (exit code 2 + usage) instead of a deep runtime stack trace. Fills in
     speculative defaults after validation."""
+    if args.prefill_chunk is not None and not args.chunked_prefill:
+        ap.error("--prefill-chunk requires --chunked-prefill")
+    if args.token_budget is not None and not args.chunked_prefill:
+        ap.error("--token-budget requires --chunked-prefill")
+    if args.chunked_prefill:
+        if args.scheme != "Teola":
+            ap.error("--chunked-prefill requires --scheme Teola (baseline "
+                     "orchestrators drive monolithic prefill batches "
+                     "outside the continuous loop)")
+        if not args.continuous_batching:
+            ap.error("--chunked-prefill requires --continuous-batching "
+                     "(prefill chunks are packed into the persistent "
+                     "decode loop's mixed iterations)")
+        if args.prefill_chunk is not None and args.prefill_chunk < 1:
+            ap.error(f"--prefill-chunk must be >= 1, got "
+                     f"{args.prefill_chunk}")
+        if args.token_budget is not None and args.token_budget < 1:
+            ap.error(f"--token-budget must be >= 1, got "
+                     f"{args.token_budget}")
+    args.prefill_chunk = args.prefill_chunk if args.prefill_chunk \
+        is not None else 128
     if args.draft_k is not None and not args.speculative:
         ap.error("--draft-k requires --speculative")
     if args.spec_drafter is not None and not args.speculative:
@@ -111,9 +149,15 @@ def main():
         engines = build_sim_engines(llm_instances=args.llm_instances,
                                     paged_kv=args.paged_kv,
                                     speculative=args.speculative,
-                                    draft_k=args.draft_k)
+                                    draft_k=args.draft_k,
+                                    chunked_prefill=args.chunked_prefill,
+                                    prefill_chunk=args.prefill_chunk,
+                                    token_budget=args.token_budget)
     else:
-        engines = build_engines(paged_kv=args.paged_kv)
+        engines = build_engines(paged_kv=args.paged_kv,
+                                chunked_prefill=args.chunked_prefill,
+                                prefill_chunk=args.prefill_chunk,
+                                token_budget=args.token_budget)
         if args.llm_instances > 1:
             engines = build_pools(engines, {
                 "core_llm": args.llm_instances,

@@ -199,7 +199,18 @@ def gqa_layer(cfg, spec, p, x, cache, pos, q_block=512, block_tables=None):
         vp = paged_write(cache["v"], v, block_tables, positions)
         new_cache = {"k": kp, "v": vp}
         from repro.launch import optflags
-        if optflags.has("pallas_paged_attn"):
+        if S > 1 and optflags.has("pallas_chunk_prefill"):
+            # chunked-prefill serving path: the prompt chunk's queries
+            # (absolute positions pos + i) attend to the paged prefix and
+            # to the chunk itself through the scalar-prefetched
+            # block-table index maps, q tiled in bq blocks — no gathered
+            # per-sequence KV view. Read at TRACE time like the other
+            # kernel flags: set before building jitted steps.
+            from repro.kernels import ops as kops
+            o = kops.chunk_prefill_attention(
+                q, kp, vp, block_tables, pos, window=spec.window,
+                cap=cfg.attn_logit_softcap, scale=scale).astype(q.dtype)
+        elif optflags.has("pallas_paged_attn"):
             # accelerator serving path: stream physical blocks through the
             # scalar-prefetched table index maps instead of materializing
             # the gathered view. verify_attention covers decode (S=1) and
