@@ -1,0 +1,206 @@
+"""Radix prefix-cache study (REAL JAX engines): prefill latency and TTFT
+under 0% / 50% / 90% shared-prefix traffic, three serving modes:
+
+  off          paged KV, no prefix reuse — every prompt prefills fully
+  instruction  the PR 3 instruction-prefix cache: the caller pre-splits
+               each prompt and passes an explicitly warmed prefix_state
+               (only works when the split is known a priori)
+  radix        the global radix-tree prefix cache: full prompts go in
+               unannotated; any block-aligned prefix cached by ANY
+               earlier query is forked automatically
+
+(a) prefill latency: sequential prompt stream per share level; wall time
+    and prefilled-token count per mode. The radix win at 90% share is
+    the tentpole claim (>= 2x vs off).
+(b) TTFT + decode throughput under Poisson load: open-loop arrivals at
+    fixed request rates, continuous decode loop; time-to-first-token per
+    request and aggregate decoded tokens/s (the no-decode-regression
+    check).
+
+Emits BENCH_radix_cache.json next to this file and CSV rows on stdout.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import fmt_row
+from repro.configs.base import get_config
+from repro.engines.llm_engine import LLMEngine
+
+ARCH = "tiny-lite-llm"
+MAX_LEN = 384
+BLOCK = 16
+SHARED_WORDS = 160          # shared prefix: 10 full blocks
+TAIL_WORDS = 12             # unique tail per shared-traffic request
+UNIQUE_WORDS = SHARED_WORDS + TAIL_WORDS
+N_PREFIX = 2                # distinct shared prefixes (tenants)
+N_REQ = 20
+SHARES = (0.0, 0.5, 0.9)
+RATES = (4.0, 6.0)          # req/s for the TTFT study (decode-loop
+                            # service capacity is ~7.5 req/s — 8+ is
+                            # purely queueing-dominated)
+MAX_NEW = 16
+
+
+def _prefixes():
+    return [" ".join(f"p{t}w{j}" for j in range(SHARED_WORDS))
+            for t in range(N_PREFIX)]
+
+
+def _workload(share: float, tag: str):
+    """Deterministic request stream: request i is shared-prefix traffic
+    iff rng says so; shared requests round-robin over the tenants."""
+    rng = np.random.default_rng(7)
+    reqs = []
+    for i in range(N_REQ):
+        if rng.random() < share:
+            t = i % N_PREFIX
+            text = (_prefixes()[t] + " " +
+                    " ".join(f"{tag}{i}t{j}" for j in range(TAIL_WORDS)))
+            reqs.append((f"{tag}{i}", text, t))
+        else:
+            text = " ".join(f"{tag}{i}u{j}" for j in range(UNIQUE_WORDS))
+            reqs.append((f"{tag}{i}", text, None))
+    return reqs
+
+
+def _engine(mode: str) -> LLMEngine:
+    return LLMEngine("bench", get_config(ARCH), max_len=MAX_LEN, seed=0,
+                     max_batch=8, paged=True, block_size=BLOCK,
+                     num_blocks=640,
+                     prefix_cache="radix" if mode == "radix" else "none")
+
+
+def _prefill_run(eng: LLMEngine, mode: str, reqs, warmed) -> tuple:
+    """Sequential prefill of the stream; returns (wall_s, tokens)."""
+    tokens = 0
+    t0 = time.time()
+    for sid, text, tenant in reqs:
+        task = {"sid": sid, "text": text}
+        if mode == "instruction" and tenant is not None:
+            task = {"sid": sid, "prefix_state": warmed[tenant],
+                    "text": text[len(_prefixes()[tenant]) + 1:]}
+        eng.op_prefill([task])
+        tokens += eng.states[sid].pos
+        eng.release(sid)                # cached blocks outlive the seq
+    wall = time.time() - t0
+    return wall, tokens
+
+
+def _prefill_study(mode: str, share: float) -> dict:
+    eng = _engine(mode)
+    warmed = None
+    if mode == "instruction":
+        warmed = [eng.get_prefix_state(p) for p in _prefixes()]
+    _prefill_run(eng, mode, _workload(share, "w"), warmed)  # jit rehearsal
+    wall, _ = _prefill_run(eng, mode, _workload(share, "s"), warmed)
+    # prefilled tokens = resident pos minus radix/instruction-forked part
+    stats = dict(eng.radix.stats) if eng.radix is not None else {}
+    return {"wall_s": round(wall, 3),
+            "hit_tokens": int(stats.get("hit_tokens", 0))}
+
+
+def _ttft_study(mode: str, share: float, rate: float) -> dict:
+    """Open-loop Poisson arrivals into prefill + continuous decode; TTFT
+    measured from arrival to the first streamed token."""
+    eng = _engine(mode)
+    warmed = [eng.get_prefix_state(p) for p in _prefixes()] \
+        if mode == "instruction" else None
+
+    def drive(reqs, timed):
+        rng = np.random.default_rng(11)
+        ttfts, seqs, threads = [], [], []
+        lock = threading.Lock()
+        t_start = time.time()
+        for sid, text, tenant in reqs:
+            task = {"sid": sid, "text": text}
+            if warmed is not None and tenant is not None:
+                task = {"sid": sid, "prefix_state": warmed[tenant],
+                        "text": text[len(_prefixes()[tenant]) + 1:]}
+
+            def submit(task=task, sid=sid):
+                t_arr = time.time()
+                seen = []
+
+                def first_tok(_txt):
+                    if not seen:
+                        seen.append(time.time() - t_arr)
+                eng.op_prefill([task])
+                sq = eng.submit_decode(sid, MAX_NEW, on_text=first_tok)
+                with lock:
+                    seqs.append((sid, sq, seen))
+            th = threading.Thread(target=submit, daemon=True)
+            th.start()
+            threads.append(th)
+            time.sleep(float(rng.exponential(1.0 / rate)))
+        for th in threads:
+            th.join(300)
+        for sid, sq, seen in seqs:
+            sq.wait(300)
+            if timed and seen:
+                ttfts.append(seen[0])
+        wall = time.time() - t_start
+        for sid, _, _ in seqs:
+            eng.release(sid)
+        return ttfts, wall
+
+    drive(_workload(share, "w"), timed=False)       # jit rehearsal
+    ttfts, wall = drive(_workload(share, "s"), timed=True)
+    eng.stop_decode_loop()
+    return {"ttft_avg_ms": round(float(np.mean(ttfts)) * 1000, 1),
+            "ttft_p90_ms": round(float(np.percentile(ttfts, 90)) * 1000, 1),
+            "decode_tokens_per_s": round(N_REQ * MAX_NEW / wall, 1)}
+
+
+def run():
+    print("study,config,value,detail")
+    out = {"arch": ARCH, "max_len": MAX_LEN, "block_size": BLOCK,
+           "shared_words": SHARED_WORDS, "n_requests": N_REQ,
+           "prefill": {}, "ttft": {}}
+
+    for share in SHARES:
+        row = {}
+        for mode in ("off", "instruction", "radix"):
+            r = _prefill_study(mode, share)
+            row[mode] = r
+            print(fmt_row("prefill_latency", f"{mode}_share{share:.0%}",
+                          r["wall_s"], f"hit_tokens={r['hit_tokens']}"))
+        row["radix_speedup_vs_off"] = round(
+            row["off"]["wall_s"] / row["radix"]["wall_s"], 2)
+        print(fmt_row("prefill_latency", f"radix_speedup_share{share:.0%}",
+                      row["radix_speedup_vs_off"], "wall ratio off/radix"))
+        out["prefill"][f"share_{share:.0%}"] = row
+
+    share = 0.9
+    for rate in RATES:
+        row = {}
+        for mode in ("off", "radix"):
+            # best-of-2: open-loop thread interleaving can hit jit
+            # buckets the rehearsal pass missed; the repeat damps both
+            # that and container scheduling noise
+            r = min((_ttft_study(mode, share, rate) for _ in range(2)),
+                    key=lambda x: x["ttft_avg_ms"])
+            row[mode] = r
+            print(fmt_row("ttft_load", f"{mode}_r{rate:g}",
+                          r["ttft_avg_ms"],
+                          f"p90={r['ttft_p90_ms']}ms "
+                          f"decode={r['decode_tokens_per_s']}tok/s"))
+        row["ttft_ratio_off_over_radix"] = round(
+            row["off"]["ttft_avg_ms"] / row["radix"]["ttft_avg_ms"], 2)
+        row["decode_tput_ratio_radix_over_off"] = round(
+            row["radix"]["decode_tokens_per_s"] /
+            row["off"]["decode_tokens_per_s"], 3)
+        out["ttft"][f"rate_{rate:g}"] = row
+
+    path = Path(__file__).resolve().parent / "BENCH_radix_cache.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"# wrote {path}")
+
+
+if __name__ == "__main__":
+    run()

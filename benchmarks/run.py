@@ -20,7 +20,7 @@ def main() -> None:
     from benchmarks import (fig1_breakdown, fig4_batching, fig8_end_to_end,
                             fig9_colocation, fig10_ablation_graph,
                             fig11_ablation_sched, fig12_critical_path,
-                            fig_paged_kv, fig_spec_decode,
+                            fig_paged_kv, fig_radix_cache, fig_spec_decode,
                             instances_scaling, roofline, table3_prefill)
 
     sections = [
@@ -35,6 +35,7 @@ def main() -> None:
         ("table3_prefill", lambda: table3_prefill.run_table3()),
         ("chunked_prefill", lambda: table3_prefill.run_chunked()),
         ("fig_paged_kv", lambda: fig_paged_kv.run()),
+        ("fig_radix_cache", lambda: fig_radix_cache.run()),
         ("fig_spec_decode", lambda: fig_spec_decode.run()),
         ("instances_scaling", lambda: instances_scaling.run()),
         ("roofline", lambda: roofline.run()),

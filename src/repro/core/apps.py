@@ -23,26 +23,31 @@ from repro.engines.model_free import (ChunkerEngine, SearchAPIEngine,
 def build_engines(*, seed: int = 0, llm_max_batch: int = 4,
                   emb_max_batch: int = 16, paged_kv: bool = False,
                   kv_block_size: int = 16, chunked_prefill: bool = False,
-                  prefill_chunk: int = 128, token_budget=None):
+                  prefill_chunk: int = 128, token_budget=None,
+                  prefix_cache: str = "none"):
     """One shared pool (the paper co-locates apps on shared engines).
     ``paged_kv`` switches the LLM engines to the block-paged KV cache
     (copy-on-write prefix sharing, block-based occupancy/backpressure);
     ``chunked_prefill`` streams prompts through each LLM replica's
     continuous loop as budget-bounded chunks mixed with decode
-    iterations (stall-free prefill)."""
+    iterations (stall-free prefill); ``prefix_cache="radix"`` adds the
+    global radix-tree prefix cache (any shared block-aligned prompt
+    prefix reuses cached KV across queries; requires paged_kv)."""
     return {
         "core_llm": LLMEngine("core_llm", get_config("tiny-core-llm"),
                               seed=seed, max_batch=llm_max_batch,
                               paged=paged_kv, block_size=kv_block_size,
                               chunked_prefill=chunked_prefill,
                               prefill_chunk=prefill_chunk,
-                              token_budget=token_budget),
+                              token_budget=token_budget,
+                              prefix_cache=prefix_cache),
         "lite_llm": LLMEngine("lite_llm", get_config("tiny-lite-llm"),
                               seed=seed + 1, max_batch=llm_max_batch * 2,
                               paged=paged_kv, block_size=kv_block_size,
                               chunked_prefill=chunked_prefill,
                               prefill_chunk=prefill_chunk,
-                              token_budget=token_budget),
+                              token_budget=token_budget,
+                              prefix_cache=prefix_cache),
         "embedding": EmbeddingEngine(max_batch=emb_max_batch),
         "rerank": RerankEngine(max_batch=emb_max_batch),
         "vectordb": VectorDBEngine(),

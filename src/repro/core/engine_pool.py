@@ -136,6 +136,29 @@ class EnginePool:
             return (0 if (free is None or free > 0) else 1, self.load(i))
         return min(range(len(self.replicas)), key=key)
 
+    # -- prefix-aware routing (radix prefix cache) --------------------------
+    def prefix_match_len(self, i: int, text: str) -> int:
+        """Radix-cached prefix length of ``text`` on replica i (0 when
+        the replica has no radix cache). Read-only probe."""
+        fn = getattr(self.replicas[i], "prefix_match_len", None)
+        return fn(text) if fn is not None else 0
+
+    def best_prefix_replica(self, text: str):
+        """Replica whose radix tree holds the LONGEST cached prefix of
+        ``text`` — prefill there reuses the most KV. Exhausted pools are
+        demoted exactly like least_loaded; ties (including the common
+        no-match-anywhere case) return None so the caller falls back to
+        block-aware least-loaded routing."""
+        best_i, best_m = None, 0
+        for i in range(len(self.replicas)):
+            free = self.kv_free_blocks(i)
+            if free is not None and free <= 0:
+                continue
+            m = self.prefix_match_len(i, text)
+            if m > best_m:
+                best_i, best_m = i, m
+        return best_i
+
     # -- slot-aware decode routing (continuous batching) --------------------
     def decode_slots_free(self, i: int):
         """Free decode-loop slots of replica i; None when the replica

@@ -351,6 +351,11 @@ class PooledEngineScheduler(threading.Thread):
         self.period = period
         self.continuous = continuous and hasattr(pool[0], "submit_decode")
         self.chunked = self.continuous and chunked_prefill_enabled(pool[0])
+        # prefix-aware prefill routing: only when some replica carries a
+        # radix prefix cache — flag off keeps routing byte-identical
+        self.prefix_aware = any(
+            getattr(r, "prefix_cache_mode", "none") == "radix"
+            for r in pool)
         self.pending: List[NodeTask] = []
         self.cv = threading.Condition()
         self.running = True
@@ -386,6 +391,44 @@ class PooledEngineScheduler(threading.Thread):
         max_bs = getattr(self.engine, "max_batch", 8)
         return form_batch(self.pending, self.policy, max_bs)
 
+    def _prefix_route(self, t: NodeTask):
+        """Radix prefix-affinity probe for an UNPINNED prefill: the
+        replica whose tree holds the longest cached prefix of the
+        task's prompt (None -> no replica beats a cold prefill; caller
+        falls back to least-loaded). Best-effort: payload construction
+        needs upstream store values, and any surprise there must route,
+        not raise."""
+        if not self.prefix_aware or t.prim.op not in PREFILL_OPS:
+            return None
+        from repro.core.executors import _prefill_payload
+        from repro.core.streams import TokenStream
+
+        def has_stream(v):
+            if isinstance(v, TokenStream):
+                return True
+            if isinstance(v, (list, tuple)):
+                return any(has_stream(x) for x in v)
+            if isinstance(v, dict):
+                return any(has_stream(x) for x in v.values())
+            return False
+
+        store = t.ctx.store
+        keys = [k for _, k in t.prim.config.get("parts", [])
+                if k is not None]
+        if "items_key" in t.prim.config:
+            keys.append(t.prim.config["items_key"])
+        if any(has_stream(store.get(k)) for k in keys):
+            # a streaming part would BLOCK payload construction until
+            # the upstream decode finishes — never stall the router
+            return None
+        try:
+            payload = _prefill_payload(t.prim, t.ctx)
+            if not payload:
+                return None
+            return self.pool.best_prefix_replica(payload[0]["text"])
+        except Exception:  # noqa: BLE001
+            return None
+
     def _submit_continuous(self, tasks: List[NodeTask]):
         """Route each loop-destined task to a replica (KV affinity
         binds; otherwise decodes go slot-aware least-load, prefill
@@ -399,8 +442,15 @@ class PooledEngineScheduler(threading.Thread):
             with self._aff_lock:
                 idx = self.affinity.get(key) if key is not None else None
                 if idx is None:
-                    idx = self.pool.least_loaded() if is_prefill \
-                        else self.pool.least_loaded_decode()
+                    if is_prefill:
+                        # prefix affinity first: the replica with the
+                        # longest radix-cached prefix skips that much
+                        # prefill compute
+                        idx = self._prefix_route(t)
+                        if idx is None:
+                            idx = self.pool.least_loaded()
+                    else:
+                        idx = self.pool.least_loaded_decode()
                     if key is not None:
                         self.affinity[key] = idx
             tokens = estimate_tokens(t.prim)
@@ -443,11 +493,17 @@ class PooledEngineScheduler(threading.Thread):
                     groups.setdefault(idx, []).append(t)
             if unpinned:
                 idx = self.pool.least_loaded()
-                groups.setdefault(idx, []).extend(unpinned)
                 for t in unpinned:
+                    # radix prefix affinity can split a task off the
+                    # fused sub-batch — reusing a long cached prefix
+                    # beats batching a cold prefill (prefix_aware off:
+                    # pidx is always None, one fused sub-batch as before)
+                    pidx = self._prefix_route(t)
+                    tidx = pidx if pidx is not None else idx
+                    groups.setdefault(tidx, []).append(t)
                     key = _seq_key(t)
                     if key is not None:
-                        self.affinity[key] = idx
+                        self.affinity[key] = tidx
         for idx, tasks in groups.items():
             tokens = sum(estimate_tokens(t.prim) for t in tasks)
             self.pool.note_queued(idx, tokens)

@@ -81,7 +81,8 @@ class LLMEngine(DecodeLoopMixin):
                  paged: bool = False, block_size: int = 16,
                  num_blocks: Optional[int] = None,
                  chunked_prefill: bool = False, prefill_chunk: int = 128,
-                 token_budget: Optional[int] = None):
+                 token_budget: Optional[int] = None,
+                 prefix_cache: str = "none"):
         self.name = name
         self.cfg = cfg
         self.max_len = max_len
@@ -104,6 +105,21 @@ class LLMEngine(DecodeLoopMixin):
         self.chunked_prefill = chunked_prefill
         self.prefill_chunk = int(prefill_chunk)
         self.token_budget = token_budget
+        # global radix-tree prefix cache ("radix"): ANY fresh prompt
+        # sharing a cached block-aligned token prefix — across queries
+        # and tenants, not just warmed instructions — forks those blocks
+        # and prefills only the uncached tail. "none" keeps the pre-
+        # existing paths byte-identical (the bespoke instruction-prefix
+        # scan under use_prefix_cache included).
+        if prefix_cache not in ("none", "radix"):
+            raise ValueError(
+                f"prefix_cache must be 'none' or 'radix', got "
+                f"{prefix_cache!r}")
+        if prefix_cache == "radix" and not paged:
+            raise ValueError(
+                "prefix_cache='radix' requires paged=True (cached "
+                "prefixes live in the refcounted block pool)")
+        self.prefix_cache_mode = prefix_cache
         self.tok = HashTokenizer(cfg.vocab_size)
         self.params = init_params(cfg, jax.random.key(seed), dtype)
         self.states: Dict[str, SeqState] = {}
@@ -142,8 +158,11 @@ class LLMEngine(DecodeLoopMixin):
                 kvc.bytes_per_token(cfg), decode_slots=max_batch,
                 allocator=self.alloc, block_size=block_size,
                 block_bytes=kvc.paged_block_bytes(cfg, block_size))
+            self.radix = kvc.RadixPrefixCache(self.alloc, block_size) \
+                if prefix_cache == "radix" else None
         else:
             self.num_blocks = 0
+            self.radix = None
             self.meter = kvc.OccupancyMeter(kvc.bytes_per_token(cfg),
                                             decode_slots=max_batch)
         self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "calls": 0,
@@ -172,6 +191,7 @@ class LLMEngine(DecodeLoopMixin):
         c.chunked_prefill = self.chunked_prefill
         c.prefill_chunk = self.prefill_chunk
         c.token_budget = self.token_budget
+        c.prefix_cache_mode = self.prefix_cache_mode
         c.tok = self.tok
         c.params = self.params
         c.states = {}
@@ -196,9 +216,13 @@ class LLMEngine(DecodeLoopMixin):
                 self.meter.bytes_per_tok, decode_slots=c.max_batch,
                 allocator=c.alloc, block_size=c.block_size,
                 block_bytes=self.meter.block_bytes)
+            # per-replica tree: cached blocks live in one replica's pool
+            c.radix = kvc.RadixPrefixCache(c.alloc, c.block_size) \
+                if self.prefix_cache_mode == "radix" else None
         else:
             c.prefix_cache = self.prefix_cache
             c._prefix_toks = self._prefix_toks
+            c.radix = None
             c.meter = kvc.OccupancyMeter(self.meter.bytes_per_tok,
                                          decode_slots=c.max_batch)
         c.stats = {"prefill_tokens": 0, "decode_tokens": 0, "calls": 0,
@@ -248,7 +272,42 @@ class LLMEngine(DecodeLoopMixin):
         behind a busy replica's decode."""
         if not self.paged:
             return None
-        return max(0, self.alloc.free_blocks() - self._reserved_snapshot())
+        free = self.alloc.free_blocks() - self._reserved_snapshot()
+        if self.radix is not None:
+            # cached leaves are EVICTABLE capacity: a pool "full" of
+            # sole-owner radix blocks is not exhausted — admission
+            # evicts on demand — so it must not demote this replica
+            free += self._evictable_snapshot()
+        return max(0, free)
+
+    def _evictable_snapshot(self) -> int:
+        """Radix-cached blocks reclaimable on demand (tree is the sole
+        owner). LOCK-FREE on the radix side — the mirror list is rebound,
+        never mutated — so wait predicates and the router can call this
+        without risking lock-order inversion against tree mutators."""
+        if self.radix is None:
+            return 0
+        refs = self.alloc.refs_snapshot()
+        return sum(1 for b in self.radix.block_snapshot() if refs[b] == 1)
+
+    def _reserved_less_evictable(self) -> int:
+        """wait_for_free predicate input: reservations minus the radix
+        tree's reclaimable blocks — a prefill waiter whose need is
+        covered by free + evictable wakes up, and the authoritative
+        under-lock recheck in _acquire_with_blocks performs the actual
+        eviction."""
+        return self._reserved_snapshot() - self._evictable_snapshot()
+
+    def prefix_match_len(self, text: str) -> int:
+        """Longest radix-cached token prefix of ``text`` (0 without the
+        radix cache) — the pool router's prefix-affinity probe.
+        Read-only: no increfs, no LRU touches."""
+        if self.radix is None:
+            return 0
+        toks = self.tok.encode(text)
+        if len(toks) < 2:
+            return 0
+        return self.radix.match_len(toks[:len(toks) - 1])
 
     # -- jitted batched step: write chunk, return logits of last position
     def _build_step(self):
@@ -508,7 +567,12 @@ class LLMEngine(DecodeLoopMixin):
         while True:
             self._paged_lock.acquire()
             needed = sum(self._blocks_needed(s, n) for s, n in pairs)
-            if needed <= self.alloc.free_blocks() - self._reserved_locked():
+            avail = self.alloc.free_blocks() - self._reserved_locked()
+            if needed > avail and self.radix is not None:
+                # cached leaves are evictable capacity: reclaim LRU
+                # leaves before treating the pool as full
+                avail += self.radix.evict(needed - avail)
+            if needed <= avail:
                 return
             self._paged_lock.release()
             # one authoritative under-lock recheck happens above even
@@ -521,7 +585,7 @@ class LLMEngine(DecodeLoopMixin):
                     f"{self.alloc.free_blocks()} free, need {needed})")
             timed_out = not self.alloc.wait_for_free(
                 needed, timeout=deadline - time.time(),
-                reserved_fn=self._reserved_snapshot)
+                reserved_fn=self._reserved_less_evictable)
 
     # -- batched execution -------------------------------------------------
     def _stack_states(self, states: List[SeqState]):
@@ -756,6 +820,8 @@ class LLMEngine(DecodeLoopMixin):
         st, toks, ptoks = self._prepare_prefill_task(task)
 
         def _done(job):
+            if job.error is None and toks:
+                self._radix_insert(st, ptoks, toks)
             if job.error is None and self.spec is not None:
                 self.spec.note_prefill(sid, ptoks, toks)
             if on_done is not None:
@@ -816,6 +882,10 @@ class LLMEngine(DecodeLoopMixin):
                 for job, n in pitems:
                     chunk = job.tokens[job.cursor:job.cursor + n]
                     need = self._blocks_needed(job.state, len(chunk))
+                    if need > free and self.radix is not None:
+                        # reclaim cached leaves (non-blocking, decrefs
+                        # only) before declining the chunk
+                        free += self.radix.evict(need - free)
                     if need <= free:
                         free -= need
                         items.append((job, chunk))
@@ -868,8 +938,13 @@ class LLMEngine(DecodeLoopMixin):
             return False
         try:
             needed = self._blocks_needed(seq.state, seq.n)
-            if needed <= (self.alloc.free_blocks()
-                          - self._reserved_locked()):
+            avail = self.alloc.free_blocks() - self._reserved_locked()
+            if needed > avail and self.radix is not None:
+                # cached leaves never count AGAINST admission: they are
+                # evictable capacity, reclaimed eagerly here so the
+                # reservation is backed by actually-free blocks
+                avail += self.radix.evict(needed - avail)
+            if needed <= avail:
                 self._decode_reserved[seq.sid] = needed
                 return True
             return False
@@ -994,6 +1069,40 @@ class LLMEngine(DecodeLoopMixin):
                 best_st, best_ptoks = st, ptoks
         return best_st, best_ptoks
 
+    def _radix_fork_locked(self, toks):
+        """Radix-cache front half of a fresh prefill: fork the longest
+        cached block-aligned prefix. The match is capped at len-1 so at
+        least one token always prefills — the forked sequence's
+        next-token logits are then computed fresh, exactly as on the
+        cold path (the tree never needs to store last-token logits).
+        Returns (state, prefix_tokens, suffix_tokens)."""
+        # cap at len-1 (>= 1 token must prefill) AND max_len-9 (the
+        # suffix must survive _prepare_prefill_task's max_len clamp —
+        # a radix fork's last_token is a placeholder until it does)
+        cap = max(0, min(len(toks) - 1, self.max_len - 9))
+        with self._paged_lock:
+            blocks, mlen = self.radix.match_prefix(toks[:cap])
+        if not mlen:
+            return self.new_state(), [], toks
+        st = PagedSeqState(table=blocks, pos=mlen)
+        return st, toks[:mlen], toks[mlen:]
+
+    def _radix_insert(self, st, ptoks, toks):
+        """Publish a completed prefill's full-block prefix into the
+        radix tree (incref'd by the tree; the sequence keeps its own
+        refs, so release() never strips cached blocks). Skipped when the
+        state's position doesn't equal the known token count — explicit
+        prefix-state forks with unknown prefix tokens and partial-
+        prefill continuations must not be cached under a wrong key."""
+        if self.radix is None:
+            return
+        full = list(ptoks) + list(toks)
+        full = full[: (len(full) // self.block_size) * self.block_size]
+        if not full or st.pos != len(list(ptoks) + list(toks)):
+            return
+        with self._paged_lock:
+            self.radix.insert(full, st.table)
+
     def _prepare_prefill_task(self, t: dict):
         """Per-task prefill front half (shared by op_prefill and
         submit_prefill): resolve/create the sequence state, fork a
@@ -1008,17 +1117,24 @@ class LLMEngine(DecodeLoopMixin):
             st = self.states.get(sid)
             if st is None:
                 ps = t.get("prefix_state")
-                if ps is not None:
-                    ptoks = self._prefix_tokens_of_locked(ps)
-                elif self.use_prefix_cache:
-                    ps, mtoks = self._match_prefix_locked(toks)
+                if ps is None and self.radix is not None:
+                    # the GENERAL mechanism: any cached block-aligned
+                    # token prefix forks, warmed instruction or not —
+                    # this replaces the bespoke instruction scan below
+                    st, ptoks, toks = self._radix_fork_locked(toks)
+                    forked = bool(ptoks)
+                else:
                     if ps is not None:
-                        ptoks = mtoks
-                        toks = toks[len(mtoks):]
-                st = self.fork_state(ps) if ps is not None \
-                    else self.new_state()
+                        ptoks = self._prefix_tokens_of_locked(ps)
+                    elif self.use_prefix_cache:
+                        ps, mtoks = self._match_prefix_locked(toks)
+                        if ps is not None:
+                            ptoks = mtoks
+                            toks = toks[len(mtoks):]
+                    st = self.fork_state(ps) if ps is not None \
+                        else self.new_state()
+                    forked = ps is not None
                 self.states[sid] = st
-                forked = ps is not None
         toks = toks[: self.max_len - st.pos - 8]
         if forked and not toks:
             # prompt == cached instruction: the forked state is already
@@ -1064,6 +1180,12 @@ class LLMEngine(DecodeLoopMixin):
             items.append((st, toks))
         if items:
             self.prefill_batch(items)
+        if self.radix is not None:
+            # publish AFTER the forward pass so cached blocks always
+            # hold fully-written KV
+            for sid, ptoks, toks in notes:
+                if toks:
+                    self._radix_insert(self.states[sid], ptoks, toks)
         if self.spec is not None:
             # record token contexts (prompt-lookup drafting) and mirror
             # the prefill onto the draft engine — AFTER the prefill so
@@ -1123,6 +1245,10 @@ class LLMEngine(DecodeLoopMixin):
             with self._lock:
                 self.prefix_cache[instruction] = st
                 self._prefix_toks[instruction] = toks
+            # with the radix cache on, warmup seeds the GLOBAL tree too
+            # — a cold replica and a warmed one then serve identical
+            # forks whether or not the orchestrator warmed them
+            self._radix_insert(st, [], toks)
         return st
 
     def release(self, sid: str):

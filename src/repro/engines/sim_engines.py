@@ -69,9 +69,26 @@ class SimLLMEngine(DecodeLoopMixin):
                  draft_k: int = 4, spec_accept: float = 0.7,
                  spec_draft_cost: float = 0.25,
                  chunked_prefill: bool = False, prefill_chunk: int = 128,
-                 token_budget=None):
+                 token_budget=None, prefix_cache: str = "none"):
         self.name = name
         self.max_batch = max_batch
+        # radix prefix-cache ACCOUNTING: with prefix_cache="radix" a
+        # fresh prompt's longest block-aligned word prefix already seen
+        # by this replica is "cached" — its tokens are skipped from the
+        # modeled prefill cost (capped at len-1: one token always
+        # prefills, like the real engine) and every block-aligned prefix
+        # of the prompt is remembered. The chunk set is prefix-closed,
+        # so its size equals the real tree's node-block count; kv_blocks
+        # counts it once (shared prefixes are deduplicated capacity).
+        if prefix_cache not in ("none", "radix"):
+            raise ValueError(
+                f"prefix_cache must be 'none' or 'radix', got "
+                f"{prefix_cache!r}")
+        if prefix_cache == "radix" and not paged:
+            raise ValueError(
+                "prefix_cache='radix' requires paged=True")
+        self.prefix_cache_mode = prefix_cache
+        self._radix_chunks: set = set()
         # chunked-prefill ACCOUNTING: prompts queued via submit_prefill
         # advance prefill_chunk tokens per mixed loop pass, each pass
         # paying the per-call setup plus per-token cost the monolithic
@@ -112,7 +129,8 @@ class SimLLMEngine(DecodeLoopMixin):
         self.use_prefix_cache = False      # enabled by LlamaDistPC
         self._lock = threading.Lock()
         self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "calls": 0,
-                      "decode_iters": 0, "busy_ms": 0.0}
+                      "decode_iters": 0, "busy_ms": 0.0,
+                      "radix_hit_tokens": 0}
         self._stats_lock = threading.Lock()
         self._decode_loop = None
 
@@ -131,7 +149,8 @@ class SimLLMEngine(DecodeLoopMixin):
             spec_draft_cost=self.spec_draft_cost,
             chunked_prefill=self.chunked_prefill,
             prefill_chunk=self.prefill_chunk,
-            token_budget=self.token_budget)
+            token_budget=self.token_budget,
+            prefix_cache=self.prefix_cache_mode)
         c.prefix_cache = self.prefix_cache
         c.use_prefix_cache = self.use_prefix_cache
         return c
@@ -152,9 +171,17 @@ class SimLLMEngine(DecodeLoopMixin):
     def kv_blocks(self) -> int:
         """Allocated-block count: per-sequence positions block-quantized,
         plus the shared instruction prefixes ONCE (their tokens are
-        excluded from forked sequences' pos by op_prefill)."""
+        excluded from forked sequences' pos by op_prefill). In radix
+        mode the tree's chunk set IS the shared capacity (each member is
+        one cached block); sequences count only their uncached tails."""
         bs = self.block_size
         with self._lock:
+            if self.prefix_cache_mode == "radix":
+                # pos already excludes skipped (cached) prefix tokens —
+                # each sequence contributes only its uncached tail
+                blocks = sum(-(-st.get("pos", 0) // bs)
+                             for st in self.states.values())
+                return blocks + len(self._radix_chunks)
             blocks = sum(-(-st.get("pos", 0) // bs)
                          for st in self.states.values())
             blocks += sum(-(-st.get("pos", 0) // bs)
@@ -179,21 +206,52 @@ class SimLLMEngine(DecodeLoopMixin):
     def _ntok(self, text: str) -> int:
         return max(1, len(text.split()))
 
+    def _radix_match_locked(self, words) -> int:
+        """Longest cached block-aligned word prefix, capped at len-1
+        (self._lock held). Returns matched word count."""
+        bs = self.block_size
+        kmax = max(0, (len(words) - 1)) // bs
+        m = 0
+        for k in range(1, kmax + 1):
+            if tuple(words[:k * bs]) in self._radix_chunks:
+                m = k * bs
+            else:
+                break
+        return m
+
+    def _radix_insert_locked(self, words):
+        """Remember every block-aligned prefix of ``words`` (the modeled
+        insert: one set member per cached tree block)."""
+        bs = self.block_size
+        for k in range(1, len(words) // bs + 1):
+            self._radix_chunks.add(tuple(words[:k * bs]))
+
     def _prefill_task_len(self, t) -> tuple:
         """(state, effective prompt tokens) for one prefill task —
         instruction-prefix reuse skips cached prefix tokens exactly like
-        the batch path."""
+        the batch path; radix mode generalizes the skip to ANY cached
+        block-aligned prompt prefix and remembers this prompt's."""
         text = t["text"]
         n = self._ntok(text)
+        m = 0
         with self._lock:
             fresh = t["sid"] not in self.states
             st = self.states.setdefault(t["sid"], {"pos": 0})
-            if fresh and self.use_prefix_cache:
+            if fresh and self.prefix_cache_mode == "radix":
+                words = text.split() or [text]
+                m = self._radix_match_locked(words)
+                self._radix_insert_locked(words)
+                if m:
+                    n = max(1, n - m)
+            elif fresh and self.use_prefix_cache:
                 # instruction-prefix KV reuse: skip cached prefix tokens
                 for instr in self.prefix_cache:
                     if text.startswith(instr):
                         n = max(1, n - self._ntok(instr))
                         break
+        if m:
+            with self._stats_lock:
+                self.stats["radix_hit_tokens"] += m
         return st, n
 
     def op_prefill(self, tasks):
@@ -354,12 +412,26 @@ class SimLLMEngine(DecodeLoopMixin):
             self.stats["decode_iters"] += 1
             self.stats["busy_ms"] += dur
 
+    def prefix_match_len(self, text: str) -> int:
+        """Longest radix-cached word prefix of ``text`` (0 without the
+        radix cache) — the pool router's prefix-affinity probe."""
+        if self.prefix_cache_mode != "radix":
+            return 0
+        words = text.split() or [text]
+        with self._lock:
+            return self._radix_match_locked(words)
+
     def get_prefix_state(self, instruction: str):
         with self._lock:
             st = self.prefix_cache.get(instruction)
             if st is None:
                 st = {"pos": self._ntok(instruction)}
                 self.prefix_cache[instruction] = st
+            if self.prefix_cache_mode == "radix":
+                # warmup seeds the modeled tree too (cold/warm replica
+                # symmetry, like the real engine)
+                self._radix_insert_locked(instruction.split()
+                                          or [instruction])
         return st
 
     def release(self, sid: str):
@@ -454,7 +526,8 @@ def build_sim_engines(*, llm_max_batch: int = 8, core_decode_ms: float = 25.0,
                       draft_k: int = 4,
                       chunked_prefill: bool = False,
                       prefill_chunk: int = 128,
-                      token_budget=None) -> dict:
+                      token_budget=None,
+                      prefix_cache: str = "none") -> dict:
     """Engine set with paper-calibrated profiles. lite_llm (gemma-2-2B
     contextualizer / llama-7B judge) is ~4x faster than the core LLM.
     llm_instances>1 puts the LLM engines behind EnginePools (the paper's
@@ -472,7 +545,8 @@ def build_sim_engines(*, llm_max_batch: int = 8, core_decode_ms: float = 25.0,
                         spec_draft_cost=lite_scale,
                         chunked_prefill=chunked_prefill,
                         prefill_chunk=prefill_chunk,
-                        token_budget=token_budget)
+                        token_budget=token_budget,
+                        prefix_cache=prefix_cache)
     lite = SimLLMEngine(
         "lite_llm", max_batch=llm_max_batch * 2,
         prefill_ms_per_tok=0.235 * lite_scale,
@@ -482,7 +556,8 @@ def build_sim_engines(*, llm_max_batch: int = 8, core_decode_ms: float = 25.0,
         paged=paged_kv, block_size=kv_block_size,
         chunked_prefill=chunked_prefill,
         prefill_chunk=prefill_chunk,
-        token_budget=token_budget)
+        token_budget=token_budget,
+        prefix_cache=prefix_cache)
 
     n = llm_instances
     if n > 1:

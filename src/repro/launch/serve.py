@@ -23,6 +23,13 @@ chunks mixed with decode iterations (--prefill-chunk tokens per chunk
 under a per-iteration --token-budget), so a long prompt never
 head-of-line-blocks co-resident decodes; chunked prefill is
 token-identical to monolithic prefill by construction.
+--prefix-cache radix enables the global radix-tree prefix cache on each
+LLM replica (requires --paged-kv): ANY prompt sharing a cached
+block-aligned token prefix — across queries and tenants, not just
+warmed instructions — forks the cached blocks and prefills only the
+uncached tail, with LRU leaf eviction under memory pressure and
+prefix-aware pool routing; outputs stay token-identical to the cache
+being off.
 """
 from __future__ import annotations
 
@@ -76,6 +83,12 @@ def build_parser() -> argparse.ArgumentParser:
                     help="per-iteration token budget shared by decode and "
                          "prefill tokens (default: decode slots + one "
                          "chunk; requires --chunked-prefill)")
+    ap.add_argument("--prefix-cache", choices=("none", "radix"),
+                    default="none",
+                    help="global radix-tree prefix cache: any shared "
+                         "block-aligned prompt prefix reuses cached KV "
+                         "blocks across queries, with LRU leaf eviction "
+                         "(requires --paged-kv)")
     ap.add_argument("--speculative", action="store_true",
                     help="draft-verify speculative decoding on core_llm "
                          "(token-identical greedy outputs, fewer target "
@@ -116,6 +129,9 @@ def validate_args(ap: argparse.ArgumentParser, args) -> None:
                      f"{args.token_budget}")
     args.prefill_chunk = args.prefill_chunk if args.prefill_chunk \
         is not None else 128
+    if args.prefix_cache == "radix" and not args.paged_kv:
+        ap.error("--prefix-cache radix requires --paged-kv (cached "
+                 "prefixes live in the refcounted block pool)")
     if args.draft_k is not None and not args.speculative:
         ap.error("--draft-k requires --speculative")
     if args.spec_drafter is not None and not args.speculative:
@@ -152,12 +168,14 @@ def main():
                                     draft_k=args.draft_k,
                                     chunked_prefill=args.chunked_prefill,
                                     prefill_chunk=args.prefill_chunk,
-                                    token_budget=args.token_budget)
+                                    token_budget=args.token_budget,
+                                    prefix_cache=args.prefix_cache)
     else:
         engines = build_engines(paged_kv=args.paged_kv,
                                 chunked_prefill=args.chunked_prefill,
                                 prefill_chunk=args.prefill_chunk,
-                                token_budget=args.token_budget)
+                                token_budget=args.token_budget,
+                                prefix_cache=args.prefix_cache)
         if args.llm_instances > 1:
             engines = build_pools(engines, {
                 "core_llm": args.llm_instances,

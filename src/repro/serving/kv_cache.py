@@ -180,11 +180,23 @@ class BlockAllocator:
             self._refs[b] -= 1
             if self._refs[b] == 0:
                 self._free.append(b)
+            if self._refs[b] <= 1:
+                # 0: a block returned to the free list; 1: a block held
+                # by a radix prefix cache lost its last live-sequence
+                # reference and became EVICTABLE capacity — both improve
+                # wait_for_free predicates that credit evictable blocks
                 self._cv.notify_all()
 
     def refcount(self, b: int) -> int:
         with self._cv:
             return self._refs[b]
+
+    def refs_snapshot(self) -> list:
+        """Copy of the refcount array. Safe to call from a
+        ``wait_for_free`` predicate: the condition's underlying lock is
+        reentrant, so the waiting thread may re-enter here."""
+        with self._cv:
+            return list(self._refs)
 
     def notify_waiters(self):
         """Wake wait_for_free waiters whose predicate improved for a
@@ -237,6 +249,259 @@ def trim_table(alloc: "BlockAllocator", table, pos_end: int,
         alloc.decref(table.pop())
         dropped += 1
     return dropped
+
+
+# ---------------------------------------------------------------------------
+# Global radix-tree prefix cache (cross-query / cross-tenant KV reuse)
+
+class _RadixNode:
+    """One radix-tree edge: a BLOCK-ALIGNED token run plus the physical
+    blocks holding its KV. Children are keyed by the token tuple of
+    their first block — two children of one node always differ within
+    that first block (otherwise insert would have shared it), so the
+    key is collision-free without per-token child maps."""
+    __slots__ = ("tokens", "blocks", "children", "parent", "last_access")
+
+    def __init__(self, tokens, blocks, parent):
+        self.tokens = tuple(tokens)
+        self.blocks = list(blocks)
+        self.children: dict = {}
+        self.parent = parent
+        self.last_access = 0
+
+
+def _common_len(a, b) -> int:
+    n = min(len(a), len(b))
+    for i in range(n):
+        if a[i] != b[i]:
+            return i
+    return n
+
+
+class RadixPrefixCache:
+    """Radix tree over TOKEN SEQUENCES whose edges own refcounted paged
+    block runs — the generalization of the instruction-prefix cache:
+    ANY two requests (any query, any tenant) sharing a block-aligned
+    token prefix share its KV blocks, not just prompts starting with a
+    warmed instruction.
+
+    Ownership model — the tree is just another block OWNER on the
+    engine's ``BlockAllocator``:
+
+      * ``insert`` increfs every newly adopted block (the tree holds
+        exactly ONE reference per cached block, deduplicating repeat
+        inserts of an already-cached path),
+      * ``match_prefix`` increfs the matched run on the CALLER's behalf
+        — the caller extends a sequence's block table with them exactly
+        like ``fork_state``, and releases them through the normal
+        table decref path,
+      * ``evict`` walks LRU leaves and drops the tree's references; a
+        block still referenced by a live sequence survives its leaf's
+        eviction (refcount > 0), so eviction can never free live KV.
+
+    Everything is block-granular: only WHOLE blocks are cached or
+    matched (a partial tail block stays exclusively owned by the
+    sequence that wrote it), so a matched sequence's first write lands
+    on a fresh block and never COWs cached state.
+
+    Thread safety: all tree mutation runs under one internal lock,
+    taken BEFORE any allocator call (lock order: radix -> allocator —
+    the allocator never calls back). ``_blocks``, the flat mirror of
+    every cached block id, is REBOUND (never mutated in place) so
+    lock-free readers — the engine's evictable-capacity snapshot in
+    routing and wait predicates — can iterate a consistent list."""
+
+    def __init__(self, alloc: BlockAllocator, block_size: int):
+        self.alloc = alloc
+        self.block_size = int(block_size)
+        self._root = _RadixNode((), [], None)
+        self._blocks: list = []         # flat mirror of all cached blocks
+        self._clock = 0                 # LRU timestamps (monotone counter)
+        self._lock = threading.Lock()
+        self.stats = {"hits": 0, "misses": 0, "hit_tokens": 0,
+                      "inserted_blocks": 0, "evicted_blocks": 0,
+                      "freed_blocks": 0, "evictions": 0}
+
+    # -- introspection ------------------------------------------------------
+    def num_blocks(self) -> int:
+        return len(self._blocks)
+
+    def block_snapshot(self) -> list:
+        """Current mirror list (lock-free: the list object is immutable
+        once published; mutation rebinds)."""
+        return self._blocks
+
+    def num_nodes(self) -> int:
+        with self._lock:
+            n, stack = 0, [self._root]
+            while stack:
+                node = stack.pop()
+                n += len(node.children)
+                stack.extend(node.children.values())
+            return n
+
+    def evictable_blocks(self) -> int:
+        """Cached blocks the tree is the SOLE owner of (refcount 1) —
+        the capacity eviction could return to the free list."""
+        with self._lock:
+            return sum(1 for b in self._blocks
+                       if self.alloc.refcount(b) == 1)
+
+    # -- match --------------------------------------------------------------
+    def _match_locked(self, tokens, touch: bool):
+        bs = self.block_size
+        toks = tuple(tokens)
+        node = self._root
+        out, matched = [], 0
+        if touch:
+            self._clock += 1
+            node.last_access = self._clock
+        while len(toks) - matched >= bs:
+            rest = toks[matched:]
+            child = node.children.get(rest[:bs])
+            if child is None:
+                break
+            take = (_common_len(child.tokens, rest) // bs) * bs
+            if touch:
+                child.last_access = self._clock
+            out.extend(child.blocks[: take // bs])
+            matched += take
+            if take < len(child.tokens):
+                break
+            node = child
+        return out, matched
+
+    def match_prefix(self, tokens):
+        """Longest cached block-aligned prefix of ``tokens`` ->
+        (block_ids, matched_token_count). Every returned block is
+        increfed on the CALLER's behalf: the caller owns a table
+        reference (fork semantics) and releases it through the normal
+        sequence-release decref path. Touches the matched path's LRU
+        timestamps."""
+        with self._lock:
+            out, matched = self._match_locked(tokens, touch=True)
+            for b in out:
+                self.alloc.incref(b)
+            if matched:
+                self.stats["hits"] += 1
+                self.stats["hit_tokens"] += matched
+            else:
+                self.stats["misses"] += 1
+            return out, matched
+
+    def match_len(self, tokens) -> int:
+        """Read-only probe (router prefix affinity): matched token count
+        without increfs or LRU touches."""
+        with self._lock:
+            return self._match_locked(tokens, touch=False)[1]
+
+    # -- insert -------------------------------------------------------------
+    def insert(self, tokens, table) -> int:
+        """Cache a finished prompt's block-aligned prefix: walk the tree
+        reusing already-cached nodes (a duplicate insert adopts
+        nothing), split mid-edge at the last shared block boundary, and
+        adopt the new suffix blocks from ``table`` with one tree incref
+        each. Returns the number of newly cached blocks."""
+        bs = self.block_size
+        toks = tuple(tokens[: (len(tokens) // bs) * bs])
+        if not toks:
+            return 0
+        with self._lock:
+            self._clock += 1
+            self._root.last_access = self._clock
+            node, off, added = self._root, 0, 0
+            while off < len(toks):
+                rest = toks[off:]
+                child = node.children.get(rest[:bs])
+                if child is None:
+                    nb = list(table[off // bs: off // bs + len(rest) // bs])
+                    for b in nb:
+                        self.alloc.incref(b)
+                    new = _RadixNode(rest, nb, node)
+                    new.last_access = self._clock
+                    node.children[rest[:bs]] = new
+                    self._blocks = self._blocks + nb     # rebind, no mutate
+                    added = len(nb)
+                    break
+                take = (_common_len(child.tokens, rest) // bs) * bs
+                child.last_access = self._clock
+                if take < len(child.tokens):
+                    self._split_locked(child, take)
+                node = child
+                off += take
+            self.stats["inserted_blocks"] += added
+            return added
+
+    def _split_locked(self, node: _RadixNode, take: int):
+        """Split an edge at block boundary ``take``: ``node`` keeps the
+        first ``take`` tokens/blocks; a new child inherits the remainder
+        and node's former children. No refcounts change — the tree's
+        single reference per block just moves between nodes."""
+        bs = self.block_size
+        lower = _RadixNode(node.tokens[take:], node.blocks[take // bs:],
+                           node)
+        lower.children = node.children
+        for ch in lower.children.values():
+            ch.parent = lower
+        lower.last_access = node.last_access
+        node.tokens = node.tokens[:take]
+        node.blocks = node.blocks[:take // bs]
+        node.children = {lower.tokens[:bs]: lower}
+
+    # -- eviction -----------------------------------------------------------
+    def evict(self, want: int) -> int:
+        """LRU leaf eviction under memory pressure: drop least-recently-
+        matched leaves until ``want`` blocks have actually RETURNED to
+        the free list, or nothing more can free. Leaves whose blocks are
+        all still referenced by live sequences are skipped — dropping
+        them frees nothing (refcounts keep live KV safe regardless) and
+        ancestors of a fully-shared leaf are fully shared too, so
+        skipping never strands freeable inner blocks. Evicting a leaf
+        can expose its parent as the next LRU leaf (cascade). Returns
+        blocks freed to the pool."""
+        if want <= 0:
+            return 0
+        with self._lock:
+            freed, evicted_any, skipped = 0, False, set()
+            while freed < want:
+                leaf = self._lru_leaf_locked(skipped)
+                if leaf is None:
+                    break
+                if not any(self.alloc.refcount(b) == 1
+                           for b in leaf.blocks):
+                    skipped.add(id(leaf))
+                    continue
+                for b in leaf.blocks:
+                    if self.alloc.refcount(b) == 1:
+                        freed += 1
+                    self.alloc.decref(b)
+                del leaf.parent.children[leaf.tokens[:self.block_size]]
+                self.stats["evicted_blocks"] += len(leaf.blocks)
+                self.stats["evictions"] += 1
+                evicted_any = True
+            if evicted_any:
+                self._rebuild_mirror_locked()
+                self.stats["freed_blocks"] += freed
+            return freed
+
+    def _lru_leaf_locked(self, skipped):
+        best, stack = None, [self._root]
+        while stack:
+            n = stack.pop()
+            if n.children:
+                stack.extend(n.children.values())
+            elif n is not self._root and id(n) not in skipped:
+                if best is None or n.last_access < best.last_access:
+                    best = n
+        return best
+
+    def _rebuild_mirror_locked(self):
+        blocks, stack = [], [self._root]
+        while stack:
+            n = stack.pop()
+            blocks.extend(n.blocks)
+            stack.extend(n.children.values())
+        self._blocks = blocks                # rebind, no mutate
 
 
 def _paged_elem_shape(cfg: ModelConfig, spec: LayerSpec, repeat: int,

@@ -1,6 +1,12 @@
 """Serving-path correctness: chunked (partial) prefill + decode against the
 KV/state cache must match the full forward pass — this is the property
-Teola's Pass 3/4 depend on."""
+Teola's Pass 3/4 depend on. The engine-level matrix at the bottom extends
+the same contract across every serving-feature combination: {radix prefix
+cache on/off} x {dense/paged} x {legacy/continuous decode} x {chunked
+prefill on/off} x {speculative on/off} must all emit the exact tokens of
+the canonical all-off engine."""
+import itertools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,6 +14,7 @@ import pytest
 
 from conftest import ASSIGNED
 from repro.configs.base import get_config
+from repro.engines.llm_engine import LLMEngine
 from repro.models.transformer import apply_model, init_params
 from repro.serving.kv_cache import init_cache, cache_bytes
 
@@ -97,3 +104,123 @@ def test_per_sequence_positions():
                                rtol=3e-2, atol=3e-2)
     np.testing.assert_allclose(np.asarray(out[1, -1]), np.asarray(f1[0, -1]),
                                rtol=3e-2, atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# Cross-feature equivalence matrix: every serving-feature combination must
+# be TOKEN-IDENTICAL to the canonical all-off engine. Greedy decode makes
+# the contract exact — no tolerance, string equality.
+
+_MCFG = get_config("tiny-lite-llm")
+_MSHARED = " ".join(f"ctx{i}" for i in range(24))
+_MPROMPTS = [
+    ("q0", _MSHARED + " alpha beta"),
+    ("q1", _MSHARED + " gamma delta"),      # shared 24-word prefix
+    ("q2", _MSHARED + " epsilon zeta"),
+    ("q3", "a totally different prompt about optics"),
+]
+
+# (radix, paged, continuous, chunked, spec); radix requires the paged
+# block pool -> those 8 cells are structurally invalid, leaving 24.
+_MATRIX = [c for c in itertools.product([False, True], repeat=5)
+           if not (c[0] and not c[1])]
+
+
+def _run_cell(*, radix, paged, continuous, chunked, spec,
+              num_blocks=None):
+    eng = LLMEngine("m", _MCFG, max_len=256, seed=0, max_batch=4,
+                    paged=paged, block_size=8, num_blocks=num_blocks,
+                    chunked_prefill=chunked, prefill_chunk=24,
+                    prefix_cache="radix" if radix else "none")
+    if spec:
+        eng.enable_speculative(draft=None, k=3)
+    # prefill sequentially so later prompts can hit prefixes cached by
+    # earlier ones (same-batch tasks insert only after the batch)
+    for sid, text in _MPROMPTS:
+        eng.op_prefill([{"sid": sid, "text": text}])
+    if continuous:
+        seqs = [(sid, eng.submit_decode(sid, 10)) for sid, _ in _MPROMPTS]
+        outs = {}
+        for sid, sq in seqs:
+            assert sq.wait(120), f"decode {sid} timed out"
+            outs[sid] = sq.result
+    else:
+        res = eng.op_decode([{"sid": sid, "max_new": 10}
+                             for sid, _ in _MPROMPTS])
+        outs = {sid: r for (sid, _), r in zip(_MPROMPTS, res)}
+    stats = dict(eng.radix.stats) if eng.radix is not None else None
+    eng.stop_decode_loop()
+    return outs, stats
+
+
+_BASELINE = {}
+
+
+def _baseline():
+    """Canonical all-off run, computed once per module."""
+    if not _BASELINE:
+        outs, _ = _run_cell(radix=False, paged=False, continuous=False,
+                            chunked=False, spec=False)
+        _BASELINE.update(outs)
+    return dict(_BASELINE)
+
+
+@pytest.mark.parametrize("radix,paged,continuous,chunked,spec", _MATRIX)
+def test_feature_matrix_token_identity(radix, paged, continuous, chunked,
+                                       spec):
+    outs, stats = _run_cell(radix=radix, paged=paged, continuous=continuous,
+                            chunked=chunked, spec=spec)
+    assert outs == _baseline()
+    if radix:
+        # the shared 24-word prefix (3 full blocks) must actually hit
+        assert stats["hits"] >= 2 and stats["hit_tokens"] >= 2 * 24
+
+
+def test_matrix_mid_stream_admission_and_eviction():
+    """The hardest cell exercised mid-stream: radix + paged + continuous
+    + chunked with a pool small enough that later admissions must evict
+    cached leaves while a long decode stays resident. Outputs remain
+    token-identical to the all-off engine run sequentially."""
+    # 16 shared words (2 full blocks) + 8 distinct words (1 full block):
+    # each prompt caches one NEW block, so the tree grows under a fixed
+    # pool until admission must evict LRU leaves
+    shared16 = " ".join(_MSHARED.split()[:16])
+    prompts = [("p%d" % i, shared16 + " " +
+                " ".join(f"t{i}w{j}" for j in range(8)))
+               for i in range(8)]
+
+    base = LLMEngine("b", _MCFG, max_len=256, seed=0, max_batch=8,
+                     paged=False)
+    expect = {}
+    for sid, text in prompts + [("bg", "background long decode prompt")]:
+        base.op_prefill([{"sid": sid, "text": text}])
+    for sid, _ in prompts:
+        expect[sid] = base.op_decode([{"sid": sid, "max_new": 8}])[0]
+    expect["bg"] = base.op_decode([{"sid": "bg", "max_new": 40}])[0]
+
+    eng = LLMEngine("m", _MCFG, max_len=256, seed=0, max_batch=8,
+                    paged=True, block_size=8, num_blocks=14,
+                    chunked_prefill=True, prefill_chunk=16,
+                    prefix_cache="radix")
+    eng.op_prefill([{"sid": "bg", "text": "background long decode prompt"}])
+    bg = eng.submit_decode("bg", 40)    # stays resident throughout
+    outs = {}
+    for sid, text in prompts:           # admitted mid-decode, one by one
+        eng.op_prefill([{"sid": sid, "text": text}])
+        sq = eng.submit_decode(sid, 8)
+        assert sq.wait(120), f"decode {sid} timed out"
+        outs[sid] = sq.result
+        eng.release(sid)                # only the radix refs survive
+    assert bg.wait(120), "background decode timed out"
+    outs["bg"] = bg.result
+    stats = dict(eng.radix.stats)
+    eng.stop_decode_loop()
+
+    assert outs == expect
+    assert stats["hits"] >= 4           # shared prefix reused across seqs
+    assert stats["evictions"] > 0       # pool pressure forced LRU eviction
+    # nothing leaked: dropping every ref returns the pool to capacity
+    for sid in list(eng.states):
+        eng.release(sid)
+    eng.radix.evict(10 ** 6)
+    assert eng.alloc.free_blocks() == eng.alloc.capacity

@@ -1,0 +1,615 @@
+"""Global radix-tree prefix cache: tree unit behavior (block-aligned
+insert/match/split, LRU leaf eviction, refcount ownership), engine-level
+token identity with the cache on vs off (monolithic + chunked prefill),
+eviction composing with admission reservations, cold-vs-warm replica
+symmetry, prefix-aware pool routing, the sim engine's modeled hit rate,
+hypothesis property tests against a dict-of-prefixes oracle, and a
+concurrency stress run under eviction pressure."""
+import threading
+import time
+
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.engine_pool import EnginePool
+from repro.engines.llm_engine import LLMEngine
+from repro.engines.sim_engines import SimLLMEngine
+from repro.serving import kv_cache as kvc
+
+CFG = get_config("tiny-lite-llm")
+BS = 8                                  # block size used across the file
+SHARED = " ".join(f"ctx{i}" for i in range(40))     # 40-token shared prefix
+
+
+def _tree(num_blocks=64, bs=4):
+    alloc = kvc.BlockAllocator(num_blocks)
+    return kvc.RadixPrefixCache(alloc, bs), alloc
+
+
+def _seq_blocks(alloc, n):
+    """Allocate n blocks as a live 'sequence table'."""
+    return [alloc.alloc() for _ in range(n)]
+
+
+def _engine(*, radix=True, **kw):
+    kw.setdefault("max_len", 256)
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("block_size", BS)
+    return LLMEngine("t", CFG, paged=True,
+                     prefix_cache="radix" if radix else "none", **kw)
+
+
+def _wait(pred, timeout=30.0):
+    t0 = time.time()
+    while time.time() - t0 < timeout:
+        if pred():
+            return True
+        time.sleep(0.002)
+    return False
+
+
+# ---------------------------------------------------------------------------
+# Tree unit behavior (allocator only — no model)
+
+def test_insert_match_roundtrip_and_block_alignment():
+    tree, alloc = _tree(bs=4)
+    tbl = _seq_blocks(alloc, 3)          # covers 10 tokens at bs=4
+    toks = list(range(100, 110))
+    added = tree.insert(toks, tbl)
+    assert added == 2                    # only the 2 FULL blocks cached
+    assert tree.num_blocks() == 2
+    # partial tail block stays sequence-owned
+    assert alloc.refcount(tbl[2]) == 1
+    blocks, m = tree.match_prefix(toks)
+    assert m == 8 and blocks == tbl[:2]
+    # match increfs on the caller's behalf: seq ref + tree ref + ours
+    assert all(alloc.refcount(b) == 3 for b in blocks)
+    # matches never cover a partial block
+    _, m2 = tree.match_prefix(toks[:7])
+    assert m2 == 4
+
+
+def test_shared_prefix_deduplicated_and_split():
+    tree, alloc = _tree(bs=4)
+    ta = _seq_blocks(alloc, 3)
+    a = [1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12]
+    tree.insert(a, ta)
+    assert tree.num_blocks() == 3 and tree.num_nodes() == 1
+    # b shares a's first 2 blocks then diverges mid-edge -> split
+    tb = list(ta[:2]) + [alloc.alloc()]
+    b = a[:8] + [99, 98, 97, 96]
+    added = tree.insert(b, tb)
+    assert added == 1                    # only b's divergent block adopted
+    assert tree.num_blocks() == 4
+    assert tree.num_nodes() == 3         # split node + two leaves
+    # both full paths still match
+    assert tree.match_prefix(a)[1] == 12
+    assert tree.match_prefix(b)[1] == 12
+    # the shared run is cached once: ONE tree ref per block
+    tree2, m = tree.match_prefix(a[:8])
+    assert m == 8 and tree2 == ta[:2]
+
+
+def test_duplicate_insert_adopts_nothing():
+    tree, alloc = _tree(bs=4)
+    tbl = _seq_blocks(alloc, 2)
+    toks = list(range(8))
+    assert tree.insert(toks, tbl) == 2
+    refs = [alloc.refcount(b) for b in tbl]
+    assert tree.insert(toks, tbl) == 0   # idempotent
+    assert [alloc.refcount(b) for b in tbl] == refs
+
+
+def test_evict_frees_sole_owner_and_skips_live():
+    tree, alloc = _tree(bs=4)
+    ta = _seq_blocks(alloc, 2)
+    tb = _seq_blocks(alloc, 2)
+    tree.insert([1, 2, 3, 4, 5, 6, 7, 8], ta)
+    tree.insert([9, 10, 11, 12, 13, 14, 15, 16], tb)
+    # drop sequence A's refs: its cached blocks become tree-sole-owned
+    for b in ta:
+        alloc.decref(b)
+    assert tree.evictable_blocks() == 2
+    free0 = alloc.free_blocks()
+    freed = tree.evict(2)
+    assert freed == 2
+    assert alloc.free_blocks() == free0 + 2
+    # B's leaf survives (all its blocks are live-referenced: freeing it
+    # would reclaim nothing)
+    assert tree.match_prefix([9, 10, 11, 12, 13, 14, 15, 16])[1] == 8
+    assert all(alloc.refcount(b) >= 1 for b in tb)
+    # A's path is gone
+    assert tree.match_prefix([1, 2, 3, 4])[1] == 0
+
+
+def test_evict_cascades_through_exposed_parents():
+    tree, alloc = _tree(bs=4)
+    tbl = _seq_blocks(alloc, 3)
+    tree.insert(list(range(12)), tbl)
+    tb2 = list(tbl[:1]) + [alloc.alloc()]
+    tree.insert(list(range(4)) + [50, 51, 52, 53], tb2)  # splits at 4
+    for b in set(tbl + tb2):
+        alloc.decref(b)                  # all sequences released
+    assert tree.evictable_blocks() == tree.num_blocks() == 4
+    freed = tree.evict(100)              # ask for more than exists
+    assert freed == 4
+    assert tree.num_blocks() == 0 and tree.num_nodes() == 0
+    assert alloc.free_blocks() == alloc.capacity
+
+
+def test_lru_order_follows_matches():
+    tree, alloc = _tree(bs=4)
+    ta, tb = _seq_blocks(alloc, 1), _seq_blocks(alloc, 1)
+    tree.insert([1, 2, 3, 4], ta)
+    tree.insert([5, 6, 7, 8], tb)
+    for b in ta + tb:
+        alloc.decref(b)
+    tree.match_prefix([1, 2, 3, 4])      # touch A: B becomes LRU
+    assert tree.evict(1) == 1
+    assert tree.match_prefix([1, 2, 3, 4])[1] == 4   # A survived
+    assert tree.match_len([5, 6, 7, 8]) == 0         # B evicted
+
+
+def test_match_len_is_read_only():
+    tree, alloc = _tree(bs=4)
+    tbl = _seq_blocks(alloc, 2)
+    tree.insert(list(range(8)), tbl)
+    refs = [alloc.refcount(b) for b in tbl]
+    assert tree.match_len(list(range(8))) == 8
+    assert [alloc.refcount(b) for b in tbl] == refs
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: token identity, prefill savings, chunked skip, eviction
+
+def _run_prompts(eng, prompts, max_new=6):
+    outs = []
+    for i, p in enumerate(prompts):
+        sid = f"s{i}"
+        eng.op_prefill([{"sid": sid, "text": p}])
+        outs.append(eng.op_decode([{"sid": sid, "max_new": max_new}])[0])
+    return outs
+
+
+def test_radix_token_identity_and_prefill_savings():
+    """Cache on == cache off token-for-token, while prefilling strictly
+    fewer tokens on shared-prefix traffic."""
+    prompts = [SHARED + " query one", SHARED + " query two about more",
+               "unrelated cold prompt", SHARED + " query one"]
+    on = _engine(radix=True)
+    off = _engine(radix=False)
+    assert _run_prompts(on, prompts) == _run_prompts(off, prompts)
+    assert on.radix.stats["hit_tokens"] > 0
+    assert on.stats["prefill_tokens"] < off.stats["prefill_tokens"]
+
+
+def test_radix_release_keeps_cache_and_reuses_blocks():
+    """Released sequences leave their prefix cached; a repeat prompt
+    forks the SAME physical blocks instead of re-prefilling."""
+    eng = _engine()
+    eng.op_prefill([{"sid": "a", "text": SHARED + " tail"}])
+    ta = set(eng.states["a"].table)
+    eng.release("a")
+    assert eng.radix.num_blocks() > 0
+    used0 = eng.alloc.used_blocks()
+    eng.op_prefill([{"sid": "b", "text": SHARED + " tail"}])
+    assert set(eng.states["b"].table) & ta          # physical reuse
+    # only the uncached tail allocated fresh blocks
+    assert eng.alloc.used_blocks() - used0 <= 2
+    eng.release("b")
+
+
+def test_chunked_prefill_skips_cached_chunks():
+    """With chunked prefill on, a cached prefix is skipped BEFORE
+    chunking: the second prompt streams only its uncached tail through
+    the loop, and tokens stay identical to the cache-off path."""
+    def run(radix):
+        eng = _engine(radix=radix, chunked_prefill=True, prefill_chunk=16)
+        outs = _run_prompts(eng, [SHARED + " alpha", SHARED + " beta"])
+        pf = eng.stats["prefill_tokens"]
+        eng.stop_decode_loop()
+        return outs, pf
+
+    (on, pf_on), (off, pf_off) = run(True), run(False)
+    assert on == off
+    assert pf_on < pf_off               # whole cached chunks skipped
+
+
+def test_eviction_under_pressure_stays_token_identical():
+    """A pool too small to hold every query's cache forces LRU eviction
+    mid-workload; outputs still match the cache-off engine and no block
+    leaks (everything frees after release + full evict)."""
+    prompts = [" ".join(f"p{k}w{i}" for i in range(30)) + " q"
+               for k in range(6)]
+    on = _engine(radix=True, num_blocks=16)
+    off = _engine(radix=False, num_blocks=16)
+    for i, p in enumerate(prompts):
+        sid = f"s{i}"
+        on.op_prefill([{"sid": sid, "text": p}])
+        off.op_prefill([{"sid": sid, "text": p}])
+        assert on.op_decode([{"sid": sid, "max_new": 4}]) == \
+            off.op_decode([{"sid": sid, "max_new": 4}])
+        on.release(sid)
+        off.release(sid)
+    assert on.radix.stats["evictions"] > 0          # pressure was real
+    on.radix.evict(10**6)
+    assert on.alloc.free_blocks() == on.alloc.capacity   # no leaks
+
+
+def test_admission_counts_cached_blocks_as_evictable():
+    """try_admit must treat tree-sole-owned blocks as reclaimable: a
+    decode whose worst case exceeds raw free blocks — but not free +
+    evictable — is admitted (evicting on demand), not deferred."""
+    eng = _engine(num_blocks=12, max_len=64)        # 11 usable blocks
+    eng.op_prefill([{"sid": "warm", "text": " ".join(
+        f"w{i}" for i in range(50))}])
+    eng.release("warm")                  # 6 full blocks, tree-sole-owned
+    assert eng.kv_free_blocks() == 11    # evictable counts as free
+    eng.op_prefill([{"sid": "d", "text": "short seed prompt"}])
+    seq = eng.submit_decode("d", 48)     # worst case exceeds raw free
+    assert seq.wait(60)
+    eng.stop_decode_loop()
+    assert eng.radix.stats["freed_blocks"] > 0
+
+
+def test_cold_vs_warm_replica_symmetry():
+    """op_prefill instruction-cache asymmetry fix: a replica warmed via
+    get_prefix_state and a cold replica produce identical tokens AND
+    identical cross-query block sharing, because warmup seeds the same
+    radix tree the first query would."""
+    instr = " ".join(f"inst{i}" for i in range(16))  # 2 full blocks
+    queries = [instr + " ask one", instr + " ask two"]
+
+    def sharing(eng):
+        tables = [eng.states[f"s{i}"].table for i in range(len(queries))]
+        return sorted(len(set(a) & set(b))
+                      for i, a in enumerate(tables)
+                      for b in tables[i + 1:])
+
+    warm = _engine()
+    warm.get_prefix_state(instr)         # warmup path
+    warm_out = _run_prompts(warm, queries)
+    cold = _engine()
+    cold_out = _run_prompts(cold, queries)
+    assert warm_out == cold_out
+    assert sharing(warm) == sharing(cold)
+    assert sharing(cold)[0] >= 2         # the instruction blocks ARE shared
+
+
+def test_flag_off_paths_untouched():
+    """prefix_cache='none' engines carry no tree and never consult one."""
+    eng = _engine(radix=False)
+    assert eng.radix is None
+    assert eng.prefix_match_len("anything at all") == 0
+    assert eng.kv_free_blocks() == eng.alloc.free_blocks()
+
+
+def test_radix_requires_paged():
+    with pytest.raises(ValueError, match="requires paged"):
+        LLMEngine("t", CFG, paged=False, prefix_cache="radix")
+    with pytest.raises(ValueError, match="prefix_cache"):
+        LLMEngine("t", CFG, paged=True, prefix_cache="bogus")
+    with pytest.raises(ValueError):
+        SimLLMEngine("s", prefix_cache="radix")     # sim mirrors the rule
+
+
+def test_serve_flag_validation():
+    from repro.launch.serve import build_parser, validate_args
+    ap = build_parser()
+    args = ap.parse_args(["--prefix-cache", "radix", "--paged-kv"])
+    validate_args(ap, args)              # valid combination
+    args = ap.parse_args(["--prefix-cache", "radix"])
+    with pytest.raises(SystemExit):
+        validate_args(ap, args)          # radix without --paged-kv
+
+
+# ---------------------------------------------------------------------------
+# Prefix-aware pool routing
+
+def test_pool_best_prefix_replica():
+    proto = SimLLMEngine("llm", paged=True, block_size=4,
+                         prefix_cache="radix")
+    pool = EnginePool.replicate(proto, 2, name="llm")
+    text = " ".join(f"w{i}" for i in range(12))
+    assert pool.best_prefix_replica(text) is None   # nothing cached yet
+    pool[1].op_prefill([{"sid": "seed", "text": text}])
+    assert pool.best_prefix_replica(text + " more") == 1
+    assert pool.prefix_match_len(1, text) >= 8
+    assert pool.prefix_match_len(0, text) == 0
+
+
+def test_scheduler_routes_prefill_to_prefix_replica():
+    """An unpinned prefill whose prompt has a cached prefix on a BUSY
+    replica still routes there — prefix affinity beats least-load."""
+    from repro.core import primitives as P
+    from repro.core.primitives import Graph, Primitive
+    from repro.core.runtime import (NodeTask, PooledEngineScheduler,
+                                    QueryContext)
+    proto = SimLLMEngine("llm", paged=True, block_size=4,
+                         prefix_cache="radix")
+    pool = EnginePool.replicate(proto, 2, name="llm")
+    text = " ".join(f"w{i}" for i in range(12))
+    pool[1].op_prefill([{"sid": "seed", "text": text}])
+    routed = []
+    s = PooledEngineScheduler(pool, lambda eng, b: routed.append(eng.name),
+                              policy="to")
+    assert s.prefix_aware
+    s.on_complete = lambda t: None
+    s.start()
+    pool.note_queued(1, 10_000)          # replica 1 looks heavily loaded
+    prim = Primitive(op=P.PREFILL, engine="llm", component="c",
+                     config={"sid": "q", "instruction": text + " more",
+                             "parts": [("i", None)]},
+                     produces={"out"})
+    s.submit(NodeTask(prim, QueryContext(Graph(), {})))
+    assert _wait(lambda: routed, timeout=5)
+    assert routed[0].endswith(".r1")     # followed the cached prefix
+    s.stop()
+
+
+def test_scheduler_prefix_routing_off_without_radix():
+    from repro.core.runtime import PooledEngineScheduler
+    pool = EnginePool.replicate(SimLLMEngine("llm"), 2, name="llm")
+    s = PooledEngineScheduler(pool, lambda eng, b: None, policy="to")
+    assert not s.prefix_aware            # flag off: routing untouched
+
+
+# ---------------------------------------------------------------------------
+# Sim engine modeled hit rate
+
+def test_sim_radix_models_prefill_savings():
+    cold = SimLLMEngine("c", paged=True, block_size=4)
+    warm = SimLLMEngine("w", paged=True, block_size=4,
+                        prefix_cache="radix")
+    text = " ".join(f"w{i}" for i in range(20))
+    for eng in (cold, warm):
+        eng.op_prefill([{"sid": "a", "text": text}])
+        eng.op_prefill([{"sid": "b", "text": text + " tail"}])
+        eng.op_prefill([{"sid": "c", "text": text + " other end"}])
+    assert warm.stats["radix_hit_tokens"] == 40     # 20 tokens x 2 hits
+    assert warm.stats["prefill_tokens"] < cold.stats["prefill_tokens"]
+    # chunk set is prefix-closed: shared blocks counted ONCE pool-wide
+    assert warm.kv_blocks() < cold.kv_blocks()
+    assert warm.prefix_match_len(text) == 16        # capped at len-1
+
+
+def test_sim_warmup_seeds_tree():
+    eng = SimLLMEngine("s", paged=True, block_size=4,
+                       prefix_cache="radix")
+    instr = " ".join(f"i{k}" for k in range(8))
+    eng.get_prefix_state(instr)
+    assert eng.prefix_match_len(instr + " q") == 8
+
+
+# ---------------------------------------------------------------------------
+# Concurrency stress: shared-prefix prefills under eviction pressure
+
+def test_concurrent_prefill_with_eviction_pressure():
+    """Two threads prefill shared-prefix prompts while a third forces
+    eviction; afterwards: no pad-block references anywhere, no negative
+    or dangling refcounts, free-list conservation, and every decode
+    matches the single-threaded cache-off engine token for token."""
+    prompts = [SHARED + f" worker query {i}" for i in range(8)]
+    ref = _engine(radix=False)
+    expected = {p: None for p in prompts}
+    for i, p in enumerate(prompts):
+        ref.op_prefill([{"sid": f"r{i}", "text": p}])
+        expected[p] = ref.op_decode([{"sid": f"r{i}", "max_new": 4}])[0]
+
+    eng = _engine(num_blocks=48)
+    results, errors = {}, []
+
+    def worker(lo):
+        try:
+            for i in range(lo, len(prompts), 2):
+                sid = f"w{i}"
+                eng.op_prefill([{"sid": sid, "text": prompts[i]}])
+                results[prompts[i]] = eng.op_decode(
+                    [{"sid": sid, "max_new": 4}])[0]
+                eng.release(sid)
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    stop = threading.Event()
+
+    def evictor():
+        while not stop.is_set():
+            eng.radix.evict(2)
+            time.sleep(0.001)
+
+    threads = [threading.Thread(target=worker, args=(k,)) for k in (0, 1)]
+    ev = threading.Thread(target=evictor, daemon=True)
+    ev.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(120)
+    stop.set()
+    ev.join(10)
+
+    assert not errors, errors
+    for p, out in results.items():
+        assert out == expected[p], f"diverged on {p!r}"
+    refs = eng.alloc.refs_snapshot()
+    assert refs[0] == 0                  # pad block never touched
+    assert all(r >= 0 for r in refs)
+    # conservation: every non-free block is owned by the tree alone now
+    # (all sequences released); a full evict returns the pool to empty
+    eng.radix.evict(10**6)
+    assert eng.alloc.free_blocks() == eng.alloc.capacity
+
+
+# ---------------------------------------------------------------------------
+# Property tests vs a brute-force dict-of-prefixes oracle. Run with
+# hypothesis when the optional dep is installed; ALWAYS run with a
+# seeded stdlib-random program generator (same executor, same
+# invariants), so the oracle gates CI regardless of the environment.
+
+import random  # noqa: E402
+
+_OBS = 4                                 # oracle block size
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover - env dependent
+    HAVE_HYPOTHESIS = False
+
+
+def _random_program(rng, n_ops=24):
+    """Random interleaving of insert / match / release / evict over a
+    tiny token alphabet (high collision rate -> deep prefix sharing)."""
+    ops = []
+    for _ in range(rng.randint(1, n_ops)):
+        kind = rng.choice(["insert", "insert", "match", "release",
+                           "evict"])
+        if kind in ("insert", "match"):
+            toks = [rng.randint(0, 2)
+                    for _ in range(rng.randint(0, 14))]
+            ops.append((kind, toks))
+        elif kind == "release":
+            ops.append((kind, rng.randint(0, 30)))
+        else:
+            ops.append((kind, rng.randint(1, 8)))
+    return ops
+
+
+def _oracle_match(cached, toks):
+    """Longest block-aligned prefix present in the dict-of-prefixes."""
+    best = 0
+    for k in range(_OBS, len(toks) + 1, _OBS):
+        if tuple(toks[:k]) in cached:
+            best = k
+    return best
+
+
+def _run_oracle_program(ops):
+    """Execute a program against tree + oracle, asserting after every
+    op: match_prefix returns the longest cached block-aligned prefix;
+    every refcount equals (live tables holding b) + (1 if cached) — so
+    eviction can never have freed a live-referenced block; the free
+    list conserves blocks exactly."""
+    alloc = kvc.BlockAllocator(256)
+    tree = kvc.RadixPrefixCache(alloc, _OBS)
+    cached = {}                          # tuple(prefix) -> True (oracle)
+    live = []                            # live sequence tables
+
+    def check_invariants():
+        owners = {}
+        for tbl in live:
+            for b in tbl:
+                owners[b] = owners.get(b, 0) + 1
+        for b in tree.block_snapshot():
+            owners[b] = owners.get(b, 0) + 1
+        refs = alloc.refs_snapshot()
+        for b in range(1, alloc.num_blocks):
+            assert refs[b] == owners.get(b, 0), f"block {b}"
+        assert alloc.free_blocks() == alloc.capacity - len(
+            [b for b in range(1, alloc.num_blocks) if owners.get(b)])
+
+    for kind, arg in ops:
+        if kind == "insert":
+            toks = arg
+            nfull = len(toks) // _OBS
+            # build a live sequence the way the engine does: fork the
+            # cached prefix, allocate fresh blocks for the tail
+            blocks, m = tree.match_prefix(toks[:max(0, len(toks) - 1)])
+            tail = [alloc.alloc()
+                    for _ in range(-(-(len(toks) - m) // _OBS))]
+            tbl = blocks + tail
+            live.append(tbl)
+            tree.insert(toks, tbl)
+            for k in range(_OBS, nfull * _OBS + 1, _OBS):
+                cached[tuple(toks[:k])] = True
+        elif kind == "match":
+            toks = arg
+            blocks, m = tree.match_prefix(toks)
+            assert m == _oracle_match(cached, toks)
+            assert len(blocks) == m // _OBS
+            for b in blocks:             # give the refs straight back
+                alloc.decref(b)
+        elif kind == "release" and live:
+            tbl = live.pop(arg % len(live))
+            for b in tbl:
+                alloc.decref(b)
+        elif kind == "evict":
+            freed = tree.evict(arg)
+            assert 0 <= freed <= alloc.capacity
+            # sync the oracle: drop entries no longer matchable
+            dead = [k for k in cached
+                    if tree.match_len(list(k)) < len(k)]
+            for k in dead:
+                del cached[k]
+        check_invariants()
+
+    # teardown: every block must come back to the free list
+    for tbl in live:
+        for b in tbl:
+            alloc.decref(b)
+    live.clear()
+    tree.evict(10**6)
+    assert tree.num_blocks() == 0
+    assert alloc.free_blocks() == alloc.capacity
+
+
+def _run_longest_prefix_case(seqs):
+    alloc = kvc.BlockAllocator(128)
+    tree = kvc.RadixPrefixCache(alloc, _OBS)
+    cached = {}
+    for toks in seqs:
+        nfull = len(toks) // _OBS
+        tbl = [alloc.alloc() for _ in range(-(-len(toks) // _OBS))]
+        tree.insert(toks, tbl)
+        for k in range(_OBS, nfull * _OBS + 1, _OBS):
+            cached[tuple(toks[:k])] = True
+        for b in tbl:
+            alloc.decref(b)
+    for toks in seqs:
+        for probe in (toks, toks + [0], toks[:5]):
+            blocks, m = tree.match_prefix(probe)
+            assert m == _oracle_match(cached, probe)
+            for b in blocks:
+                alloc.decref(b)
+
+
+@pytest.mark.parametrize("seed", range(60))
+def test_radix_matches_prefix_dict_oracle(seed):
+    _run_oracle_program(_random_program(random.Random(seed)))
+
+
+@pytest.mark.parametrize("seed", range(40))
+def test_match_is_longest_cached_prefix(seed):
+    rng = random.Random(1000 + seed)
+    seqs = [[rng.randint(0, 1) for _ in range(rng.randint(4, 12))]
+            for _ in range(rng.randint(1, 6))]
+    _run_longest_prefix_case(seqs)
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def _hyp_programs(draw):
+        n = draw(st.integers(1, 24))
+        ops = []
+        for _ in range(n):
+            kind = draw(st.sampled_from(
+                ["insert", "match", "release", "evict"]))
+            if kind in ("insert", "match"):
+                ops.append((kind, draw(st.lists(st.integers(0, 2),
+                                                max_size=14))))
+            elif kind == "release":
+                ops.append((kind, draw(st.integers(0, 30))))
+            else:
+                ops.append((kind, draw(st.integers(1, 8))))
+        return ops
+
+    @given(_hyp_programs())
+    @settings(max_examples=80, deadline=None)
+    def test_radix_oracle_hypothesis(ops):
+        _run_oracle_program(ops)
+
+    @given(st.lists(st.lists(st.integers(0, 1), min_size=4, max_size=12),
+                    min_size=1, max_size=6))
+    @settings(max_examples=60, deadline=None)
+    def test_longest_prefix_hypothesis(seqs):
+        _run_longest_prefix_case(seqs)
