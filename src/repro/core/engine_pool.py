@@ -54,11 +54,22 @@ class EnginePool:
     anything exposing the op_* executor interface and (optionally)
     ``clone()`` / ``kv_occupancy()`` can be pooled."""
 
-    def __init__(self, replicas: List[Any], name: str = ""):
+    def __init__(self, replicas: List[Any], name: str = "",
+                 role: str = "unified"):
         if not replicas:
             raise ValueError("EnginePool needs at least one replica")
+        if role not in ("prefill", "decode", "unified", "disaggregated"):
+            raise ValueError(f"unknown pool role {role!r}")
         self.replicas = list(replicas)
         self.name = name or getattr(replicas[0], "name", "pool")
+        # role specialization: "unified" replicas serve both phases (the
+        # default — byte-identical to the pre-role pool); "prefill" /
+        # "decode" pools serve one phase; DisaggregatedEnginePool mixes
+        # both behind one engine name with a migration handoff between
+        # them. Every replica is stamped for introspection.
+        self.role = role
+        for r in self.replicas:
+            setattr(r, "pool_role", role)
         self._loads = [_ReplicaLoad() for _ in self.replicas]
         self._lock = threading.Lock()
 
@@ -127,14 +138,18 @@ class EnginePool:
         fn = getattr(self.replicas[i], "kv_free_blocks", None)
         return fn() if fn is not None else None
 
-    def least_loaded(self) -> int:
+    def least_loaded(self, indices=None) -> int:
         """Replica for routed batch work. A replica whose paged-KV pool
         is EXHAUSTED only receives work when every replica is exhausted
-        (admission backpressure at the routing tier)."""
+        (admission backpressure at the routing tier). ``indices``
+        restricts the candidate set (role-specialized dispatch); None —
+        the default — considers every replica, byte-identical to the
+        pre-role router."""
         def key(i):
             free = self.kv_free_blocks(i)
             return (0 if (free is None or free > 0) else 1, self.load(i))
-        return min(range(len(self.replicas)), key=key)
+        return min(indices if indices is not None
+                   else range(len(self.replicas)), key=key)
 
     # -- prefix-aware routing (radix prefix cache) --------------------------
     def prefix_match_len(self, i: int, text: str) -> int:
@@ -143,14 +158,16 @@ class EnginePool:
         fn = getattr(self.replicas[i], "prefix_match_len", None)
         return fn(text) if fn is not None else 0
 
-    def best_prefix_replica(self, text: str):
+    def best_prefix_replica(self, text: str, indices=None):
         """Replica whose radix tree holds the LONGEST cached prefix of
         ``text`` — prefill there reuses the most KV. Exhausted pools are
         demoted exactly like least_loaded; ties (including the common
         no-match-anywhere case) return None so the caller falls back to
-        block-aware least-loaded routing."""
+        block-aware least-loaded routing. ``indices`` restricts the
+        candidate set (role-specialized dispatch)."""
         best_i, best_m = None, 0
-        for i in range(len(self.replicas)):
+        for i in (indices if indices is not None
+                  else range(len(self.replicas))):
             free = self.kv_free_blocks(i)
             if free is not None and free <= 0:
                 continue
@@ -166,26 +183,98 @@ class EnginePool:
         fn = getattr(self.replicas[i], "decode_slots_free", None)
         return fn() if fn is not None else None
 
-    def least_loaded_decode(self) -> int:
+    def least_loaded_decode(self, indices=None) -> int:
         """Replica for a new continuous-batching decode: a replica with a
         free decode slot starts the sequence NEXT iteration, while a full
         loop queues it behind a whole sequence — so free-slot replicas
         win outright; a block-exhausted paged pool demotes a replica the
         same way (its loop would defer admission); ties fall back to
-        token load."""
+        token load. ``indices`` restricts the candidate set
+        (role-specialized dispatch)."""
         def key(i):
             slots = self.decode_slots_free(i)
             blocks = self.kv_free_blocks(i)
             has_free = (slots is None or slots > 0) and \
                 (blocks is None or blocks > 0)
             return (0 if has_free else 1, self.load(i))
-        return min(range(len(self.replicas)), key=key)
+        return min(indices if indices is not None
+                   else range(len(self.replicas)), key=key)
 
     def loads(self) -> List[float]:
         return [self.load(i) for i in range(len(self.replicas))]
 
     def __repr__(self):
         return f"<EnginePool {self.name} x{len(self.replicas)}>"
+
+
+class DisaggregatedEnginePool(EnginePool):
+    """Role-specialized pool: replicas [0, n_prefill) are PREFILL
+    specialists, the rest DECODE specialists, behind one engine name.
+
+    Prefill replicas run (chunked or monolithic) prefill at full token
+    budget with no co-resident decodes to time-slice against; decode
+    replicas run the continuous decode loop with no prompt chunks
+    stealing budget. The scheduler's two-stage dispatch routes PREFILL
+    ops to the prefill side (prefix-aware, block-aware least-loaded as
+    in a unified pool, restricted to ``prefill_indices``) and, when the
+    first decode op of a sequence arrives, migrates the sequence's paged
+    KV blocks to the chosen decode replica (``export_seq``/``import_seq``
+    — the ``migrate_blocks`` handoff) before admitting it into that
+    replica's loop. Everything EnginePool provides (load ledger, container
+    protocol, registry helpers) applies unchanged — the subclass only
+    partitions the candidate sets and records handoffs."""
+
+    def __init__(self, replicas: List[Any], n_prefill: int, name: str = ""):
+        if not 1 <= n_prefill < len(replicas):
+            raise ValueError(
+                f"disaggregated pool needs >=1 prefill and >=1 decode "
+                f"replica (got n_prefill={n_prefill} of "
+                f"{len(replicas)} replicas)")
+        super().__init__(replicas, name=name, role="disaggregated")
+        self.n_prefill = n_prefill
+        for i, r in enumerate(self.replicas):
+            setattr(r, "pool_role",
+                    "prefill" if i < n_prefill else "decode")
+        self.migrations: List[tuple] = []   # (sid, src_idx, dst_idx)
+
+    @classmethod
+    def disaggregate(cls, engine, n_prefill: int, n_decode: int,
+                     name: str = "") -> "DisaggregatedEnginePool":
+        """Build a prefill/decode-specialized pool from one prototype
+        engine (replica 0 is the prototype, a prefill specialist) —
+        clones share weights, per-replica KV pools are private exactly
+        as in ``replicate``."""
+        if n_prefill < 1 or n_decode < 1:
+            raise ValueError(
+                f"need >=1 prefill and >=1 decode replica, got "
+                f"{n_prefill}/{n_decode}")
+        if not hasattr(engine, "clone"):
+            raise TypeError(
+                f"{type(engine).__name__} has no clone(); cannot "
+                f"disaggregate")
+        reps = [engine] + [engine.clone(i)
+                           for i in range(1, n_prefill + n_decode)]
+        return cls(reps, n_prefill,
+                   name=name or getattr(engine, "name", ""))
+
+    @property
+    def prefill_indices(self) -> tuple:
+        return tuple(range(self.n_prefill))
+
+    @property
+    def decode_indices(self) -> tuple:
+        return tuple(range(self.n_prefill, len(self.replicas)))
+
+    def role_of(self, i: int) -> str:
+        return "prefill" if i < self.n_prefill else "decode"
+
+    def note_migration(self, sid: str, src_idx: int, dst_idx: int):
+        with self._lock:
+            self.migrations.append((sid, src_idx, dst_idx))
+
+    def __repr__(self):
+        return (f"<DisaggregatedEnginePool {self.name} "
+                f"{self.n_prefill}p+{len(self.replicas) - self.n_prefill}d>")
 
 
 # ---------------------------------------------------------------------------
@@ -228,4 +317,17 @@ def build_pools(engines: Dict[str, Any],
     for name, n in sizes.items():
         if n > 1 and name in out and not isinstance(out[name], EnginePool):
             out[name] = EnginePool.replicate(out[name], n, name=name)
+    return out
+
+
+def disaggregate_pools(engines: Dict[str, Any], names,
+                       n_prefill: int, n_decode: int) -> Dict[str, Any]:
+    """Replace the named engines with disaggregated prefill/decode pools
+    (``--disaggregate`` wiring). Engines already pooled or absent pass
+    through untouched."""
+    out = dict(engines)
+    for name in names:
+        if name in out and not isinstance(out[name], EnginePool):
+            out[name] = DisaggregatedEnginePool.disaggregate(
+                out[name], n_prefill, n_decode, name=name)
     return out

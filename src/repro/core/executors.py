@@ -73,6 +73,23 @@ def _prompt_text(prim, store) -> str:
     return " ".join(x for x in pieces if x)
 
 
+def decode_entries(prim, ctx) -> List[tuple]:
+    """(sid, max_new) per sequence of one decode task — shared by the
+    loop dispatch below and the scheduler's disaggregated handoff (which
+    must enumerate exactly the sids ``submit_decode_task`` will submit,
+    to migrate them first)."""
+    entries = []
+    if prim.config.get("per_item_seq"):
+        rng = prim.config.get("item_range")
+        lo = rng[0] if rng else 0
+        for i in range(prim.num_requests):
+            entries.append((_sid(prim, ctx, lo + i),
+                            prim.config.get("max_new", 12)))
+    else:
+        entries.append((_sid(prim, ctx), prim.config.get("max_new", 24)))
+    return entries
+
+
 def _prefill_payload(prim, ctx) -> List[dict]:
     """Per-sequence prefill payload dicts for one task — shared by the
     batch executor and the chunked-loop dispatch so the sid/text
@@ -340,15 +357,7 @@ def submit_decode_task(engine, task, done, on_fail=None):
     and ``on_fail(task)``, if given, runs cleanup (e.g. releasing the
     pool's in-flight ledger)."""
     prim, ctx = task.prim, task.ctx
-    entries = []                         # (sid, max_new) per sequence
-    if prim.config.get("per_item_seq"):
-        rng = prim.config.get("item_range")
-        lo = rng[0] if rng else 0
-        for i in range(prim.num_requests):
-            entries.append((_sid(prim, ctx, lo + i),
-                            prim.config.get("max_new", 12)))
-    else:
-        entries.append((_sid(prim, ctx), prim.config.get("max_new", 24)))
+    entries = decode_entries(prim, ctx)  # (sid, max_new) per sequence
 
     if not entries:                      # zero-item decode: parity with
         _write_decode_outputs(task, [])  # the batch path's empty span

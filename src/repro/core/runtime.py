@@ -48,8 +48,8 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
 from repro.core import primitives as P
-from repro.core.engine_pool import (EnginePool, estimate_tokens,
-                                    replicas_of)
+from repro.core.engine_pool import (DisaggregatedEnginePool, EnginePool,
+                                    estimate_tokens, replicas_of)
 from repro.core.primitives import Graph, Primitive
 from repro.core.streams import TokenStream
 
@@ -351,6 +351,15 @@ class PooledEngineScheduler(threading.Thread):
         self.period = period
         self.continuous = continuous and hasattr(pool[0], "submit_decode")
         self.chunked = self.continuous and chunked_prefill_enabled(pool[0])
+        # disaggregated prefill/decode dispatch: prefill ops see only the
+        # prefill-specialist replicas, decodes only the decode side (with
+        # a KV migration when the sequence was prefilled elsewhere). For
+        # plain pools both index sets stay None — every routing call
+        # below is byte-identical to the pre-role scheduler.
+        self.disagg = isinstance(pool, DisaggregatedEnginePool) and \
+            self.continuous
+        self._prefill_idx = pool.prefill_indices if self.disagg else None
+        self._decode_idx = pool.decode_indices if self.disagg else None
         # prefix-aware prefill routing: only when some replica carries a
         # radix prefix cache — flag off keeps routing byte-identical
         self.prefix_aware = any(
@@ -425,7 +434,8 @@ class PooledEngineScheduler(threading.Thread):
             payload = _prefill_payload(t.prim, t.ctx)
             if not payload:
                 return None
-            return self.pool.best_prefix_replica(payload[0]["text"])
+            return self.pool.best_prefix_replica(payload[0]["text"],
+                                                 self._prefill_idx)
         except Exception:  # noqa: BLE001
             return None
 
@@ -448,11 +458,22 @@ class PooledEngineScheduler(threading.Thread):
                         # prefill compute
                         idx = self._prefix_route(t)
                         if idx is None:
-                            idx = self.pool.least_loaded()
+                            idx = self.pool.least_loaded(self._prefill_idx)
                     else:
-                        idx = self.pool.least_loaded_decode()
+                        idx = self.pool.least_loaded_decode(
+                            self._decode_idx)
                     if key is not None:
                         self.affinity[key] = idx
+            if self.disagg and not is_prefill and \
+                    idx < self.pool.n_prefill:
+                # two-stage dispatch: the sequence finished prefill on a
+                # prefill specialist — migrate its KV to a decode
+                # specialist before loop admission
+                try:
+                    idx = self._handoff(t, idx)
+                except Exception as e:  # noqa: BLE001
+                    _fail_batch([t], e)
+                    continue
             tokens = estimate_tokens(t.prim)
             self.pool.note_decode_submitted(idx, tokens)
             self.routes.append((idx, t.prim.op, t.prim.num_requests,
@@ -476,6 +497,30 @@ class PooledEngineScheduler(threading.Thread):
                 self.pool.note_decode_finished(idx, tokens)
                 _fail_batch([t], e)
 
+    def _handoff(self, t: NodeTask, src_idx: int) -> int:
+        """Second dispatch stage (disaggregated pools): the sequence(s)
+        of a decode task were prefilled on prefill replica ``src_idx`` —
+        pick the slot/block-aware best decode replica, migrate each
+        sequence's KV there (``export_seq`` -> ``import_seq``: blocks
+        staged out of the source pool into freshly reserved destination
+        blocks, source released atomically) and re-pin affinity so every
+        later op of the sequence follows the decode replica. Runs on the
+        scheduler thread: the staging copy overlaps the destination
+        loop's iteration cadence — resident decodes never stop ticking
+        while a handoff is in flight."""
+        from repro.core.executors import decode_entries
+        dst_idx = self.pool.least_loaded_decode(self._decode_idx)
+        src, dst = self.pool[src_idx], self.pool[dst_idx]
+        for sid, _ in decode_entries(t.prim, t.ctx):
+            if sid in getattr(src, "states", {}):
+                dst.import_seq(src.export_seq(sid))
+                self.pool.note_migration(sid, src_idx, dst_idx)
+        key = _seq_key(t)
+        if key is not None:
+            with self._aff_lock:
+                self.affinity[key] = dst_idx
+        return dst_idx
+
     # -- the replica router -------------------------------------------------
     def _route(self, batch: List[NodeTask]):
         """Partition a fused batch by sequence affinity; everything
@@ -492,7 +537,10 @@ class PooledEngineScheduler(threading.Thread):
                 else:
                     groups.setdefault(idx, []).append(t)
             if unpinned:
-                idx = self.pool.least_loaded()
+                # disaggregated pools: routed batches are prefill work
+                # (decodes go through _submit_continuous) — keep them on
+                # the prefill specialists
+                idx = self.pool.least_loaded(self._prefill_idx)
                 for t in unpinned:
                     # radix prefix affinity can split a task off the
                     # fused sub-batch — reusing a long cached prefix

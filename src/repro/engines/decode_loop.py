@@ -100,10 +100,15 @@ class PrefillJob:
     """
 
     def __init__(self, sid: str, state, tokens: list, *,
-                 on_done: Optional[Callable[["PrefillJob"], None]] = None):
+                 on_done: Optional[Callable[["PrefillJob"], None]] = None,
+                 ptoks: Optional[list] = None):
         self.sid = sid
         self.state = state
         self.tokens = list(tokens)
+        # tokens already resident when the job was created (radix/COW
+        # prefix + earlier turns) — carried so a mid-flight migration can
+        # reconstruct the sequence's full token context on the new engine
+        self.ptoks = list(ptoks) if ptoks else []
         self.cursor = 0
         self.chunks = 0                     # landed chunk count
         self.on_done = on_done
@@ -159,6 +164,10 @@ class ContinuousDecodeLoop(threading.Thread):
              else 0)
         self.waiting: deque = deque()
         self.prefill_waiting: deque = deque()
+        # ids of PrefillJobs whose chunk is inside the currently-executing
+        # mixed pass (the engine call runs OUTSIDE the cv) — detach must
+        # wait these out before handing the job's state to another engine
+        self._inflight_prefill: frozenset = frozenset()
         self.active: List[DecodeSeq] = []
         self.cv = threading.Condition()
         self.running = True
@@ -188,6 +197,27 @@ class ContinuousDecodeLoop(threading.Thread):
         with self.cv:
             self.prefill_waiting.append(job)
             self.cv.notify()
+        return job
+
+    def detach_prefill(self, sid: str) -> Optional[PrefillJob]:
+        """Pull ``sid``'s mid-flight PrefillJob out of the loop so its
+        sequence can migrate to another engine (disaggregated handoff of
+        a partially-prefilled prompt). Removes the job from the queue,
+        then waits out any pass currently landing one of its chunks —
+        on return the job's cursor/state are final and no loop thread
+        will touch them again. Returns None when ``sid`` has no queued
+        job (already finished, or never chunk-prefilled). A job that
+        FINISHES in the very pass being waited out completes normally on
+        this engine (its ``on_done`` fires here); callers see
+        ``remaining() == 0`` and skip the continuation."""
+        with self.cv:
+            job = next((j for j in self.prefill_waiting if j.sid == sid),
+                       None)
+            if job is None:
+                return None
+            self.prefill_waiting.remove(job)
+            while id(job) in self._inflight_prefill:
+                self.cv.wait(timeout=0.05)
         return job
 
     def slots_free(self) -> int:
@@ -367,6 +397,8 @@ class ContinuousDecodeLoop(threading.Thread):
                 self.max_resident = max(self.max_resident, len(batch))
                 dcost = self._decode_cost(batch)
                 pitems = self._take_prefill_locked(dcost)
+                self._inflight_prefill = frozenset(
+                    id(j) for j, _ in pitems)
                 pwaiting = bool(self.prefill_waiting)
             for seq in expired:
                 self._evict(seq, error=TimeoutError(
@@ -405,6 +437,8 @@ class ContinuousDecodeLoop(threading.Thread):
                     for job, _ in pitems:
                         if job in self.prefill_waiting:
                             self.prefill_waiting.remove(job)
+                    self._inflight_prefill = frozenset()
+                    self.cv.notify_all()
                 for seq in batch:
                     self._evict(seq, error=e)
                 for job, _ in pitems:
@@ -412,6 +446,10 @@ class ContinuousDecodeLoop(threading.Thread):
                 continue
             self.iterations += 1
             landed = self._note_prefill_progress(pitems, pbefore)
+            if pitems:
+                with self.cv:
+                    self._inflight_prefill = frozenset()
+                    self.cv.notify_all()
             if pitems:
                 self.mixed_log.append(
                     (dcost, sum(n for _, n in pitems), landed))

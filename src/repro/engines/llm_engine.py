@@ -166,7 +166,9 @@ class LLMEngine(DecodeLoopMixin):
             self.meter = kvc.OccupancyMeter(kvc.bytes_per_token(cfg),
                                             decode_slots=max_batch)
         self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "calls": 0,
-                      "decode_iters": 0, "busy_s": 0.0}
+                      "decode_iters": 0, "busy_s": 0.0,
+                      "migrations_in": 0, "migrated_blocks": 0,
+                      "migrate_s": 0.0}
         # decode_iteration (loop thread) and prefill/decode batches
         # (scheduler thread) update stats concurrently
         self._stats_lock = threading.Lock()
@@ -226,7 +228,9 @@ class LLMEngine(DecodeLoopMixin):
             c.meter = kvc.OccupancyMeter(self.meter.bytes_per_tok,
                                          decode_slots=c.max_batch)
         c.stats = {"prefill_tokens": 0, "decode_tokens": 0, "calls": 0,
-                   "decode_iters": 0, "busy_s": 0.0}
+                   "decode_iters": 0, "busy_s": 0.0,
+                   "migrations_in": 0, "migrated_blocks": 0,
+                   "migrate_s": 0.0}
         c._stats_lock = threading.Lock()
         c._decode_loop = None            # per-replica decode loop
         c._pads = []
@@ -827,7 +831,7 @@ class LLMEngine(DecodeLoopMixin):
             if on_done is not None:
                 on_done(job)
 
-        job = PrefillJob(sid, st, toks, on_done=_done)
+        job = PrefillJob(sid, st, toks, on_done=_done, ptoks=ptoks)
         if not toks:
             # prompt fully covered by the forked instruction prefix —
             # nothing to write; complete without touching the loop
@@ -1264,3 +1268,162 @@ class LLMEngine(DecodeLoopMixin):
             if dropped:
                 self.alloc.notify_waiters()
         self.meter.release(sid)
+
+    # -- sequence migration (disaggregated prefill/decode handoff) ---------
+    def export_seq(self, sid: str) -> dict:
+        """Snapshot sequence ``sid`` for migration to another replica
+        (``dst.import_seq(handle)``). The sequence stays fully resident
+        HERE until the import lands — on import failure nothing was
+        lost. A prompt still mid-flight in this engine's chunked-prefill
+        queue is detached first (cursor frozen); its remaining tokens
+        travel in the handle and resume on the destination. The caller
+        must not export a sequence while it is actively decoding in the
+        loop (serving migrates between prefill completion and decode
+        submission)."""
+        job = None
+        loop = self._decode_loop
+        if loop is not None and loop.is_alive():
+            job = loop.detach_prefill(sid)
+        with self._lock:
+            st = self.states[sid]
+        ctx = self.spec.export_ctx(sid) if self.spec is not None else None
+        return {"sid": sid, "engine": self, "state": st,
+                "paged": self.paged, "block_size": self.block_size,
+                "spec_ctx": ctx, "job": job}
+
+    def import_seq(self, handle) -> Optional[PrefillJob]:
+        """Adopt a sequence exported from another replica so it resumes
+        decoding here TOKEN-IDENTICALLY. This is the engine-level form
+        of ``kv_cache.migrate_blocks``, phased so each pool's lock is
+        held only for the phase touching it (the destination's decode
+        loop keeps iterating while the source stages blocks — migration
+        cost overlaps the loop's cadence):
+
+          1. reserve len(table) destination blocks under THIS pool's
+             lock, with the same backpressure/radix-eviction wait as
+             prefill admission (all-or-nothing: on timeout the source
+             is untouched);
+          2. stage the source blocks out under the SOURCE pool's lock
+             (gather only reads — the source keeps serving);
+          3. scatter the staged blocks into the reserved slots under
+             this pool's lock and register the sequence, then release
+             the source atomically (``src.release`` drops exactly the
+             sequence's own refs — blocks shared with the source's
+             radix tree or COW forks survive there; every block here is
+             freshly allocated, refcount 1: the migrated copy is
+             sequence-private and is NOT inserted into this replica's
+             prefix cache).
+
+        Returns the continuation PrefillJob when the handle carried a
+        mid-flight prompt (completing it also completes the original
+        job so source-side waiters unblock), else None."""
+        src, sid, st = handle["engine"], handle["sid"], handle["state"]
+        if src is self:
+            # self-import: nothing moves; re-queue a detached job
+            job = handle.get("job")
+            if job is not None and job.remaining() and \
+                    not job.done.is_set():
+                return self.start_decode_loop().submit_prefill(job)
+            return None
+        if handle["paged"] != self.paged or \
+                (self.paged and handle["block_size"] != self.block_size):
+            raise ValueError(
+                f"{self.name}: cannot import {sid} from "
+                f"{getattr(src, 'name', '?')} (paged/block_size mismatch)")
+        t0 = time.time()
+        n_blocks = 0
+        if self.paged:
+            n_blocks = len(st.table)
+            dst_table = self._acquire_import_blocks(n_blocks)
+            if n_blocks:
+                with src._paged_lock:
+                    stage = kvc.gather_pool_blocks(src.pool, st.table)
+                    stage = jax.block_until_ready(stage)
+                with self._paged_lock:
+                    self.pool = kvc.scatter_pool_blocks(
+                        self.pool, stage, dst_table)
+            new_st = PagedSeqState(table=dst_table, pos=st.pos,
+                                   last_token=st.last_token)
+        else:
+            # dense states are portable pytrees — adopt the object
+            new_st = st
+        with self._lock:
+            self.states[sid] = new_st
+        self.meter.advance(sid, new_st.pos)
+        if self.spec is not None and handle.get("spec_ctx"):
+            self.spec.import_ctx(sid, handle["spec_ctx"], new_st)
+        src.release(sid)                 # atomic source-side release
+        with self._stats_lock:
+            self.stats["migrations_in"] += 1
+            self.stats["migrated_blocks"] += n_blocks
+            self.stats["migrate_s"] += time.time() - t0
+        job = handle.get("job")
+        if job is not None and job.remaining() and not job.done.is_set():
+            return self._resume_prefill(sid, new_st, job)
+        return None
+
+    def _acquire_import_blocks(self, n: int) -> List[int]:
+        """Reserve ``n`` fresh pool blocks for an incoming migration
+        with the same backpressure as ``_acquire_with_blocks``: wait
+        unlocked (the decode loop keeps draining), evict radix leaves
+        under pressure, honor admitted decodes' reservations, and time
+        out loudly. Returns the reserved block list (each refcount 1);
+        the paged lock is NOT held on return — allocated blocks cannot
+        be taken by anyone else."""
+        deadline = time.time() + self.ALLOC_TIMEOUT
+        timed_out = False
+        while True:
+            with self._paged_lock:
+                avail = self.alloc.free_blocks() - self._reserved_locked()
+                if n > avail and self.radix is not None:
+                    avail += self.radix.evict(n - avail)
+                if n <= avail:
+                    return kvc.reserve_blocks(self.alloc, n)
+            if timed_out:
+                raise kvc.OutOfBlocks(
+                    f"{self.name}: cannot reserve {n} blocks for an "
+                    f"incoming migration ({self.alloc.capacity} blocks, "
+                    f"{self.alloc.free_blocks()} free)")
+            timed_out = not self.alloc.wait_for_free(
+                n, timeout=deadline - time.time(),
+                reserved_fn=self._reserved_less_evictable)
+
+    def _resume_prefill(self, sid: str, st, old: PrefillJob) -> PrefillJob:
+        """Continue a mid-flight chunked prefill after migration: the
+        remaining prompt tokens stream through THIS engine's loop (or
+        land synchronously when this engine is not chunked). The original
+        job object is completed when the continuation lands so exporters'
+        waiters unblock; its ``on_done`` chain is NOT re-fired — those
+        hooks (source-engine radix insert, spec note) belong to the
+        source, and the migrated copy is sequence-private here."""
+        pending = list(old.tokens[old.cursor:])
+
+        def _done(job):
+            if job.error is None and self.spec is not None:
+                # full-job context, exactly what the source would have
+                # noted at completion (where the compute ran is
+                # irrelevant to the token stream)
+                self.spec.note_prefill(sid, list(old.ptoks),
+                                       list(old.tokens))
+            old.t_done = time.time()
+            old.error = job.error
+            old.done.set()
+
+        job = PrefillJob(sid, st, pending, on_done=_done, ptoks=old.ptoks)
+        if self.chunked_prefill:
+            return self.start_decode_loop().submit_prefill(job)
+        # monolithic destination: land the remainder now
+        try:
+            self.meter.advance(sid, len(pending))
+            self.prefill_batch([(st, pending)])
+            job.cursor = len(pending)
+        except Exception as e:  # noqa: BLE001
+            job.error = e
+        job.t_done = time.time()
+        if job.error is None and self.spec is not None:
+            self.spec.note_prefill(sid, list(old.ptoks), list(old.tokens))
+        old.t_done = job.t_done
+        old.error = job.error
+        job.done.set()
+        old.done.set()
+        return job

@@ -69,9 +69,16 @@ class SimLLMEngine(DecodeLoopMixin):
                  draft_k: int = 4, spec_accept: float = 0.7,
                  spec_draft_cost: float = 0.25,
                  chunked_prefill: bool = False, prefill_chunk: int = 128,
-                 token_budget=None, prefix_cache: str = "none"):
+                 token_budget=None, prefix_cache: str = "none",
+                 migrate_ms_per_block: float = 0.02):
         self.name = name
         self.max_batch = max_batch
+        # disaggregated-handoff ACCOUNTING: import_seq charges
+        # migrate_ms_per_block per block-quantized resident block — the
+        # PCIe/NVLink-class staging copy the real engine pays in
+        # migrate_blocks — so scheduler studies see the handoff on the
+        # dispatch critical path exactly where the real runtime puts it.
+        self.migrate_ms_per_block = migrate_ms_per_block
         # radix prefix-cache ACCOUNTING: with prefix_cache="radix" a
         # fresh prompt's longest block-aligned word prefix already seen
         # by this replica is "cached" — its tokens are skipped from the
@@ -130,7 +137,8 @@ class SimLLMEngine(DecodeLoopMixin):
         self._lock = threading.Lock()
         self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "calls": 0,
                       "decode_iters": 0, "busy_ms": 0.0,
-                      "radix_hit_tokens": 0}
+                      "radix_hit_tokens": 0,
+                      "migrations_in": 0, "migrated_blocks": 0}
         self._stats_lock = threading.Lock()
         self._decode_loop = None
 
@@ -150,10 +158,62 @@ class SimLLMEngine(DecodeLoopMixin):
             chunked_prefill=self.chunked_prefill,
             prefill_chunk=self.prefill_chunk,
             token_budget=self.token_budget,
-            prefix_cache=self.prefix_cache_mode)
+            prefix_cache=self.prefix_cache_mode,
+            migrate_ms_per_block=self.migrate_ms_per_block)
         c.prefix_cache = self.prefix_cache
         c.use_prefix_cache = self.use_prefix_cache
         return c
+
+    # -- sequence migration (disaggregated prefill/decode handoff) ----------
+    def export_seq(self, sid: str) -> dict:
+        """Sim form of ``LLMEngine.export_seq``: snapshot the sequence
+        for adoption by another replica. The state stays resident here
+        until the import lands."""
+        job = None
+        loop = self._decode_loop
+        if loop is not None and loop.is_alive():
+            job = loop.detach_prefill(sid)
+        with self._lock:
+            st = self.states[sid]
+        return {"sid": sid, "engine": self, "state": st,
+                "paged": self.paged, "block_size": self.block_size,
+                "job": job}
+
+    def import_seq(self, handle):
+        """Sim form of ``LLMEngine.import_seq``: adopt the sequence and
+        charge the modeled block-transfer cost (the staging copy of
+        ``migrate_blocks``) on the CALLER's thread — the scheduler pays
+        it, the destination decode loop keeps iterating. Returns the
+        continuation PrefillJob for a mid-flight prompt, else None."""
+        src, sid = handle["engine"], handle["sid"]
+        st = handle["state"]
+        job = handle.get("job")
+        if src is self:
+            if job is not None and job.remaining() \
+                    and not job.done.is_set():
+                return self.start_decode_loop().submit_prefill(job)
+            return None
+        blocks = -(-st.get("pos", 0) // self.block_size)
+        _sleep(self.migrate_ms_per_block * blocks)
+        with self._lock:
+            new_st = dict(st)
+            self.states[sid] = new_st
+        src.release(sid)
+        with self._stats_lock:
+            self.stats["migrations_in"] += 1
+            self.stats["migrated_blocks"] += blocks
+        if job is not None and job.remaining() and not job.done.is_set():
+            pending = job.tokens[job.cursor:]
+
+            def _done(cont):
+                job.t_done = time.time()
+                job.error = cont.error
+                job.done.set()
+
+            cont = PrefillJob(sid, new_st, pending, on_done=_done,
+                              ptoks=job.ptoks)
+            return self.start_decode_loop().submit_prefill(cont)
+        return None
 
     def mean_accept_len(self) -> float:
         """Expected tokens emitted per target verification step: the
@@ -527,7 +587,10 @@ def build_sim_engines(*, llm_max_batch: int = 8, core_decode_ms: float = 25.0,
                       chunked_prefill: bool = False,
                       prefill_chunk: int = 128,
                       token_budget=None,
-                      prefix_cache: str = "none") -> dict:
+                      prefix_cache: str = "none",
+                      disaggregate: bool = False,
+                      prefill_replicas: int = 1,
+                      decode_replicas: int = 1) -> dict:
     """Engine set with paper-calibrated profiles. lite_llm (gemma-2-2B
     contextualizer / llama-7B judge) is ~4x faster than the core LLM.
     llm_instances>1 puts the LLM engines behind EnginePools (the paper's
@@ -535,8 +598,11 @@ def build_sim_engines(*, llm_max_batch: int = 8, core_decode_ms: float = 25.0,
     scheduler routes fused batches to the least-loaded replica with
     sequence affinity. ``speculative`` switches the CORE LLM to
     draft-verify step accounting (drafted on the co-located lite profile:
-    spec_draft_cost = lite_scale)."""
-    from repro.core.engine_pool import EnginePool
+    spec_draft_cost = lite_scale). ``disaggregate`` puts each LLM behind
+    a DisaggregatedEnginePool of prefill_replicas prefill specialists +
+    decode_replicas decode specialists with modeled KV-handoff cost
+    (mutually exclusive with llm_instances > 1)."""
+    from repro.core.engine_pool import DisaggregatedEnginePool, EnginePool
 
     core = SimLLMEngine("core_llm", max_batch=llm_max_batch,
                         decode_ms_per_step=core_decode_ms,
@@ -559,6 +625,16 @@ def build_sim_engines(*, llm_max_batch: int = 8, core_decode_ms: float = 25.0,
         token_budget=token_budget,
         prefix_cache=prefix_cache)
 
+    if disaggregate:
+        if llm_instances > 1:
+            raise ValueError(
+                "disaggregate and llm_instances > 1 are mutually "
+                "exclusive (replica counts come from prefill_replicas/"
+                "decode_replicas)")
+        core = DisaggregatedEnginePool.disaggregate(
+            core, prefill_replicas, decode_replicas, name="core_llm")
+        lite = DisaggregatedEnginePool.disaggregate(
+            lite, prefill_replicas, decode_replicas, name="lite_llm")
     n = llm_instances
     if n > 1:
         core = EnginePool.replicate(core, n, name="core_llm")

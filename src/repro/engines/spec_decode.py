@@ -235,6 +235,27 @@ class SpeculativeDecoder:
         if self.engine_drafter is not None:
             self.engine_drafter.release(sid)
 
+    # -- migration (disaggregated prefill/decode handoff) -------------------
+    def export_ctx(self, sid: str) -> Optional[List[int]]:
+        """Snapshot the sid's prompt-lookup context for migration to
+        another replica's SpeculativeDecoder. None when untracked —
+        drafting from an empty context is token-identical-safe (greedy
+        acceptance never depends on draft quality), just less effective."""
+        with self._ctx_lock:
+            ctx = self._ctx.get(sid)
+            return list(ctx) if ctx else None
+
+    def import_ctx(self, sid: str, ctx: List[int], state):
+        """Adopt a migrated sid's context (the _ctx invariant travels
+        intact: the source exported its input stream INCLUDING the
+        pending next input) and bind it to the sequence's state object
+        on THIS engine. The draft-engine mirror is NOT transferred —
+        ``EngineDrafter.propose`` falls back to prompt lookup for
+        unmirrored sids."""
+        with self._ctx_lock:
+            self._ctx[sid] = list(ctx)
+            self._sid_by_state[id(state)] = sid
+
     # -- draft/accept core --------------------------------------------------
     def _propose(self, sid: Optional[str], last_token: int) -> List[int]:
         drafts = None

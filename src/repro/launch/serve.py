@@ -29,7 +29,16 @@ block-aligned token prefix — across queries and tenants, not just
 warmed instructions — forks the cached blocks and prefills only the
 uncached tail, with LRU leaf eviction under memory pressure and
 prefix-aware pool routing; outputs stay token-identical to the cache
-being off.
+being off. --disaggregate (requires --paged-kv and
+--continuous-batching) splits each LLM into prefill-specialist and
+decode-specialist replicas (--prefill-replicas/--decode-replicas,
+default 1+1): prompts prefill at full token budget with no co-resident
+decodes, then the scheduler's two-stage dispatch migrates each
+sequence's paged KV blocks into a decode replica's pool
+(export_seq/import_seq over the migrate_blocks primitive) and admits it
+into that replica's continuous loop — prefill/decode interference is
+removed entirely instead of time-sliced; outputs stay token-identical
+to unified serving.
 """
 from __future__ import annotations
 
@@ -39,7 +48,7 @@ import time
 import numpy as np
 
 from repro.core.apps import ALL_APPS, build_engines
-from repro.core.engine_pool import build_pools
+from repro.core.engine_pool import build_pools, disaggregate_pools
 from repro.core.teola import AutoGenLike, LlamaDist, LlamaDistPC, Teola
 from repro.training.data import doc_corpus
 
@@ -101,6 +110,18 @@ def build_parser() -> argparse.ArgumentParser:
                     help="drafter: model-free prompt lookup (default) or "
                          "the co-located lite_llm replica (requires "
                          "--speculative)")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="role-specialized LLM pools: prefill-specialist "
+                         "replicas run prompts at full token budget, "
+                         "completed sequences migrate their paged KV "
+                         "blocks to decode-specialist replicas' loops "
+                         "(requires --paged-kv and --continuous-batching)")
+    ap.add_argument("--prefill-replicas", type=int, default=None,
+                    help="prefill-specialist replicas per LLM pool "
+                         "(default 1; requires --disaggregate)")
+    ap.add_argument("--decode-replicas", type=int, default=None,
+                    help="decode-specialist replicas per LLM pool "
+                         "(default 1; requires --disaggregate)")
     return ap
 
 
@@ -153,6 +174,37 @@ def validate_args(ap: argparse.ArgumentParser, args) -> None:
                      "already; drop --sim or use --spec-drafter ngram)")
     args.draft_k = args.draft_k if args.draft_k is not None else 4
     args.spec_drafter = args.spec_drafter or "ngram"
+    if args.prefill_replicas is not None and not args.disaggregate:
+        ap.error("--prefill-replicas requires --disaggregate")
+    if args.decode_replicas is not None and not args.disaggregate:
+        ap.error("--decode-replicas requires --disaggregate")
+    if args.disaggregate:
+        if args.scheme != "Teola":
+            ap.error("--disaggregate requires --scheme Teola (baseline "
+                     "orchestrators bypass the pooled two-stage "
+                     "dispatch)")
+        if not args.paged_kv:
+            ap.error("--disaggregate requires --paged-kv (the handoff "
+                     "migrates refcounted KV blocks between replica "
+                     "pools)")
+        if not args.continuous_batching:
+            ap.error("--disaggregate requires --continuous-batching "
+                     "(completed prefills hand off into the decode "
+                     "replicas' persistent loops)")
+        if args.llm_instances > 1:
+            ap.error("--disaggregate and --llm-instances > 1 are "
+                     "mutually exclusive (replica counts come from "
+                     "--prefill-replicas/--decode-replicas)")
+        if args.prefill_replicas is not None and args.prefill_replicas < 1:
+            ap.error(f"--prefill-replicas must be >= 1, got "
+                     f"{args.prefill_replicas}")
+        if args.decode_replicas is not None and args.decode_replicas < 1:
+            ap.error(f"--decode-replicas must be >= 1, got "
+                     f"{args.decode_replicas}")
+    args.prefill_replicas = args.prefill_replicas \
+        if args.prefill_replicas is not None else 1
+    args.decode_replicas = args.decode_replicas \
+        if args.decode_replicas is not None else 1
 
 
 def main():
@@ -169,7 +221,10 @@ def main():
                                     chunked_prefill=args.chunked_prefill,
                                     prefill_chunk=args.prefill_chunk,
                                     token_budget=args.token_budget,
-                                    prefix_cache=args.prefix_cache)
+                                    prefix_cache=args.prefix_cache,
+                                    disaggregate=args.disaggregate,
+                                    prefill_replicas=args.prefill_replicas,
+                                    decode_replicas=args.decode_replicas)
     else:
         engines = build_engines(paged_kv=args.paged_kv,
                                 chunked_prefill=args.chunked_prefill,
@@ -180,6 +235,10 @@ def main():
             engines = build_pools(engines, {
                 "core_llm": args.llm_instances,
                 "lite_llm": args.llm_instances})
+        if args.disaggregate:
+            engines = disaggregate_pools(
+                engines, ("core_llm", "lite_llm"),
+                args.prefill_replicas, args.decode_replicas)
         if args.speculative:
             from repro.engines.spec_decode import attach_speculative
             attach_speculative(

@@ -574,9 +574,105 @@ def copy_pool_blocks(pool, srcs, dsts):
     """Copy-on-write realization: duplicate physical blocks ``srcs[i]``
     into ``dsts[i]`` across every pool array. CAUTION: the input pool's
     buffers are donated — callers must drop their reference in favor of
-    the returned pool."""
+    the returned pool.
+
+    Contract: this is a PURE DATA MOVE with no refcount side effects.
+    The caller owns all ``BlockAllocator`` bookkeeping — ``dsts`` must
+    already be allocated (refcounted) and any decref of ``srcs`` happens
+    after the copy. ``migrate_blocks`` builds the cross-pool handoff on
+    the same contract."""
     return _copy_blocks_jit(pool, jnp.asarray(srcs, jnp.int32),
                             jnp.asarray(dsts, jnp.int32))
+
+
+def _gather_blocks_jit(pool, idx):
+    """Stage blocks OUT of a pool (block axis is axis 1). The pool is
+    NOT donated: the source keeps serving from its buffers while the
+    staged copy travels to another pool."""
+    return jax.tree.map(lambda a: a[:, idx], pool)
+
+
+_gather_blocks_jit = jax.jit(_gather_blocks_jit)
+
+
+def _scatter_blocks_jit(pool, stage, idx):
+    """Land staged blocks into pool slots ``idx``. The destination pool
+    is donated (in-place write where the backend supports donation)."""
+    return jax.tree.map(lambda a, s: a.at[:, idx].set(s), pool, stage)
+
+
+_scatter_blocks_jit = jax.jit(_scatter_blocks_jit, donate_argnums=(0,))
+
+
+def gather_pool_blocks(pool, blocks):
+    """Copy blocks out of ``pool`` into a free-standing staged pytree
+    (same structure, block axis shrunk to ``len(blocks)``). No refcount
+    side effects; the input pool stays valid."""
+    return _gather_blocks_jit(pool, jnp.asarray(blocks, jnp.int32))
+
+
+def scatter_pool_blocks(pool, stage, blocks):
+    """Write a staged pytree (from ``gather_pool_blocks``) into slots
+    ``blocks`` of ``pool``. CAUTION: ``pool``'s buffers are donated —
+    callers must rebind to the returned pool. No refcount side effects."""
+    return _scatter_blocks_jit(pool, stage, jnp.asarray(blocks, jnp.int32))
+
+
+def reserve_blocks(alloc: "BlockAllocator", n: int) -> list:
+    """All-or-nothing allocation of ``n`` blocks (each refcount 1). If
+    the pool runs out mid-way, every block already taken is returned and
+    ``OutOfBlocks`` propagates — the allocator is left exactly as found."""
+    got: list = []
+    try:
+        for _ in range(n):
+            got.append(alloc.alloc())
+    except OutOfBlocks:
+        for b in got:
+            alloc.decref(b)
+        raise
+    return got
+
+
+def migrate_blocks(src_alloc: "BlockAllocator", src_pool,
+                   dst_alloc: "BlockAllocator", dst_pool,
+                   table, *, dst_table=None):
+    """Paged KV handoff: copy the blocks of one sequence's ``table`` from
+    a source pool into blocks reserved in a DESTINATION pool (another
+    replica), returning ``(dst_table, new_dst_pool)``. Built on the
+    ``copy_pool_blocks`` contract: the data move itself has no refcount
+    side effects, so this primitive owns the bookkeeping explicitly.
+
+    Atomicity: destination capacity is secured FIRST (``reserve_blocks``,
+    all-or-nothing); only after the staged copy lands is the source table
+    decref'd — on reservation failure the source is untouched and
+    ``OutOfBlocks`` propagates. Refcounts: each source entry loses exactly
+    the sequence's OWN reference, so blocks shared with a radix prefix
+    tree or a COW fork survive on the source, still owned there; every
+    destination block is freshly allocated with refcount 1 — the migrated
+    copy is sequence-private (it is NOT inserted into any prefix cache).
+    The pad block is never migrated: tables never contain it (asserted).
+
+    Pass ``dst_table`` to supply pre-reserved destination blocks (the
+    engine path reserves under backpressure before staging). The caller
+    must serialize access to each pool against its owner's step loop —
+    the destination pool's buffers are donated; the source's are only
+    read, and the staged copy is synchronized before this returns, so
+    the source may resume donated steps immediately after."""
+    table = list(table)
+    assert PAD_BLOCK not in table, "pad block in a sequence block table"
+    if not table:
+        return [], dst_pool
+    if dst_table is None:
+        dst_table = reserve_blocks(dst_alloc, len(table))
+    else:
+        dst_table = list(dst_table)
+        assert len(dst_table) == len(table)
+    stage = gather_pool_blocks(src_pool, table)
+    stage = jax.block_until_ready(stage)
+    dst_pool = scatter_pool_blocks(dst_pool, stage, dst_table)
+    for b in table:
+        src_alloc.decref(b)
+    return dst_table, dst_pool
 
 
 # ---------------------------------------------------------------------------

@@ -4,7 +4,10 @@ Teola's Pass 3/4 depend on. The engine-level matrix at the bottom extends
 the same contract across every serving-feature combination: {radix prefix
 cache on/off} x {dense/paged} x {legacy/continuous decode} x {chunked
 prefill on/off} x {speculative on/off} must all emit the exact tokens of
-the canonical all-off engine."""
+the canonical all-off engine. The disaggregated matrix re-runs the paged
+cells split across TWO replicas — prefill on one, ``export_seq`` /
+``import_seq`` migration, decode on the other — under the same exact
+token-identity contract."""
 import itertools
 
 import jax
@@ -224,3 +227,111 @@ def test_matrix_mid_stream_admission_and_eviction():
         eng.release(sid)
     eng.radix.evict(10 ** 6)
     assert eng.alloc.free_blocks() == eng.alloc.capacity
+
+
+# ---------------------------------------------------------------------------
+# Disaggregated prefill/decode: the paged cells re-run split across two
+# replicas — prefill lands on a prefill specialist, the sequence migrates
+# (paged KV block handoff), decode runs on a decode specialist. Token
+# identity to the all-off engine must survive the migration in every
+# feature combination.
+
+def _run_disagg_cell(*, radix, chunked, spec):
+    pe = LLMEngine("mp", _MCFG, max_len=256, seed=0, max_batch=4,
+                   paged=True, block_size=8,
+                   chunked_prefill=chunked, prefill_chunk=24,
+                   prefix_cache="radix" if radix else "none")
+    de = pe.clone(1)
+    if spec:
+        pe.enable_speculative(draft=None, k=3)
+        de.enable_speculative(draft=None, k=3)
+    for sid, text in _MPROMPTS:
+        pe.op_prefill([{"sid": sid, "text": text}])
+    for sid, _ in _MPROMPTS:
+        de.import_seq(pe.export_seq(sid))
+    assert not pe.states                     # source fully drained
+    assert pe.alloc.free_blocks() == pe.alloc.capacity - (
+        pe.radix.num_blocks() if pe.radix is not None else 0)
+    seqs = [(sid, de.submit_decode(sid, 10)) for sid, _ in _MPROMPTS]
+    outs = {}
+    for sid, sq in seqs:
+        assert sq.wait(120), f"decode {sid} timed out"
+        outs[sid] = sq.result
+    stats = dict(de.stats)
+    pe.stop_decode_loop()
+    de.stop_decode_loop()
+    return outs, stats
+
+
+@pytest.mark.parametrize("radix,chunked,spec",
+                         list(itertools.product([False, True], repeat=3)))
+def test_disagg_matrix_token_identity(radix, chunked, spec):
+    outs, stats = _run_disagg_cell(radix=radix, chunked=chunked, spec=spec)
+    assert outs == _baseline()
+    assert stats["migrations_in"] == len(_MPROMPTS)
+
+
+def test_disagg_mid_migration_eviction_and_admission():
+    """The hardest disaggregated cell: the SOURCE's radix tree keeps
+    filling its small pool as prompts stream through (migration drops
+    only sequence refs, so cached blocks pile up until prefill admission
+    must evict LRU leaves), while the DESTINATION admits each import
+    under pressure from a long resident background decode (the import
+    reservation waits on the decode's block frees). Every stream stays
+    token-identical to the all-off engine run sequentially."""
+    shared16 = " ".join(_MSHARED.split()[:16])
+    prompts = [("p%d" % i, shared16 + " " +
+                " ".join(f"t{i}w{j}" for j in range(8)))
+               for i in range(8)]
+
+    base = LLMEngine("b", _MCFG, max_len=256, seed=0, max_batch=8,
+                     paged=False)
+    expect = {}
+    for sid, text in prompts + [("bg", "background long decode prompt")]:
+        base.op_prefill([{"sid": sid, "text": text}])
+    for sid, _ in prompts:
+        expect[sid] = base.op_decode([{"sid": sid, "max_new": 8}])[0]
+    expect["bg"] = base.op_decode([{"sid": "bg", "max_new": 40}])[0]
+
+    pe = LLMEngine("mp", _MCFG, max_len=256, seed=0, max_batch=8,
+                   paged=True, block_size=8, num_blocks=10,
+                   chunked_prefill=True, prefill_chunk=16,
+                   prefix_cache="radix")
+    # destination sized so the resident background decode (6 blocks
+    # worst-case) + one imported sequence (3) + its decode reservation
+    # (1) just fit — every import lands against that standing pressure
+    de = LLMEngine("md", _MCFG, max_len=256, seed=0, max_batch=8,
+                   paged=True, block_size=8, num_blocks=12,
+                   chunked_prefill=True, prefill_chunk=16,
+                   prefix_cache="radix")
+    pe.op_prefill([{"sid": "bg", "text": "background long decode prompt"}])
+    de.import_seq(pe.export_seq("bg"))
+    bg = de.submit_decode("bg", 40)          # stays resident throughout
+    outs = {}
+    for sid, text in prompts:                # migrated mid-decode, 1 by 1
+        pe.op_prefill([{"sid": sid, "text": text}])
+        de.import_seq(pe.export_seq(sid))
+        sq = de.submit_decode(sid, 8)
+        assert sq.wait(120), f"decode {sid} timed out"
+        outs[sid] = sq.result
+        de.release(sid)                      # frees dst capacity
+    assert bg.wait(120), "background decode timed out"
+    outs["bg"] = bg.result
+    src_stats = dict(pe.radix.stats)
+    de.stop_decode_loop()
+    pe.stop_decode_loop()
+
+    assert outs == expect
+    assert de.stats["migrations_in"] == 9
+    assert src_stats["hits"] >= 4            # prefix reused across seqs
+    assert src_stats["evictions"] > 0        # src pool pressure evicted LRU
+    assert de.radix.num_blocks() == 0        # migrated copies stay private
+    # nothing leaked on either side
+    for sid in list(pe.states):
+        pe.release(sid)
+    for sid in list(de.states):
+        de.release(sid)
+    pe.radix.evict(10 ** 6)
+    de.radix.evict(10 ** 6)
+    assert pe.alloc.free_blocks() == pe.alloc.capacity
+    assert de.alloc.free_blocks() == de.alloc.capacity

@@ -1,0 +1,406 @@
+"""Disaggregated prefill/decode serving: the ``migrate_blocks`` paged-KV
+handoff primitive (free-list conservation, refcount ground truth,
+atomicity, pad-block exclusion, radix/COW co-ownership survival),
+engine-level ``export_seq``/``import_seq`` token identity (monolithic and
+mid-flight chunked prefill), role-specialized pool routing, and serve.py
+flag validation. Property tests run seeded-random always and add a
+hypothesis pass when the library is installed."""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.engine_pool import (DisaggregatedEnginePool, EnginePool,
+                                    disaggregate_pools)
+from repro.engines.decode_loop import PrefillJob
+from repro.engines.llm_engine import LLMEngine
+from repro.engines.sim_engines import SimLLMEngine, build_sim_engines
+from repro.serving import kv_cache as kvc
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # seeded-random tests still run
+    HAVE_HYPOTHESIS = False
+
+_CFG = get_config("tiny-lite-llm")
+
+
+def _stamped_pool(num_blocks, block_size=4):
+    """Paged pool whose every cell holds its own BLOCK ID — migrated data
+    is then recognizable at the destination (block axis is axis 1)."""
+    pool = kvc.init_paged_pool(_CFG, num_blocks, block_size)
+
+    def stamp(a):
+        ids = jnp.arange(a.shape[1], dtype=jnp.float32)
+        ids = ids.reshape((1, -1) + (1,) * (a.ndim - 2))
+        return jnp.broadcast_to(ids, a.shape).astype(a.dtype)
+
+    return jax.tree.map(stamp, pool)
+
+
+def _assert_dst_holds_src_ids(dst_pool, table, dst_table):
+    """Every destination slot dst_table[i] must now hold the stamped id
+    of source block table[i], in every pool leaf."""
+    for leaf in jax.tree.leaves(dst_pool):
+        arr = np.asarray(leaf, dtype=np.float32)
+        for s, d in zip(table, dst_table):
+            np.testing.assert_array_equal(
+                arr[:, d], np.full_like(arr[:, d], float(s)))
+
+
+# ---------------------------------------------------------------------------
+# migrate_blocks: the raw primitive
+
+def test_migrate_blocks_moves_data_and_refcounts():
+    sa, da = kvc.BlockAllocator(8), kvc.BlockAllocator(8)
+    src_pool, dst_pool = _stamped_pool(8), kvc.init_paged_pool(_CFG, 8, 4)
+    table = kvc.reserve_blocks(sa, 3)
+    dst_table, dst_pool = kvc.migrate_blocks(sa, src_pool, da, dst_pool,
+                                             table)
+    assert len(dst_table) == 3 and kvc.PAD_BLOCK not in dst_table
+    assert sa.free_blocks() == sa.capacity      # src refs all dropped
+    assert da.used_blocks() == 3
+    assert all(da.refcount(b) == 1 for b in dst_table)
+    _assert_dst_holds_src_ids(dst_pool, table, dst_table)
+
+
+def test_migrate_blocks_empty_table_is_a_noop():
+    sa, da = kvc.BlockAllocator(4), kvc.BlockAllocator(4)
+    src_pool, dst_pool = _stamped_pool(4), kvc.init_paged_pool(_CFG, 4, 4)
+    dst_table, out_pool = kvc.migrate_blocks(sa, src_pool, da, dst_pool, [])
+    assert dst_table == [] and out_pool is dst_pool
+    assert sa.free_blocks() == sa.capacity
+    assert da.free_blocks() == da.capacity
+
+
+def test_migrate_blocks_rejects_pad_block():
+    sa, da = kvc.BlockAllocator(4), kvc.BlockAllocator(4)
+    src_pool, dst_pool = _stamped_pool(4), kvc.init_paged_pool(_CFG, 4, 4)
+    with pytest.raises(AssertionError, match="pad block"):
+        kvc.migrate_blocks(sa, src_pool, da, dst_pool, [kvc.PAD_BLOCK])
+
+
+def test_migrate_blocks_atomic_when_destination_exhausted():
+    """Reservation failure must leave BOTH allocators exactly as found:
+    the source keeps every reference (nothing was staged or decref'd)
+    and reserve_blocks rolls back any partial destination grab."""
+    sa, da = kvc.BlockAllocator(8), kvc.BlockAllocator(4)
+    src_pool, dst_pool = _stamped_pool(8), kvc.init_paged_pool(_CFG, 4, 4)
+    held = kvc.reserve_blocks(da, 2)             # 1 of 3 dst blocks free
+    table = kvc.reserve_blocks(sa, 3)
+    src_refs = sa.refs_snapshot()
+    dst_refs = da.refs_snapshot()
+    with pytest.raises(kvc.OutOfBlocks):
+        kvc.migrate_blocks(sa, src_pool, da, dst_pool, table)
+    assert sa.refs_snapshot() == src_refs
+    assert da.refs_snapshot() == dst_refs
+    assert da.free_blocks() == da.capacity - len(held)
+
+
+def _migrate_invariants(sa, src_pool, da, dst_pool, n, share_mask):
+    """One migration trial against ground-truth bookkeeping: blocks
+    flagged by ``share_mask`` get an extra reference first (a radix tree
+    or COW fork co-owns them) and must SURVIVE on the source."""
+    sf, df = sa.free_blocks(), da.free_blocks()
+    table = kvc.reserve_blocks(sa, n)
+    shared = [b for b, s in zip(table, share_mask) if s]
+    for b in shared:
+        sa.incref(b)
+    dst_table, dst_pool = kvc.migrate_blocks(sa, src_pool, da, dst_pool,
+                                             table)
+    assert kvc.PAD_BLOCK not in dst_table
+    assert len(set(dst_table)) == n              # fresh, distinct slots
+    assert da.free_blocks() == df - n            # exactly n consumed
+    assert all(da.refcount(b) == 1 for b in dst_table)
+    for b in table:                              # src ground truth
+        assert sa.refcount(b) == (1 if b in shared else 0)
+    # free list regained every exclusively-owned block, nothing more
+    assert sa.free_blocks() == sf - len(shared)
+    _assert_dst_holds_src_ids(dst_pool, table, dst_table)
+    return shared, dst_table, dst_pool
+
+
+def test_migrate_blocks_randomized_conservation():
+    rng = random.Random(1234)
+    sa, da = kvc.BlockAllocator(20), kvc.BlockAllocator(20)
+    src_pool = _stamped_pool(20)
+    dst_pool = kvc.init_paged_pool(_CFG, 20, 4)
+    shared_held, dst_held = [], []
+    for _ in range(5):
+        n = rng.randrange(1, 4)
+        mask = [rng.random() < 0.5 for _ in range(n)]
+        shared, dst_table, dst_pool = _migrate_invariants(
+            sa, src_pool, da, dst_pool, n, mask)
+        shared_held += shared
+        dst_held += dst_table
+    # dropping the surviving co-owner refs and the migrated tables must
+    # return BOTH pools to full capacity — nothing leaked either side
+    for b in shared_held:
+        sa.decref(b)
+    for b in dst_held:
+        da.decref(b)
+    assert sa.free_blocks() == sa.capacity
+    assert da.free_blocks() == da.capacity
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(n=hst.integers(1, 3),
+           mask=hst.lists(hst.booleans(), min_size=3, max_size=3))
+    def test_migrate_blocks_hypothesis_conservation(n, mask):
+        sa, da = kvc.BlockAllocator(8), kvc.BlockAllocator(8)
+        src_pool = _stamped_pool(8)
+        dst_pool = kvc.init_paged_pool(_CFG, 8, 4)
+        shared, dst_table, _ = _migrate_invariants(
+            sa, src_pool, da, dst_pool, n, mask[:n])
+        for b in shared:
+            sa.decref(b)
+        for b in dst_table:
+            da.decref(b)
+        assert sa.free_blocks() == sa.capacity
+        assert da.free_blocks() == da.capacity
+
+
+# ---------------------------------------------------------------------------
+# engine-level migration: export_seq / import_seq
+
+def test_engine_migration_token_identical_monolithic():
+    """Prefill on a prefill specialist, migrate, decode on a decode
+    specialist: the token stream must equal the dense single-engine
+    run, the source pool must drain to empty, and the destination must
+    account the migration."""
+    dense = LLMEngine("dn", _CFG, max_len=128, seed=0)
+    pe = LLMEngine("pe", _CFG, max_len=128, seed=0, paged=True,
+                   block_size=8)
+    de = pe.clone(1)
+    prompts = [("s0", "alpha beta gamma delta epsilon"),
+               ("s1", " ".join(f"word{i}" for i in range(18)))]
+    for sid, text in prompts:
+        dense.op_prefill([{"sid": sid, "text": text}])
+        pe.op_prefill([{"sid": sid, "text": text}])
+    expect = {sid: dense.op_decode([{"sid": sid, "max_new": 8}])[0]
+              for sid, _ in prompts}
+    total_blocks = sum(len(pe.states[sid].table) for sid, _ in prompts)
+    for sid, _ in prompts:
+        cont = de.import_seq(pe.export_seq(sid))
+        assert cont is None                      # nothing was mid-flight
+        assert sid not in pe.states
+    assert pe.alloc.free_blocks() == pe.alloc.capacity   # src drained
+    assert de.alloc.used_blocks() == total_blocks
+    assert de.stats["migrations_in"] == 2
+    assert de.stats["migrated_blocks"] == total_blocks
+    outs = {sid: de.op_decode([{"sid": sid, "max_new": 8}])[0]
+            for sid, _ in prompts}
+    assert outs == expect
+
+
+def test_engine_migration_mid_flight_chunked_prefill():
+    """A prompt frozen mid-chunked-prefill (cursor between chunks)
+    migrates with its remaining tokens, resumes on the destination's
+    loop, completes the ORIGINAL job for source-side waiters, and
+    decodes token-identically to the dense baseline."""
+    text = " ".join(f"w{i}" for i in range(20))
+    dense = LLMEngine("dn", _CFG, max_len=128, seed=0)
+    dense.op_prefill([{"sid": "s", "text": text}])
+    expect = dense.op_decode([{"sid": "s", "max_new": 8}])[0]
+
+    pe = LLMEngine("pe", _CFG, max_len=128, seed=0, paged=True,
+                   block_size=8, chunked_prefill=True, prefill_chunk=8)
+    de = pe.clone(1)
+    st, toks, ptoks = pe._prepare_prefill_task({"sid": "s", "text": text})
+    job = PrefillJob("s", st, toks, ptoks=ptoks)
+    pe._prefill_chunk_step([(job, 8)])           # land the first chunk only
+    assert 0 < job.cursor < len(toks)            # genuinely mid-flight
+
+    handle = pe.export_seq("s")
+    handle["job"] = job          # loop isn't running: attach the frozen job
+    cont = de.import_seq(handle)
+    assert cont is not None and cont.remaining() == len(toks) - job.cursor
+    cont.wait(120)
+    job.wait(10)                 # original job completion chained through
+    assert "s" not in pe.states
+    assert pe.alloc.free_blocks() == pe.alloc.capacity
+
+    sq = de.submit_decode("s", 8)
+    assert sq.wait(120), "post-migration decode timed out"
+    assert sq.result == expect
+    de.stop_decode_loop()
+    pe.stop_decode_loop()
+
+
+def test_engine_migration_preserves_radix_cached_source_blocks():
+    """Cached prefix blocks are co-owned by the source's radix tree and
+    the migrating sequence. Migration drops only the SEQUENCE's refs:
+    the tree keeps serving the prefix afterwards, and the migrated copy
+    stays sequence-private on the destination (never inserted there)."""
+    shared = " ".join(f"c{i}" for i in range(16))
+    pe = LLMEngine("pe", _CFG, max_len=256, seed=0, paged=True,
+                   block_size=8, prefix_cache="radix")
+    de = pe.clone(1)
+    pe.op_prefill([{"sid": "s0", "text": shared + " alpha beta"}])
+    cached = list(pe.radix.block_snapshot())
+    assert cached                                # full prefix blocks cached
+    assert all(pe.alloc.refcount(b) == 2 for b in cached)   # tree + seq
+
+    de.import_seq(pe.export_seq("s0"))
+    assert pe.radix.block_snapshot() == cached   # tree untouched
+    assert all(pe.alloc.refcount(b) == 1 for b in cached)   # tree only
+    assert pe.alloc.used_blocks() == len(cached)
+
+    hits0 = pe.radix.stats["hits"]
+    pe.op_prefill([{"sid": "s1", "text": shared + " gamma delta"}])
+    assert pe.radix.stats["hits"] > hits0        # cache still serves
+    assert de.radix.num_blocks() == 0            # migrated copy is private
+
+
+def test_engine_import_backpressure_is_atomic():
+    """When the destination pool cannot fit the incoming table, the
+    import times out with OutOfBlocks and the SOURCE sequence is fully
+    intact; freeing destination capacity lets the same handle land."""
+    text = " ".join(f"y{i}" for i in range(20))
+    pe = LLMEngine("pe", _CFG, max_len=128, seed=0, paged=True,
+                   block_size=8)
+    pe.op_prefill([{"sid": "s", "text": text}])
+    nb = len(pe.states["s"].table)
+
+    de = LLMEngine("de", _CFG, max_len=128, seed=0, paged=True,
+                   block_size=8, num_blocks=nb + 1)   # capacity == nb
+    de.ALLOC_TIMEOUT = 0.2
+    de.op_prefill([{"sid": "bg", "text": text}])      # occupies all blocks
+    assert de.alloc.free_blocks() == 0
+
+    handle = pe.export_seq("s")
+    dst_refs = de.alloc.refs_snapshot()
+    with pytest.raises(kvc.OutOfBlocks):
+        de.import_seq(handle)
+    assert "s" in pe.states                      # source untouched
+    assert pe.alloc.used_blocks() == nb
+    assert de.alloc.refs_snapshot() == dst_refs  # destination untouched
+
+    de.release("bg")                             # free capacity
+    assert de.import_seq(handle) is None
+    assert "s" not in pe.states
+    assert de.alloc.used_blocks() == nb
+
+
+# ---------------------------------------------------------------------------
+# role-specialized pools
+
+class _Replica:
+    """Minimal pool citizen (no KV pool, no radix, no clone)."""
+
+    def __init__(self, tag):
+        self.name = tag
+
+
+def test_engine_pool_roles_validate_and_stamp():
+    reps = [_Replica("a"), _Replica("b")]
+    pool = EnginePool(reps, name="p")
+    assert pool.role == "unified"
+    assert all(r.pool_role == "unified" for r in reps)
+    with pytest.raises(ValueError, match="unknown pool role"):
+        EnginePool(reps, role="draft")
+    EnginePool(reps, role="prefill")
+    assert all(r.pool_role == "prefill" for r in reps)
+
+
+def test_disaggregated_pool_partitions_and_routes():
+    reps = [_Replica(f"r{i}") for i in range(3)]
+    pool = DisaggregatedEnginePool(reps, n_prefill=2, name="core")
+    assert pool.prefill_indices == (0, 1) and pool.decode_indices == (2,)
+    assert [pool.role_of(i) for i in range(3)] == \
+        ["prefill", "prefill", "decode"]
+    assert [r.pool_role for r in reps] == ["prefill", "prefill", "decode"]
+    assert "2p+1d" in repr(pool)
+    # restricted routing honors the candidate set; None stays pool-wide
+    pool.note_queued(0, 100)
+    assert pool.least_loaded(pool.prefill_indices) == 1
+    assert pool.least_loaded(pool.decode_indices) == 2
+    pool.note_queued(1, 200)
+    pool.note_queued(2, 300)
+    assert pool.least_loaded() == 0              # unrestricted: replica 0
+    pool.note_migration("s0", 0, 2)
+    assert pool.migrations == [("s0", 0, 2)]
+    with pytest.raises(ValueError, match="disaggregated pool needs"):
+        DisaggregatedEnginePool(reps, n_prefill=3)
+    with pytest.raises(ValueError, match="disaggregated pool needs"):
+        DisaggregatedEnginePool(reps, n_prefill=0)
+
+
+def test_disaggregate_classmethod_and_registry_helper():
+    proto = SimLLMEngine("core_llm")
+    pool = DisaggregatedEnginePool.disaggregate(proto, 1, 2,
+                                                name="core_llm")
+    assert len(pool) == 3 and pool.n_prefill == 1
+    assert pool[0] is proto and proto.pool_role == "prefill"
+    assert pool[1].pool_role == "decode" and pool[2].pool_role == "decode"
+    engines = {"core_llm": SimLLMEngine("core_llm"),
+               "rerank": _Replica("rerank")}
+    out = disaggregate_pools(engines, ("core_llm", "lite_llm"), 1, 1)
+    assert isinstance(out["core_llm"], DisaggregatedEnginePool)
+    assert out["rerank"] is engines["rerank"]    # untouched passthrough
+    with pytest.raises(ValueError, match=">=1 prefill"):
+        DisaggregatedEnginePool.disaggregate(proto, 0, 1)
+
+
+def test_build_sim_engines_disaggregate_wiring():
+    engines = build_sim_engines(paged_kv=True, chunked_prefill=True,
+                                prefill_chunk=64, disaggregate=True,
+                                prefill_replicas=1, decode_replicas=1)
+    for name in ("core_llm", "lite_llm"):
+        assert isinstance(engines[name], DisaggregatedEnginePool)
+        assert len(engines[name]) == 2
+    with pytest.raises(ValueError):
+        build_sim_engines(paged_kv=True, disaggregate=True,
+                          llm_instances=2)
+
+
+# ---------------------------------------------------------------------------
+# serve.py flag validation (satellite) — table-driven, alongside the
+# speculative-flag suite in test_spec_decode.py
+
+def _validate(argv):
+    from repro.launch.serve import build_parser, validate_args
+    ap = build_parser()
+    args = ap.parse_args(argv)
+    validate_args(ap, args)
+    return args
+
+
+_DISAGG_OK = ["--disaggregate", "--paged-kv", "--continuous-batching"]
+
+
+@pytest.mark.parametrize("argv,msg", [
+    (["--prefill-replicas", "2"], "--prefill-replicas requires"),
+    (["--decode-replicas", "2"], "--decode-replicas requires"),
+    (["--disaggregate", "--continuous-batching"], "--paged-kv"),
+    (["--disaggregate", "--paged-kv"], "--continuous-batching"),
+    (_DISAGG_OK + ["--scheme", "LlamaDist-TO"], "--scheme Teola"),
+    (_DISAGG_OK + ["--llm-instances", "2"], "--llm-instances"),
+    (_DISAGG_OK + ["--prefill-replicas", "0"],
+     "--prefill-replicas must be >= 1"),
+    (_DISAGG_OK + ["--decode-replicas", "0"],
+     "--decode-replicas must be >= 1"),
+])
+def test_serve_rejects_incompatible_disagg_flags(argv, msg, capsys):
+    with pytest.raises(SystemExit) as e:
+        _validate(argv)
+    assert e.value.code == 2                 # argparse error, not traceback
+    assert msg in capsys.readouterr().err
+
+
+def test_serve_accepts_valid_disagg_flags():
+    args = _validate(_DISAGG_OK)
+    assert args.disaggregate
+    assert args.prefill_replicas == 1 and args.decode_replicas == 1
+    args = _validate(_DISAGG_OK + ["--prefill-replicas", "2",
+                                   "--decode-replicas", "3"])
+    assert args.prefill_replicas == 2 and args.decode_replicas == 3
+    args = _validate([])                     # plain serve untouched
+    assert not args.disaggregate
+    assert args.prefill_replicas == 1 and args.decode_replicas == 1
