@@ -72,6 +72,11 @@ class EnginePool:
             setattr(r, "pool_role", role)
         self._loads = [_ReplicaLoad() for _ in self.replicas]
         self._lock = threading.Lock()
+        # per-replica health (fault tolerance): healthy -> suspect ->
+        # dead. All-healthy is the steady state and every health check
+        # below reduces to a no-op then — flag-off routing is identical.
+        self._health = ["healthy"] * len(self.replicas)
+        self._health_reasons: Dict[int, str] = {}
 
     @classmethod
     def replicate(cls, engine, n: int, name: str = "") -> "EnginePool":
@@ -138,6 +143,60 @@ class EnginePool:
         fn = getattr(self.replicas[i], "kv_free_blocks", None)
         return fn() if fn is not None else None
 
+    # -- replica health (fault tolerance) -----------------------------------
+    _HEALTH_ORDER = {"healthy": 0, "suspect": 1, "dead": 2}
+
+    def health(self, i: int) -> str:
+        """Effective health of replica i: the worse of the pool's mark
+        (detection-side) and the engine's own ``health`` attribute
+        (set when its decode loop dies or a crash is injected)."""
+        eng = getattr(self.replicas[i], "health", "healthy")
+        mine = self._health[i]
+        return eng if self._HEALTH_ORDER.get(eng, 0) > \
+            self._HEALTH_ORDER.get(mine, 0) else mine
+
+    def health_reason(self, i: int) -> str:
+        return self._health_reasons.get(i, "")
+
+    def mark_suspect(self, i: int, reason: str = ""):
+        """Quarantine-light: a suspect replica only receives work when
+        no healthy candidate remains (demoted in every routing key)."""
+        with self._lock:
+            if self._health[i] == "healthy":
+                self._health[i] = "suspect"
+                self._health_reasons[i] = reason
+
+    def mark_dead(self, i: int, reason: str = "") -> bool:
+        """Quarantine: a dead replica is excluded from routing entirely.
+        Returns True on the healthy/suspect -> dead transition (callers
+        reclaim its blocks exactly once)."""
+        with self._lock:
+            was = self._health[i]
+            self._health[i] = "dead"
+            if was != "dead":
+                # keep the FIRST death reason — later marks are echoes
+                self._health_reasons[i] = reason
+            return was != "dead"
+
+    def mark_healthy(self, i: int):
+        """Re-admit a replica (operator action / tests)."""
+        with self._lock:
+            self._health[i] = "healthy"
+            self._health_reasons.pop(i, None)
+
+    def healthy_indices(self, indices=None) -> list:
+        """Candidate set with dead replicas excluded. Falls back to the
+        unfiltered set when EVERY candidate is dead — routing then fails
+        at submit time with the replica's own error rather than silently
+        picking nothing."""
+        base = list(indices if indices is not None
+                    else range(len(self.replicas)))
+        alive = [i for i in base if self.health(i) != "dead"]
+        return alive or base
+
+    def _suspect_rank(self, i: int) -> int:
+        return 0 if self.health(i) == "healthy" else 1
+
     def least_loaded(self, indices=None) -> int:
         """Replica for routed batch work. A replica whose paged-KV pool
         is EXHAUSTED only receives work when every replica is exhausted
@@ -147,9 +206,9 @@ class EnginePool:
         pre-role router."""
         def key(i):
             free = self.kv_free_blocks(i)
-            return (0 if (free is None or free > 0) else 1, self.load(i))
-        return min(indices if indices is not None
-                   else range(len(self.replicas)), key=key)
+            return (self._suspect_rank(i),
+                    0 if (free is None or free > 0) else 1, self.load(i))
+        return min(self.healthy_indices(indices), key=key)
 
     # -- prefix-aware routing (radix prefix cache) --------------------------
     def prefix_match_len(self, i: int, text: str) -> int:
@@ -166,8 +225,9 @@ class EnginePool:
         block-aware least-loaded routing. ``indices`` restricts the
         candidate set (role-specialized dispatch)."""
         best_i, best_m = None, 0
-        for i in (indices if indices is not None
-                  else range(len(self.replicas))):
+        for i in self.healthy_indices(indices):
+            if self.health(i) == "dead":
+                continue          # all-dead fallback set: no prefix reuse
             free = self.kv_free_blocks(i)
             if free is not None and free <= 0:
                 continue
@@ -196,9 +256,9 @@ class EnginePool:
             blocks = self.kv_free_blocks(i)
             has_free = (slots is None or slots > 0) and \
                 (blocks is None or blocks > 0)
-            return (0 if has_free else 1, self.load(i))
-        return min(indices if indices is not None
-                   else range(len(self.replicas)), key=key)
+            return (self._suspect_rank(i),
+                    0 if has_free else 1, self.load(i))
+        return min(self.healthy_indices(indices), key=key)
 
     def loads(self) -> List[float]:
         return [self.load(i) for i in range(len(self.replicas))]
@@ -267,6 +327,37 @@ class DisaggregatedEnginePool(EnginePool):
 
     def role_of(self, i: int) -> str:
         return "prefill" if i < self.n_prefill else "decode"
+
+    # -- graceful degradation (fault tolerance) -----------------------------
+    # When every replica of one role is dead, the pool DEMOTES to
+    # colocated mode on the surviving role's replicas: a dead decode
+    # side sends decodes to the prefill specialists (and vice versa)
+    # rather than stranding the request. All-healthy, these return the
+    # static role partitions — flag-off routing is identical.
+
+    def route_prefill_indices(self) -> tuple:
+        alive = tuple(i for i in self.prefill_indices
+                      if self.health(i) != "dead")
+        if alive:
+            return alive
+        fallback = tuple(i for i in self.decode_indices
+                         if self.health(i) != "dead")
+        return fallback or self.prefill_indices
+
+    def route_decode_indices(self) -> tuple:
+        alive = tuple(i for i in self.decode_indices
+                      if self.health(i) != "dead")
+        if alive:
+            return alive
+        fallback = tuple(i for i in self.prefill_indices
+                         if self.health(i) != "dead")
+        return fallback or self.decode_indices
+
+    def degraded(self) -> bool:
+        """True when one whole role is dead and the pool runs colocated."""
+        return (all(self.health(i) == "dead" for i in self.decode_indices)
+                or all(self.health(i) == "dead"
+                       for i in self.prefill_indices))
 
     def note_migration(self, sid: str, src_idx: int, dst_idx: int):
         with self._lock:

@@ -104,6 +104,53 @@ def _prefill_payload(prim, ctx) -> List[dict]:
     return [{"sid": _sid(prim, ctx), "text": _prompt_text(prim, store)}]
 
 
+def rebuild_full_prompt(engine_name: str, ctx, sid: str):
+    """Reconstruct a sequence's WHOLE prompt from the query e-graph. A
+    prompt split by the causal-prefill pass lives in two primitives —
+    PartialPrefilling (early parts) + FullPrefilling (late parts) — so
+    every matching piece is collected and joined in causal order; the
+    whitespace tokenizer guarantees ``encode(a) + encode(b) ==
+    encode(a + " " + b)``, making the joined replay token-identical to
+    the split original. Returns None when no prefill primitive of this
+    engine produced the sequence."""
+    pieces = {}                             # op -> payload text
+    for prim in ctx.graph.nodes.values():
+        if prim.op not in (P.PREFILL, P.PARTIAL_PREFILL, P.FULL_PREFILL):
+            continue
+        if prim.engine != engine_name:
+            continue
+        try:
+            for p in _prefill_payload(prim, ctx):
+                if p["sid"] == sid:
+                    pieces[prim.op] = p["text"]
+        except Exception:  # noqa: BLE001 — unresolved sibling payloads
+            continue
+    if not pieces:
+        return None
+    order = (P.PREFILL, P.PARTIAL_PREFILL, P.FULL_PREFILL)
+    return " ".join(pieces[o] for o in order if o in pieces and pieces[o])
+
+
+def _continuation_payload(prim, ctx, engine, items):
+    """A FullPrefilling continuation rerouted off a dead replica: the
+    partial state it would extend died with that replica, so prefill the
+    WHOLE rebuilt prompt (early + late parts) on the fresh state —
+    silently prefilling only the late parts would decode from a wrong
+    prefix. No-op (and allocation-free) on the healthy path, where the
+    partial state is resident on the routed engine."""
+    if not prim.config.get("continue_partial"):
+        return items
+    states = getattr(engine, "states", {})
+    out = []
+    for p in items:
+        if p["sid"] not in states:
+            full = rebuild_full_prompt(prim.engine, ctx, p["sid"])
+            if full is not None:
+                p = {**p, "text": full}
+        out.append(p)
+    return out
+
+
 # ---------------------------------------------------------------------------
 
 def execute_batch(engine, tasks: List):
@@ -208,7 +255,9 @@ def execute_batch(engine, tasks: List):
     if op in (P.PREFILL, P.PARTIAL_PREFILL, P.FULL_PREFILL):
         payload = []
         for t in tasks:
-            payload.extend(_prefill_payload(t.prim, t.ctx))
+            items = _prefill_payload(t.prim, t.ctx)
+            payload.extend(_continuation_payload(t.prim, t.ctx, engine,
+                                                 items))
         engine.op_prefill(payload)
         for t in tasks:
             for k in t.prim.produces:
@@ -282,7 +331,7 @@ def _write_decode_outputs(t, texts: List[str]):
             store[k2] = True
 
 
-def submit_prefill_task(engine, task, done, on_fail=None):
+def submit_prefill_task(engine, task, done, on_fail=None, ft=None):
     """Chunked-prefill dispatch of ONE prefill NodeTask: every sequence
     of the task is queued into the engine's continuous loop as a
     resumable PrefillJob (``submit_prefill``) — the loop lands
@@ -292,7 +341,12 @@ def submit_prefill_task(engine, task, done, on_fail=None):
     when the task's LAST job completes, the store is written exactly as
     the batch executor writes it and ``done(task)`` fires on the loop
     thread. On a job error the query is failed like ``_fail_batch`` and
-    ``on_fail(task)``, if given, runs cleanup."""
+    ``on_fail(task)``, if given, runs cleanup.
+
+    ``ft`` (optional) is a ``faults.TaskRecovery`` handle: a failed job
+    is offered for recovery (resubmission on a healthy replica) before
+    being counted as a failure, duplicate completions of a recovered
+    job are dropped, and terminal errors are wrapped structurally."""
     prim, ctx = task.prim, task.ctx
     store = ctx.store
     payload = _prefill_payload(prim, ctx)
@@ -300,27 +354,47 @@ def submit_prefill_task(engine, task, done, on_fail=None):
     if not payload:                      # zero-item prefill: parity with
         for k in prim.produces:          # the batch path's empty span
             store[k] = True
+        if ft is not None:
+            ft.settle()
         done(task)
         return
 
     lock = threading.Lock()
     remaining = [len(payload)]
     errors: List = []
+    completed = [False] * len(payload)
 
     def fail(err):
+        if ft is not None:
+            err = ft.wrap(err)
         if task.stream is not None:
             task.stream.close()
-        ctx.error = err
+        if ctx.error is None:    # first error wins (root cause)
+            ctx.error = err
         ctx.done.set()
         if on_fail is not None:
             on_fail(task)
+        if ft is not None:
+            ft.settle()
 
-    def job_done(job):
-        if job.error is not None:
-            errors.append(job.error)
+    def job_done(j, job):
+        if ft is not None and ft.cancelled:
+            return                       # deadline already failed the task
         with lock:
+            if completed[j]:
+                return                   # duplicate (job was recovered)
+        if job.error is not None and ft is not None and ft.recover(j, job):
+            return                       # retry scheduled elsewhere
+        with lock:
+            if completed[j]:
+                return
+            completed[j] = True
+            if job.error is not None:
+                errors.append(job.error)
             remaining[0] -= 1
             last = remaining[0] == 0
+        if ft is not None:
+            ft.note_done(j)
         if not last:
             return
         if errors:
@@ -332,21 +406,35 @@ def submit_prefill_task(engine, task, done, on_fail=None):
         except Exception as e:  # noqa: BLE001
             fail(e)
             return
+        if ft is not None:
+            ft.settle()
         done(task)
 
-    for p in payload:
+    def _submit(j, eng, prev):
+        p = _continuation_payload(prim, ctx, eng, [payload[j]])[0]
+        job = eng.submit_prefill(p,
+                                 on_done=lambda job, j=j: job_done(j, job))
+        if ft is not None:
+            ft.note_submitted(j, job)
+
+    if ft is not None:
+        ft.bind([p["sid"] for p in payload], _submit, fail)
+    for j in range(len(payload)):
         try:
-            engine.submit_prefill(p, on_done=job_done)
+            _submit(j, engine, None)
         except Exception as e:  # noqa: BLE001 — count the failed job so
-            errors.append(e)    # the task still completes (as a failure)
-            with lock:
+            if ft is not None and ft.recover_submit(j, e):
+                continue        # replay scheduled on a healthy replica
+            with lock:          # the task still completes (as a failure)
+                completed[j] = True
+                errors.append(e)
                 remaining[0] -= 1
                 last = remaining[0] == 0
             if last:
                 fail(errors[0])
 
 
-def submit_decode_task(engine, task, done, on_fail=None):
+def submit_decode_task(engine, task, done, on_fail=None, ft=None):
     """Continuous-batching dispatch of ONE decode NodeTask: every sequence
     of the task is admitted into the engine's persistent decode loop
     (``submit_decode``) instead of a blocking run-to-completion batch. The
@@ -355,12 +443,24 @@ def submit_decode_task(engine, task, done, on_fail=None):
     writes it and ``done(task)`` fires on the loop thread. On a sequence
     error the query is failed like ``_fail_batch`` (done is NOT called)
     and ``on_fail(task)``, if given, runs cleanup (e.g. releasing the
-    pool's in-flight ledger)."""
+    pool's in-flight ledger).
+
+    ``ft`` (optional) is a ``faults.TaskRecovery`` handle. With it, a
+    failed sequence is offered for recovery before being counted: the
+    handle resubmits on a healthy replica through ``recover_decode``
+    (prompt replayed from the e-graph, emitted tokens teacher-forced —
+    token-identical resume). A sequence routed to an engine that does
+    not hold its state (its pinned replica died between prefill and
+    decode) takes the same replay path. Duplicate completions — a hung
+    replica finishing a sequence that was already recovered elsewhere —
+    are dropped, and terminal errors are wrapped structurally."""
     prim, ctx = task.prim, task.ctx
     entries = decode_entries(prim, ctx)  # (sid, max_new) per sequence
 
     if not entries:                      # zero-item decode: parity with
         _write_decode_outputs(task, [])  # the batch path's empty span
+        if ft is not None:
+            ft.settle()
         done(task)
         return
 
@@ -368,14 +468,20 @@ def submit_decode_task(engine, task, done, on_fail=None):
     remaining = [len(entries)]
     results: List = [None] * len(entries)
     errors: List = []
+    completed = [False] * len(entries)
 
     def fail(err):
+        if ft is not None:
+            err = ft.wrap(err)
         if task.stream is not None:
             task.stream.close()
-        ctx.error = err
+        if ctx.error is None:    # first error wins (root cause)
+            ctx.error = err
         ctx.done.set()
         if on_fail is not None:
             on_fail(task)
+        if ft is not None:
+            ft.settle()
 
     def finish():
         if errors:
@@ -386,15 +492,29 @@ def submit_decode_task(engine, task, done, on_fail=None):
         except Exception as e:  # noqa: BLE001
             fail(e)
             return
+        if ft is not None:
+            ft.settle()
         done(task)
 
     def seq_done(j, seq):
-        if seq.error is not None:
-            errors.append(seq.error)
-        results[j] = seq.result
+        if ft is not None and ft.cancelled:
+            return                       # deadline already failed the task
         with lock:
+            if completed[j]:
+                return                   # duplicate (seq was recovered)
+        if seq.error is not None and ft is not None and ft.recover(j, seq):
+            return                       # retry scheduled elsewhere
+        with lock:
+            if completed[j]:
+                return
+            completed[j] = True
+            if seq.error is not None:
+                errors.append(seq.error)
+            results[j] = seq.result
             remaining[0] -= 1
             last = remaining[0] == 0
+        if ft is not None:
+            ft.note_done(j)
         if last:
             # a completion-path failure (done -> graph bookkeeping) must
             # fail the query, not strand it; the ledger was already
@@ -410,9 +530,31 @@ def submit_decode_task(engine, task, done, on_fail=None):
 
     on_text = task.stream.put if (task.stream is not None
                                   and len(entries) == 1) else None
-    for j, (sid, max_new) in enumerate(entries):
-        engine.submit_decode(sid, max_new, on_text=on_text,
-                             on_done=lambda seq, j=j: seq_done(j, seq))
+
+    def _submit(j, eng, prev):
+        sid, max_new = entries[j]
+        cb = lambda seq, j=j: seq_done(j, seq)   # noqa: E731
+        if ft is not None and (prev is not None or
+                               sid not in getattr(eng, "states", {})):
+            seq = eng.recover_decode(sid, ft.prompt_for(sid), max_new,
+                                     prev, on_text=on_text, on_done=cb)
+        else:
+            seq = eng.submit_decode(sid, max_new, on_text=on_text,
+                                    on_done=cb)
+        if ft is not None:
+            ft.note_submitted(j, seq)
+
+    if ft is not None:
+        ft.bind([sid for sid, _ in entries], _submit, fail)
+    for j in range(len(entries)):
+        try:
+            _submit(j, engine, None)
+        except Exception as e:  # noqa: BLE001 — admission failed (e.g.
+            if ft is None:      # the routed replica just died): offer
+                raise           # recovery before failing the task
+            if not ft.recover_submit(j, e):
+                fail(e)
+                return
 
 
 # ---------------------------------------------------------------------------

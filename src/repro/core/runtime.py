@@ -102,7 +102,11 @@ def _fail_batch(batch: List[NodeTask], e: Exception):
     for t in batch:
         if t.stream is not None:
             t.stream.close()
-        t.ctx.error = e
+        if t.ctx.error is None:
+            # first error wins: a cascade failure (e.g. later submits
+            # bouncing off an already-dead replica) must not overwrite
+            # the structured root-cause error already recorded
+            t.ctx.error = e
         t.ctx.done.set()
 
 
@@ -306,12 +310,20 @@ class _ReplicaWorker(threading.Thread):
             try:
                 self.sched.executor(self.engine, batch)
             except Exception as e:  # noqa: BLE001
-                _fail_batch(batch, e)
+                if not self.sched._retry_routed(self, batch, tokens, e):
+                    _fail_batch(batch,
+                                self.sched._wrap_batch_error(self, batch,
+                                                             e))
                 continue
             finally:
                 pool.note_finished(self.idx, tokens)
             for t in batch:
-                self.sched.on_complete(t)
+                try:
+                    self.sched.on_complete(t)
+                except Exception as e:  # noqa: BLE001
+                    # a completion-hook failure must fail THAT task, not
+                    # silently kill this worker thread
+                    _fail_batch([t], e)
 
 
 def _seq_key(task: NodeTask) -> Optional[tuple]:
@@ -342,7 +354,8 @@ class PooledEngineScheduler(threading.Thread):
     chunks between its decode iterations."""
 
     def __init__(self, pool: EnginePool, executor, policy: str = "topo",
-                 period: float = 0.002, continuous: bool = False):
+                 period: float = 0.002, continuous: bool = False,
+                 fault_tolerance=None):
         super().__init__(daemon=True)
         self.pool = pool
         self.engine = pool[0]          # profile source (max_batch, kind)
@@ -351,6 +364,16 @@ class PooledEngineScheduler(threading.Thread):
         self.period = period
         self.continuous = continuous and hasattr(pool[0], "submit_decode")
         self.chunked = self.continuous and chunked_prefill_enabled(pool[0])
+        # fault tolerance (FTConfig): a RecoveryManager owns replica
+        # health marking, block reclamation, watchdog hang/deadline
+        # detection and per-task recovery handles. None (the default)
+        # leaves every dispatch path byte-identical.
+        self.ftmgr = None
+        if fault_tolerance is not None and \
+                hasattr(pool[0], "submit_decode"):
+            from repro.serving.faults import RecoveryManager
+            self.ftmgr = RecoveryManager(self, fault_tolerance)
+            self.ftmgr.start()
         # disaggregated prefill/decode dispatch: prefill ops see only the
         # prefill-specialist replicas, decodes only the decode side (with
         # a KV migration when the sequence was prefilled elsewhere). For
@@ -360,6 +383,9 @@ class PooledEngineScheduler(threading.Thread):
             self.continuous
         self._prefill_idx = pool.prefill_indices if self.disagg else None
         self._decode_idx = pool.decode_indices if self.disagg else None
+        # graceful degradation: with replicas dead, the pool's route_*
+        # views exclude them (demoting to colocated mode when one whole
+        # role is gone). All-healthy they equal the static partitions.
         # prefix-aware prefill routing: only when some replica carries a
         # radix prefix cache — flag off keeps routing byte-identical
         self.prefix_aware = any(
@@ -385,10 +411,18 @@ class PooledEngineScheduler(threading.Thread):
 
     def stop(self):
         self.running = False
+        if self.ftmgr is not None:
+            self.ftmgr.stop()
         with self.cv:
             self.cv.notify()
         for w in self.workers:
             w.q.put(None)
+
+    def _pf_idx(self):
+        return self.pool.route_prefill_indices() if self.disagg else None
+
+    def _dc_idx(self):
+        return self.pool.route_decode_indices() if self.disagg else None
 
     def forget(self, qid: str):
         """Drop a finished query's sequence-affinity entries."""
@@ -435,7 +469,7 @@ class PooledEngineScheduler(threading.Thread):
             if not payload:
                 return None
             return self.pool.best_prefix_replica(payload[0]["text"],
-                                                 self._prefill_idx)
+                                                 self._pf_idx())
         except Exception:  # noqa: BLE001
             return None
 
@@ -451,6 +485,13 @@ class PooledEngineScheduler(threading.Thread):
             key = _seq_key(t)
             with self._aff_lock:
                 idx = self.affinity.get(key) if key is not None else None
+                if idx is not None and self.ftmgr is not None and \
+                        self.pool.health(idx) == "dead":
+                    # pinned replica died since the last op: drop the pin
+                    # and re-route; the executor replays the sequence via
+                    # recover_decode on the fresh replica
+                    del self.affinity[key]
+                    idx = None
                 if idx is None:
                     if is_prefill:
                         # prefix affinity first: the replica with the
@@ -458,10 +499,10 @@ class PooledEngineScheduler(threading.Thread):
                         # prefill compute
                         idx = self._prefix_route(t)
                         if idx is None:
-                            idx = self.pool.least_loaded(self._prefill_idx)
+                            idx = self.pool.least_loaded(self._pf_idx())
                     else:
                         idx = self.pool.least_loaded_decode(
-                            self._decode_idx)
+                            self._dc_idx())
                     if key is not None:
                         self.affinity[key] = idx
             if self.disagg and not is_prefill and \
@@ -479,22 +520,36 @@ class PooledEngineScheduler(threading.Thread):
             self.routes.append((idx, t.prim.op, t.prim.num_requests,
                                 tokens))
             self.decode_submits.append((t.prim.num_requests, t.prim.op))
+            # route is MUTABLE: recovery re-routes a task's sequences to
+            # another replica mid-flight and updates route["idx"], so the
+            # ledger release lands on the replica that actually ran it
+            route = {"idx": idx, "tokens": tokens}
 
-            def _done(task, idx=idx, tokens=tokens):
-                self.pool.note_decode_finished(idx, tokens)
+            def _done(task, route=route):
+                self.pool.note_decode_finished(route["idx"],
+                                               route["tokens"])
                 self.on_complete(task)
 
-            def _fail(task, idx=idx, tokens=tokens):
+            def _fail(task, route=route):
                 # release the ledger even when the task errors (done is
                 # not called on the error path)
-                self.pool.note_decode_finished(idx, tokens)
+                self.pool.note_decode_finished(route["idx"],
+                                               route["tokens"])
 
+            ft = None
+            if self.ftmgr is not None:
+                ft = self.ftmgr.handle(
+                    t, route, "prefill" if is_prefill else "decode")
             submit = submit_prefill_task if is_prefill \
                 else submit_decode_task
             try:
-                submit(self.pool[idx], t, _done, on_fail=_fail)
+                submit(self.pool[idx], t, _done, on_fail=_fail, ft=ft)
             except Exception as e:  # noqa: BLE001
-                self.pool.note_decode_finished(idx, tokens)
+                if ft is not None:
+                    e = ft.wrap(e)   # structured error, not a bare crash
+                    ft.settle()
+                self.pool.note_decode_finished(route["idx"],
+                                               route["tokens"])
                 _fail_batch([t], e)
 
     def _handoff(self, t: NodeTask, src_idx: int) -> int:
@@ -509,12 +564,33 @@ class PooledEngineScheduler(threading.Thread):
         loop's iteration cadence — resident decodes never stop ticking
         while a handoff is in flight."""
         from repro.core.executors import decode_entries
-        dst_idx = self.pool.least_loaded_decode(self._decode_idx)
+        dst_idx = self.pool.least_loaded_decode(self._dc_idx())
+        if dst_idx == src_idx:
+            # degraded pool: the whole decode side is dead and routing
+            # demoted to colocated mode — the KV already lives here
+            return src_idx
         src, dst = self.pool[src_idx], self.pool[dst_idx]
-        for sid, _ in decode_entries(t.prim, t.ctx):
-            if sid in getattr(src, "states", {}):
-                dst.import_seq(src.export_seq(sid))
-                self.pool.note_migration(sid, src_idx, dst_idx)
+        try:
+            for sid, _ in decode_entries(t.prim, t.ctx):
+                if sid in getattr(src, "states", {}):
+                    dst.import_seq(src.export_seq(sid))
+                    self.pool.note_migration(sid, src_idx, dst_idx)
+        except Exception as e:  # noqa: BLE001
+            if self.ftmgr is None:
+                raise
+            # transfer fault: mark the destination and decode colocated
+            # on the prefill replica instead. Sequences whose state was
+            # already moved off src are replayed there by the executor's
+            # recover_decode path (their KV is simply missing on src).
+            self.ftmgr.note_failure(dst_idx, e)
+            self.ftmgr.events.append(
+                ("handoff_fallback", t.ctx.qid, src_idx, dst_idx,
+                 repr(e)))
+            key = _seq_key(t)
+            if key is not None:
+                with self._aff_lock:
+                    self.affinity[key] = src_idx
+            return src_idx
         key = _seq_key(t)
         if key is not None:
             with self._aff_lock:
@@ -540,7 +616,7 @@ class PooledEngineScheduler(threading.Thread):
                 # disaggregated pools: routed batches are prefill work
                 # (decodes go through _submit_continuous) — keep them on
                 # the prefill specialists
-                idx = self.pool.least_loaded(self._prefill_idx)
+                idx = self.pool.least_loaded(self._pf_idx())
                 for t in unpinned:
                     # radix prefix affinity can split a task off the
                     # fused sub-batch — reusing a long cached prefix
@@ -559,6 +635,54 @@ class PooledEngineScheduler(threading.Thread):
                                 sum(t.prim.num_requests for t in tasks),
                                 tokens))
             self.workers[idx].q.put((tasks, tokens))
+
+    def _retry_routed(self, worker, batch: List[NodeTask], tokens: int,
+                      err: Exception) -> bool:
+        """A routed (run-to-completion) batch blew up on a replica.
+        With fault tolerance on and the error recoverable, mark the
+        replica, unpin the batch's sequences from it, and re-route the
+        whole batch — capped by cfg.max_retries attempts per task."""
+        mgr = self.ftmgr
+        if mgr is None:
+            return False
+        from repro.serving.faults import is_recoverable
+        mgr.note_failure(worker.idx, err)
+        if not is_recoverable(err):
+            return False
+        for t in batch:
+            a = getattr(t, "ft_attempts", 0)
+            if a >= mgr.cfg.max_retries:
+                return False
+            t.ft_attempts = a + 1
+        time.sleep(mgr.cfg.backoff)
+        with self._aff_lock:
+            for k in [k for k, v in self.affinity.items()
+                      if v == worker.idx]:
+                del self.affinity[k]
+        mgr.events.append(("retry_batch", worker.idx, len(batch),
+                           repr(err)))
+        self._route(batch)
+        return True
+
+    def _wrap_batch_error(self, worker, batch: List[NodeTask],
+                          err: Exception) -> Exception:
+        """Structured terminal error for a batch-path failure when fault
+        tolerance is on (parity with ``TaskRecovery.wrap`` — a request
+        must never fail with a bare replica exception)."""
+        from repro.serving.faults import RequestError
+        if self.ftmgr is None or isinstance(err, RequestError):
+            return err
+        rep = self.pool[worker.idx]
+        t = batch[0]
+        out = RequestError(
+            f"request {t.ctx.qid}:{t.prim.pid} failed after "
+            f"{getattr(t, 'ft_attempts', 0)} recovery attempt(s) "
+            f"(replica {getattr(rep, 'name', '?')}): {err}",
+            qid=t.ctx.qid, reason=type(err).__name__,
+            attempts=getattr(t, "ft_attempts", 0),
+            replica=getattr(rep, "name", ""))
+        out.__cause__ = err
+        return out
 
     def run(self):
         while self.running:
@@ -609,19 +733,22 @@ class Runtime:
 
     def __init__(self, engines: Dict[str, Any], policy: str = "topo",
                  streaming: bool = False,
-                 continuous_batching: bool = False):
+                 continuous_batching: bool = False,
+                 fault_tolerance=None):
         from repro.core.executors import execute_batch
         self.engines = engines
         self.policy = policy
         self.streaming = streaming
         self.continuous_batching = continuous_batching
+        self.fault_tolerance = fault_tolerance
         self.scheds: Dict[str, Any] = {}
         for name, eng in engines.items():
             if isinstance(eng, list):
                 eng = EnginePool(eng, name=name) if len(eng) > 1 else eng[0]
             if isinstance(eng, EnginePool):
                 s = PooledEngineScheduler(eng, execute_batch, policy,
-                                          continuous=continuous_batching)
+                                          continuous=continuous_batching,
+                                          fault_tolerance=fault_tolerance)
             else:
                 s = EngineScheduler(eng, execute_batch, policy,
                                     continuous=continuous_batching)

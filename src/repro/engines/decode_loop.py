@@ -171,6 +171,15 @@ class ContinuousDecodeLoop(threading.Thread):
         self.active: List[DecodeSeq] = []
         self.cv = threading.Condition()
         self.running = True
+        # fault tolerance: `last_pass` is the loop's heartbeat — updated
+        # at the top of every pass, so a pass stuck inside an engine
+        # call (hung replica) goes stale and the watchdog can tell a
+        # hung loop from an idle one. `fatal_error` captures the first
+        # exception that escapes the loop body (loop-thread death must
+        # never be silent — the run() wrapper drains every queued
+        # sequence with it and marks the engine suspect).
+        self.last_pass = time.time()
+        self.fatal_error: Optional[Exception] = None
         # introspection (tests / benchmarks)
         self.iterations = 0
         self.max_resident = 0
@@ -384,7 +393,41 @@ class ContinuousDecodeLoop(threading.Thread):
                 self.callback_errors.append((seq.sid, e))
 
     def run(self):
+        try:
+            self._run_loop()
+        except Exception as e:  # noqa: BLE001 — loop-thread death is fatal
+            # satellite bugfix: a background decode-loop thread must not
+            # swallow its own death — capture the first exception, mark
+            # the owning engine suspect, and fail everything queued so
+            # every submitting caller sees the error.
+            self.fatal_error = e
+            try:
+                if getattr(self.engine, "health", "healthy") == "healthy":
+                    self.engine.health = "suspect"
+            except Exception:  # noqa: BLE001
+                pass
+        if self.fatal_error is not None:
+            err: Exception = RuntimeError(
+                f"decode loop died: {self.fatal_error!r}")
+            err.__cause__ = self.fatal_error
+        else:
+            err = RuntimeError("decode loop stopped")
+        # stopped or died: unblock anything still resident or queued
+        with self.cv:
+            self.running = False
+            leftovers = list(self.active) + list(self.waiting)
+            pleft = list(self.prefill_waiting)
+            self.active.clear()
+            self.waiting.clear()
+            self.prefill_waiting.clear()
+        for seq in leftovers:
+            self._evict(seq, error=err)
+        for job in pleft:
+            self._evict_prefill(job, error=err)
+
+    def _run_loop(self):
         while True:
+            self.last_pass = time.time()
             with self.cv:
                 if not self.running:
                     break
@@ -492,18 +535,6 @@ class ContinuousDecodeLoop(threading.Thread):
                     self._evict(seq, error=e)
                 for seq in finished:        # slot freed before next admit
                     self._evict(seq)
-        # stopped: unblock anything still resident or queued
-        with self.cv:
-            leftovers = list(self.active) + list(self.waiting)
-            pleft = list(self.prefill_waiting)
-            self.active.clear()
-            self.waiting.clear()
-            self.prefill_waiting.clear()
-        for seq in leftovers:
-            self._evict(seq, error=RuntimeError("decode loop stopped"))
-        for job in pleft:
-            self._evict_prefill(job,
-                                error=RuntimeError("decode loop stopped"))
 
 
 class DecodeLoopMixin:

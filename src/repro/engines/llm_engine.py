@@ -175,6 +175,12 @@ class LLMEngine(DecodeLoopMixin):
         self._decode_loop: Optional[ContinuousDecodeLoop] = None
         self._pads: List[SeqState] = []   # reusable batch-padding states
         self.spec = None                  # SpeculativeDecoder (opt-in)
+        # fault tolerance: an attached FaultInjector (None = hooks are a
+        # single attribute read) and this replica's own health mark
+        # (escalated by loop death / injected crash; the pool's health
+        # view takes the worse of the two)
+        self.faults = None
+        self.health = "healthy"
         self._reset_batch_cache()
 
     def clone(self, idx: int = 1) -> "LLMEngine":
@@ -235,6 +241,8 @@ class LLMEngine(DecodeLoopMixin):
         c._decode_loop = None            # per-replica decode loop
         c._pads = []
         c.spec = None                    # re-attach per replica if wanted
+        c.faults = None                  # armed per replica (FaultInjector)
+        c.health = "healthy"
         c._reset_batch_cache()
         return c
 
@@ -566,6 +574,7 @@ class LLMEngine(DecodeLoopMixin):
         allocation happen under one lock hold, so admitted decodes'
         reservations cannot race in between). Waits unlocked so the
         decode loop keeps draining; caller must release the lock."""
+        self._fault("alloc")
         deadline = time.time() + self.ALLOC_TIMEOUT
         timed_out = False
         while True:
@@ -586,10 +595,30 @@ class LLMEngine(DecodeLoopMixin):
                 raise kvc.OutOfBlocks(
                     f"{self.name}: paged KV pool exhausted "
                     f"({self.alloc.capacity} blocks, "
-                    f"{self.alloc.free_blocks()} free, need {needed})")
+                    f"{self.alloc.free_blocks()} free, need {needed}); "
+                    f"{self._pool_diag()}")
             timed_out = not self.alloc.wait_for_free(
                 needed, timeout=deadline - time.time(),
                 reserved_fn=self._reserved_less_evictable)
+
+    def _pool_diag(self) -> str:
+        """Allocator diagnostics attached to exhaustion errors: what is
+        holding the pool — outstanding decode reservations, evictable
+        radix capacity, waiter count, resident sequences — so an
+        OutOfBlocks/ALLOC_TIMEOUT failure is actionable, not bare."""
+        with self._paged_lock:
+            reserved = sum(self._decode_reserved.values())
+        evictable = self.radix.evictable_blocks() \
+            if self.radix is not None else 0
+        return (f"diag: reserved={reserved} evictable_radix={evictable} "
+                f"waiters={self.alloc.waiters()} "
+                f"resident_seqs={len(self.states)}")
+
+    def _fault(self, point: str):
+        """Fault-injection hook: a single attribute read when unarmed."""
+        inj = self.faults
+        if inj is not None:
+            inj.fire(self, point)
 
     # -- batched execution -------------------------------------------------
     def _stack_states(self, states: List[SeqState]):
@@ -617,6 +646,7 @@ class LLMEngine(DecodeLoopMixin):
         returned per-sequence logits are EXACT: gathered at chunk index
         len(t)-1, so bucketed (right-padded) prefill matches unpadded
         prefill token-for-token."""
+        self._fault("prefill")
         t0 = time.time()
         B = _bucket(len(items), BUCKETS_B)
         S = _bucket(max(len(t) for _, t in items), BUCKETS_S)
@@ -808,6 +838,62 @@ class LLMEngine(DecodeLoopMixin):
                         on_text=on_text, on_done=on_done)
         return self.start_decode_loop().submit(seq)
 
+    def recover_decode(self, sid: str, text: str, max_new: int,
+                       failed=None, on_text=None, on_done=None) -> DecodeSeq:
+        """Token-identical replay of a sequence lost on a DEAD replica
+        (fault-tolerance path): re-prefill the prompt from the e-graph's
+        payload, teacher-force the tokens the dead replica already
+        emitted back into the KV cache, and resume greedy decode for the
+        remainder. Greedy argmax is deterministic given identical weights
+        and identical resident tokens, so the concatenation
+        ``emitted + continued`` matches a no-fault run token for token.
+
+        ``failed`` is the dead replica's DecodeSeq handle (its
+        ``.tokens`` are the emitted prefix; host objects survive replica
+        death) or None when nothing was emitted yet — e.g. the sequence's
+        affinity pointed at a replica that died before its first decode."""
+        emitted = [int(x) for x in getattr(failed, "tokens", [])] \
+            if failed is not None else []
+        self.release(sid)          # drop any stale local copy of the sid
+        st, toks, ptoks = self._prepare_prefill_task(
+            {"sid": sid, "text": text})
+        if toks:
+            self.meter.advance(sid, len(toks))
+            self.prefill_batch([(st, toks)])
+        if self.spec is not None:
+            self.spec.note_prefill(sid, ptoks, toks)
+        n = self._clamp_new(st, max_new)   # same clamp as a clean submit
+        emitted = emitted[:n]
+        if emitted:
+            # teacher-force the emitted prefix: feeding
+            # [p_prompt, e_1 .. e_{m-1}] recreates the exact pos /
+            # last_token the dead replica held after emitting e_m
+            feed = [st.last_token] + emitted[:-1]
+            self.meter.advance(sid, len(feed))
+            self.prefill_batch([(st, feed)])
+        seq = DecodeSeq(sid, st, n,
+                        text_fn=lambda s: self.tok.decode(s.tokens),
+                        on_text=on_text, on_done=on_done)
+        seq.tokens = list(emitted)
+        seq.steps = len(emitted)
+        if seq.steps >= seq.n:
+            # the dead replica had already finished decoding — only the
+            # completion callback was lost. Finish without the loop.
+            seq.result = self.tok.decode(seq.tokens)
+            seq.t_done = time.time()
+            seq.done.set()
+            if on_done is not None:
+                on_done(seq)
+            return seq
+        if self.paged and \
+                kvc.blocks_for(st.pos + (n - seq.steps), self.block_size) \
+                > self.alloc.capacity:
+            raise ValueError(
+                f"decode {sid}: recovery at pos {st.pos} + "
+                f"{n - seq.steps} new tokens can never fit the "
+                f"{self.alloc.capacity}-block pool")
+        return self.start_decode_loop().submit(seq)
+
     def submit_prefill(self, task: dict, on_done=None) -> PrefillJob:
         """Chunked-prefill admission into the continuous loop: the
         prompt is tokenized (and instruction-prefix forked) NOW on the
@@ -876,6 +962,7 @@ class LLMEngine(DecodeLoopMixin):
         held by a scheduler-side batch — is busy, the chunk is DECLINED:
         the job stays queued and the loop retries next pass. The decode
         loop must never sleep on prefill backpressure."""
+        self._fault("prefill")
         t0 = time.time()
         items = []                       # (job, chunk_token_list)
         if self.paged:
@@ -996,6 +1083,7 @@ class LLMEngine(DecodeLoopMixin):
         by a whole verified draft chunk per pass (the loop counts their
         emitted tokens); the rest — and everything, with it disabled —
         take the legacy single-token step."""
+        self._fault("decode")
         if self.spec is not None:
             return self.spec.decode_iteration(seqs)
         return self._decode_iteration_base(seqs)
@@ -1317,6 +1405,7 @@ class LLMEngine(DecodeLoopMixin):
         Returns the continuation PrefillJob when the handle carried a
         mid-flight prompt (completing it also completes the original
         job so source-side waiters unblock), else None."""
+        self._fault("migrate")
         src, sid, st = handle["engine"], handle["sid"], handle["state"]
         if src is self:
             # self-import: nothing moves; re-queue a detached job
@@ -1370,6 +1459,7 @@ class LLMEngine(DecodeLoopMixin):
         out loudly. Returns the reserved block list (each refcount 1);
         the paged lock is NOT held on return — allocated blocks cannot
         be taken by anyone else."""
+        self._fault("alloc")
         deadline = time.time() + self.ALLOC_TIMEOUT
         timed_out = False
         while True:
@@ -1383,7 +1473,8 @@ class LLMEngine(DecodeLoopMixin):
                 raise kvc.OutOfBlocks(
                     f"{self.name}: cannot reserve {n} blocks for an "
                     f"incoming migration ({self.alloc.capacity} blocks, "
-                    f"{self.alloc.free_blocks()} free)")
+                    f"{self.alloc.free_blocks()} free); "
+                    f"{self._pool_diag()}")
             timed_out = not self.alloc.wait_for_free(
                 n, timeout=deadline - time.time(),
                 reserved_fn=self._reserved_less_evictable)

@@ -141,6 +141,14 @@ class SimLLMEngine(DecodeLoopMixin):
                       "migrations_in": 0, "migrated_blocks": 0}
         self._stats_lock = threading.Lock()
         self._decode_loop = None
+        # fault tolerance: injector hook + replica health (see LLMEngine)
+        self.faults = None
+        self.health = "healthy"
+
+    def _fault(self, point: str):
+        inj = self.faults
+        if inj is not None:
+            inj.fire(self, point)
 
     def clone(self, idx: int = 1) -> "SimLLMEngine":
         """Pool replica: same latency profile and SHARED instruction-prefix
@@ -185,6 +193,7 @@ class SimLLMEngine(DecodeLoopMixin):
         ``migrate_blocks``) on the CALLER's thread — the scheduler pays
         it, the destination decode loop keeps iterating. Returns the
         continuation PrefillJob for a mid-flight prompt, else None."""
+        self._fault("migrate")
         src, sid = handle["engine"], handle["sid"]
         st = handle["state"]
         job = handle.get("job")
@@ -315,6 +324,7 @@ class SimLLMEngine(DecodeLoopMixin):
         return st, n
 
     def op_prefill(self, tasks):
+        self._fault("prefill")
         if self.chunked_prefill:
             # stream every prompt through the loop's prefill queue (the
             # scheduler thread blocks; co-resident decodes keep ticking)
@@ -361,6 +371,7 @@ class SimLLMEngine(DecodeLoopMixin):
             self.decode_iteration(seqs)
         if not pitems:
             return
+        self._fault("prefill")
         ntok = sum(n for _, n in pitems)
         dur = self.pf_setup + self.pf_tok * ntok * \
             (self.bf if len(pitems) > 1 else 1.0)
@@ -374,6 +385,7 @@ class SimLLMEngine(DecodeLoopMixin):
             self.stats["busy_ms"] += dur
 
     def op_decode(self, tasks, on_chunk=None):
+        self._fault("decode")
         n_max = max(int(t["max_new"]) for t in tasks)
         b = len(tasks)
         if self.speculative:
@@ -439,6 +451,48 @@ class SimLLMEngine(DecodeLoopMixin):
         seq.words = text.split()
         return self.start_decode_loop().submit(seq)
 
+    def recover_decode(self, sid: str, text: str, max_new: int,
+                       failed=None, on_text=None, on_done=None) -> DecodeSeq:
+        """Sim form of ``LLMEngine.recover_decode``: replay a sequence
+        lost on a dead replica. The replay prefill's modeled cost is
+        charged on the caller's thread (recovery latency is visible to
+        scheduler studies); the dead replica's fixed output words are
+        REUSED when its DecodeSeq handle survives — the sim's text
+        depends on submit-time state, so regenerating it here would not
+        be output-identical — and only the remaining words' decode time
+        is spent."""
+        max_new = int(max_new)
+        self.release(sid)
+        st, n = self._prefill_task_len({"sid": sid, "text": text})
+        dur = self.pf_setup + self.pf_tok * n
+        _sleep(dur)
+        with self._lock:
+            st["pos"] = st.get("pos", 0) + n + max_new
+            if failed is not None and getattr(failed, "words", None):
+                words = list(failed.words)
+            else:
+                words = _ptext(sid + str(st["pos"]), max_new).split()
+        with self._stats_lock:
+            self.stats["prefill_tokens"] += n
+            self.stats["calls"] += 1
+            self.stats["busy_ms"] += dur
+        seq = DecodeSeq(sid, st, max_new,
+                        text_fn=lambda s: " ".join(s.tokens),
+                        on_text=on_text, on_done=on_done)
+        seq.words = words
+        emitted = list(getattr(failed, "tokens", [])) if failed is not None \
+            else []
+        seq.tokens = emitted[:max_new]
+        seq.steps = len(seq.tokens)
+        if seq.steps >= seq.n:
+            seq.result = " ".join(seq.tokens)
+            seq.t_done = time.time()
+            seq.done.set()
+            if on_done is not None:
+                on_done(seq)
+            return seq
+        return self.start_decode_loop().submit(seq)
+
     def decode_iteration(self, seqs):
         """One modeled decode step for the resident batch: per-iteration
         latency depends on the CURRENT batch size (the iteration-level
@@ -447,6 +501,7 @@ class SimLLMEngine(DecodeLoopMixin):
         tokens per sequence (error-diffused to integers so long runs hit
         the mean exactly) — the loop advances each sequence by the
         emitted count, exactly like the real SpeculativeDecoder."""
+        self._fault("decode")
         b = len(seqs)
         emitted = 0
         if self.speculative:

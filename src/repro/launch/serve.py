@@ -39,6 +39,14 @@ sequence's paged KV blocks into a decode replica's pool
 into that replica's continuous loop — prefill/decode interference is
 removed entirely instead of time-sliced; outputs stay token-identical
 to unified serving.
+--fault-inject / --request-deadline / --max-retries enable the
+fault-tolerance layer (requires --continuous-batching): a seeded
+deterministic FaultInjector crashes/hangs/slows replicas at exact call
+indices, the pool tracks replica health (suspect/dead) via a watchdog,
+dead replicas' KV blocks are reclaimed, and in-flight sequences are
+replayed onto healthy replicas via evict-to-recompute — greedy decode
+makes the recovered output token-identical. Requests past the deadline
+fail with a structured error instead of hanging.
 """
 from __future__ import annotations
 
@@ -122,6 +130,21 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--decode-replicas", type=int, default=None,
                     help="decode-specialist replicas per LLM pool "
                          "(default 1; requires --disaggregate)")
+    ap.add_argument("--fault-inject", default=None, metavar="SPEC",
+                    help="deterministic fault schedule, comma-separated "
+                         "kind:engine:point:at[:duration] entries, e.g. "
+                         "crash:core_llm.r1:decode:3 — kinds: crash, "
+                         "hang, slow, migrate_fail, alloc_fail; implies "
+                         "fault tolerance (requires --continuous-"
+                         "batching)")
+    ap.add_argument("--request-deadline", type=float, default=None,
+                    metavar="SECONDS",
+                    help="per-request deadline: an in-flight request past "
+                         "it fails with a structured DeadlineExceeded "
+                         "instead of hanging (enables fault tolerance)")
+    ap.add_argument("--max-retries", type=int, default=None,
+                    help="recovery attempts per request before failing "
+                         "loudly (default 2; enables fault tolerance)")
     return ap
 
 
@@ -205,6 +228,29 @@ def validate_args(ap: argparse.ArgumentParser, args) -> None:
         if args.prefill_replicas is not None else 1
     args.decode_replicas = args.decode_replicas \
         if args.decode_replicas is not None else 1
+    ft_on = (args.fault_inject is not None
+             or args.request_deadline is not None
+             or args.max_retries is not None)
+    if ft_on:
+        if args.scheme != "Teola":
+            ap.error("fault-tolerance flags require --scheme Teola "
+                     "(recovery lives in the pooled two-tier scheduler)")
+        if not args.continuous_batching:
+            ap.error("fault-tolerance flags require --continuous-batching "
+                     "(recovery replays sequences through the persistent "
+                     "decode loops)")
+        if args.request_deadline is not None and args.request_deadline <= 0:
+            ap.error(f"--request-deadline must be > 0, got "
+                     f"{args.request_deadline}")
+        if args.max_retries is not None and args.max_retries < 0:
+            ap.error(f"--max-retries must be >= 0, got {args.max_retries}")
+        if args.fault_inject is not None:
+            from repro.serving.faults import FaultInjector
+            try:
+                FaultInjector.parse(args.fault_inject)
+            except ValueError as e:
+                ap.error(f"--fault-inject: {e}")
+    args.fault_tolerance_on = ft_on
 
 
 def main():
@@ -246,11 +292,24 @@ def main():
                 draft="lite_llm" if args.spec_drafter == "lite_llm"
                 else None,
                 k=args.draft_k)
+    ft = None
+    injector = None
+    if args.fault_tolerance_on:
+        from repro.serving.faults import FaultInjector, FTConfig
+        ft = FTConfig(
+            max_retries=args.max_retries if args.max_retries is not None
+            else 2,
+            request_deadline=args.request_deadline)
+        if args.fault_inject is not None:
+            injector = FaultInjector.parse(args.fault_inject, seed=0)
+            armed = injector.arm(engines)
+            print(f"[serve] fault injector armed on {armed}")
     app = ALL_APPS[args.app](engines)
     cls, policy = SCHEMES[args.scheme]
     if cls is Teola:
         orch = cls(app, engines, policy=policy, streaming=args.streaming,
-                   continuous_batching=args.continuous_batching)
+                   continuous_batching=args.continuous_batching,
+                   fault_tolerance=ft)
     else:
         orch = cls(app, engines, policy=policy)
 
@@ -270,9 +329,19 @@ def main():
         c.done.wait(600)
     wall = time.time() - t0
     lats = [c.latency for c in ctxs if c.t_done]
+    errs = [c for c in ctxs if c.error is not None]
     print(f"[serve] {len(lats)}/{args.queries} queries in {wall:.1f}s; "
           f"avg latency {np.mean(lats) * 1000:.0f}ms "
-          f"p90 {np.percentile(lats, 90) * 1000:.0f}ms")
+          f"p90 {np.percentile(lats, 90) * 1000:.0f}ms"
+          + (f"; {len(errs)} failed" if errs else ""))
+    if ft is not None:
+        for s in orch.runtime.scheds.values():
+            mgr = getattr(s, "ftmgr", None)
+            if mgr is not None and mgr.events:
+                print(f"[serve] recovery events ({s.pool.name}): "
+                      f"{mgr.events}")
+    if injector is not None and injector.log:
+        print(f"[serve] injected faults: {injector.log}")
     orch.shutdown()
 
 

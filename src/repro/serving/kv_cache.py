@@ -154,6 +154,7 @@ class BlockAllocator:
         self._refs = [0] * num_blocks
         self._free = list(range(num_blocks - 1, 0, -1))   # pop() -> low ids
         self._cv = threading.Condition()
+        self._waiters = 0
 
     @property
     def capacity(self) -> int:
@@ -214,20 +215,50 @@ class BlockAllocator:
         with self._cv:
             return self.capacity - len(self._free)
 
+    def waiters(self) -> int:
+        """Threads currently blocked in ``wait_for_free`` (diagnostics)."""
+        with self._cv:
+            return self._waiters
+
+    def snapshot(self) -> dict:
+        """Point-in-time allocator state for diagnostics messages."""
+        with self._cv:
+            return {"capacity": self.capacity,
+                    "free": len(self._free),
+                    "used": self.capacity - len(self._free),
+                    "waiters": self._waiters}
+
+    def audit(self) -> dict:
+        """Conservation check: every block is either free (ref 0) or
+        referenced; free-list and refcount array must agree exactly.
+        Returns {"ok", "leaked", "free", "capacity", "bad_free"}."""
+        with self._cv:
+            free_set = set(self._free)
+            bad_free = [b for b in free_set if self._refs[b] != 0]
+            leaked = [b for b in range(1, self.num_blocks)
+                      if self._refs[b] == 0 and b not in free_set]
+            return {"ok": not bad_free and not leaked,
+                    "leaked": len(leaked), "bad_free": len(bad_free),
+                    "free": len(self._free), "capacity": self.capacity}
+
     def wait_for_free(self, n: int, timeout: float = 30.0,
                       reserved_fn=None) -> bool:
         """Block until ``n`` blocks are free beyond ``reserved_fn()``
         (blocks promised to admitted decodes). Returns False on timeout."""
         deadline = time.time() + timeout
         with self._cv:
-            while True:
-                reserved = reserved_fn() if reserved_fn else 0
-                if len(self._free) - reserved >= n:
-                    return True
-                remaining = deadline - time.time()
-                if remaining <= 0:
-                    return False
-                self._cv.wait(timeout=remaining)
+            self._waiters += 1
+            try:
+                while True:
+                    reserved = reserved_fn() if reserved_fn else 0
+                    if len(self._free) - reserved >= n:
+                        return True
+                    remaining = deadline - time.time()
+                    if remaining <= 0:
+                        return False
+                    self._cv.wait(timeout=remaining)
+            finally:
+                self._waiters -= 1
 
 
 def blocks_for(pos_end: int, block_size: int) -> int:
@@ -346,6 +377,23 @@ class RadixPrefixCache:
         with self._lock:
             return sum(1 for b in self._blocks
                        if self.alloc.refcount(b) == 1)
+
+    def clear(self) -> int:
+        """Drop EVERY cached reference and reset the tree (dead-replica
+        reclamation). Returns the number of references released. Blocks
+        still shared with live sequences survive until those release."""
+        with self._lock:
+            n, stack = 0, [self._root]
+            while stack:
+                node = stack.pop()
+                stack.extend(node.children.values())
+                for b in node.blocks:
+                    self.alloc.decref(b)
+                    n += 1
+            self._root = _RadixNode((), [], None)
+            self._blocks = []               # rebind, no mutate
+            self.stats["evicted_blocks"] += n
+            return n
 
     # -- match --------------------------------------------------------------
     def _match_locked(self, tokens, touch: bool):
@@ -502,6 +550,61 @@ class RadixPrefixCache:
             blocks.extend(n.blocks)
             stack.extend(n.children.values())
         self._blocks = blocks                # rebind, no mutate
+
+
+def reclaim_replica(engine, lock_timeout: float = 2.0) -> dict:
+    """Release every sequence, cached prefix and decode reservation of a
+    DEAD replica and audit its allocator for leaks (free-list / refcount
+    conservation). Works on real and sim engines (sim has no allocator;
+    only the sequence table is dropped).
+
+    A replica that died while HUNG may hold its paged pool lock forever;
+    rather than deadlocking the recovery path, its blocks are written
+    off (``written_off=True``) — the pool is per-replica, so the leak is
+    contained to memory the dead replica owned anyway."""
+    report = {"engine": getattr(engine, "name", "?"), "released": 0,
+              "radix_refs": 0, "prefix_refs": 0, "leaked": -1,
+              "ok": True, "written_off": False}
+    paged = bool(getattr(engine, "paged", False))
+    plock = getattr(engine, "_paged_lock", None)
+    if paged and plock is not None:
+        # probe only: if a hung thread holds the pool lock, releasing
+        # block tables would block forever — write the pool off instead.
+        # (release() takes engine._lock before _paged_lock; holding the
+        # paged lock across release() here would invert that order.)
+        if not plock.acquire(timeout=lock_timeout):
+            report["written_off"] = True
+            report["ok"] = False
+            return report
+        plock.release()
+    for sid in list(getattr(engine, "states", {})):
+        try:
+            engine.release(sid)
+            report["released"] += 1
+        except Exception:  # noqa: BLE001 — reclaim everything we can
+            pass
+    radix = getattr(engine, "radix", None)
+    if radix is not None:
+        report["radix_refs"] = radix.clear()
+    pc = getattr(engine, "prefix_cache", None)
+    alloc = getattr(engine, "alloc", None)
+    if paged and isinstance(pc, dict) and alloc is not None:
+        for st in pc.values():
+            for b in getattr(st, "table", []) or []:
+                alloc.decref(b)
+                report["prefix_refs"] += 1
+        pc.clear()
+    resv = getattr(engine, "_decode_reserved", None)
+    if resv is not None:
+        resv.clear()
+    if paged and alloc is not None:
+        audit = alloc.audit()
+        report["leaked"] = alloc.capacity - alloc.free_blocks()
+        report["ok"] = audit["ok"] and report["leaked"] == 0
+        alloc.notify_waiters()
+    else:
+        report["leaked"] = 0
+    return report
 
 
 def _paged_elem_shape(cfg: ModelConfig, spec: LayerSpec, repeat: int,

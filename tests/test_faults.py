@@ -1,0 +1,611 @@
+"""Fault-tolerant serving: deterministic fault injection, replica health
+tracking and routing exclusion, dead-replica block reclamation (refcount
+audited), token-identical request recovery via evict-to-recompute, and
+structured deadline failures. Chaos property tests run seeded-random
+always and add a hypothesis pass when the library is installed."""
+import threading
+import time
+import types
+
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.engine_pool import (DisaggregatedEnginePool, EnginePool,
+                                    build_pools, replicas_of)
+from repro.core.teola import Teola
+from repro.engines.llm_engine import LLMEngine
+from repro.engines.sim_engines import SimLLMEngine, build_sim_engines
+from repro.serving import kv_cache as kvc
+from repro.serving.faults import (DeadlineExceeded, FaultInjector,
+                                  FaultSpec, FTConfig, MigrationFault,
+                                  ReplicaCrash, RequestError,
+                                  is_recoverable)
+from repro.training.data import doc_corpus
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # seeded-random tests still run
+    HAVE_HYPOTHESIS = False
+
+_CFG = get_config("tiny-lite-llm")
+Q = {"question": "what is fact 3 about optics", "docs": doc_corpus(2)}
+
+# fast-converging recovery knobs for tests (sim engines: passes are ms)
+_FT = dict(max_retries=3, backoff=0.01, suspect_after=0.4, dead_after=0.8,
+           watchdog_period=0.05)
+
+# real-engine knobs: heartbeat thresholds must exceed the worst-case
+# single decode pass (first pass JIT-compiles, which can take seconds) or
+# the watchdog false-positives a busy replica as hung
+_FT_REAL = dict(max_retries=3, backoff=0.05, suspect_after=20.0,
+                dead_after=45.0, watchdog_period=0.2)
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector: spec validation, parsing, determinism
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("explode", "e", "decode")
+    with pytest.raises(ValueError, match="unknown fault point"):
+        FaultSpec("crash", "e", "verify")
+    with pytest.raises(ValueError, match="1-based"):
+        FaultSpec("crash", "e", "decode", at=0)
+    with pytest.raises(ValueError, match="bad fault spec"):
+        FaultInjector.parse("crash:only_two_fields")
+
+
+def test_parse_roundtrip_and_defaults():
+    inj = FaultInjector.parse(
+        "crash:core_llm.r1:decode:3, slow:lite_llm:prefill:2:0.25,"
+        "hang:core_llm:alloc")
+    assert [(s.kind, s.engine, s.point, s.at) for s in inj.specs] == [
+        ("crash", "core_llm.r1", "decode", 3),
+        ("slow", "lite_llm", "prefill", 2),
+        ("hang", "core_llm", "alloc", 1)]
+    assert inj.specs[1].duration == 0.25
+
+
+def test_injector_fires_at_exact_call_index_and_is_persistent():
+    eng = types.SimpleNamespace(name="e0", health="healthy")
+    inj = FaultInjector([FaultSpec("crash", "e0", "decode", at=3)])
+    inj.fire(eng, "decode")
+    inj.fire(eng, "decode")
+    inj.fire(eng, "prefill")             # other points count separately
+    with pytest.raises(ReplicaCrash, match="injected crash at decode"):
+        inj.fire(eng, "decode")
+    assert eng.health == "dead"
+    assert inj.dead_replicas() == {"e0"}
+    # the crash is persistent: EVERY later call on the replica fails
+    with pytest.raises(ReplicaCrash, match="replica is dead"):
+        inj.fire(eng, "prefill")
+    assert inj.log == [("crash", "e0", "decode", 3)]
+
+
+def test_random_schedule_is_seed_deterministic():
+    names = ["a", "b", "c"]
+    s1 = FaultInjector.random_schedule(names, seed=7, n_faults=4).specs
+    s2 = FaultInjector.random_schedule(names, seed=7, n_faults=4).specs
+    s3 = FaultInjector.random_schedule(names, seed=8, n_faults=4).specs
+    assert s1 == s2
+    assert s1 != s3
+
+
+def test_arm_reaches_llm_replicas_only():
+    engines = build_sim_engines(llm_instances=2)
+    inj = FaultInjector()
+    armed = inj.arm(engines)
+    assert set(armed) == {"core_llm", "core_llm.r1",
+                          "lite_llm", "lite_llm.r1"}
+    for name in ("core_llm", "lite_llm"):
+        assert all(r.faults is inj for r in replicas_of(engines[name]))
+    assert getattr(engines["embedding"], "faults", None) is None
+
+
+def test_is_recoverable_classification():
+    assert is_recoverable(ReplicaCrash("x"))
+    assert is_recoverable(MigrationFault("x"))
+    assert is_recoverable(TimeoutError("x"))
+    assert is_recoverable(kvc.OutOfBlocks("full"))
+    assert is_recoverable(RuntimeError("decode loop died: boom"))
+    assert not is_recoverable(KeyError("bug"))
+    assert not is_recoverable(ValueError("bad shape"))
+
+
+# ---------------------------------------------------------------------------
+# EnginePool health tracking and routing exclusion
+
+def test_pool_health_marking_and_routing_exclusion():
+    pool = EnginePool.replicate(SimLLMEngine("llm"), 3, name="llm")
+    assert [pool.health(i) for i in range(3)] == ["healthy"] * 3
+    assert pool.least_loaded() == 0      # stable min, all healthy
+    assert pool.mark_dead(0, "crashed")
+    assert not pool.mark_dead(0, "again")        # only first transition
+    assert pool.health(0) == "dead"
+    assert pool.health_reason(0) == "crashed"
+    assert pool.least_loaded() == 1      # dead replica excluded
+    assert pool.least_loaded_decode() == 1
+    pool.mark_suspect(1, "slow heartbeat")
+    assert pool.health(1) == "suspect"
+    assert pool.least_loaded() == 2      # suspect demoted below healthy
+    pool.mark_healthy(1)
+    assert pool.health(1) == "healthy"
+    assert pool.least_loaded() == 1
+
+
+def test_pool_health_merges_engine_attribute():
+    """An injected crash sets engine.health directly; the pool view must
+    reflect it without an explicit mark_dead call."""
+    pool = EnginePool.replicate(SimLLMEngine("llm"), 2, name="llm")
+    pool[1].health = "dead"
+    assert pool.health(1) == "dead"
+    assert pool.healthy_indices() == [0]
+
+
+def test_all_dead_pool_falls_back_instead_of_crashing():
+    pool = EnginePool.replicate(SimLLMEngine("llm"), 2, name="llm")
+    pool.mark_dead(0), pool.mark_dead(1)
+    # routing still returns an index (callers surface the error on use)
+    assert pool.least_loaded() in (0, 1)
+
+
+def test_suspect_does_not_break_affinity_or_capacity_keys():
+    """Suspect demotion is a leading sort key: with every replica
+    healthy the routing order is byte-identical to the pre-health pool."""
+    pool = EnginePool.replicate(
+        SimLLMEngine("llm", decode_ms_per_step=5.0), 2, name="llm")
+    pool.note_queued(0, 500)
+    assert pool.least_loaded() == 1      # load still decides
+
+
+def test_disagg_routing_demotes_to_colocated_when_role_dies():
+    reps = [SimLLMEngine(f"r{i}", paged=True, num_blocks=16)
+            for i in range(2)]
+    pool = DisaggregatedEnginePool(reps, n_prefill=1, name="core")
+    assert list(pool.route_prefill_indices()) == [0]
+    assert list(pool.route_decode_indices()) == [1]
+    assert not pool.degraded()
+    pool.mark_dead(1, "decode replica crashed")
+    # the whole decode role is gone: decodes demote onto the prefill side
+    assert list(pool.route_decode_indices()) == [0]
+    assert pool.degraded()
+    pool.mark_dead(0, "everything is on fire")
+    # all dead: fall back to the static partition (callers fail on use)
+    assert list(pool.route_decode_indices()) == [1]
+
+
+# ---------------------------------------------------------------------------
+# Satellite: OutOfBlocks carries allocator diagnostics
+
+def test_out_of_blocks_message_carries_allocator_diagnostics():
+    text = " ".join(f"w{i}" for i in range(20))
+    probe = LLMEngine("pr", _CFG, max_len=128, seed=0, paged=True,
+                      block_size=8)
+    probe.op_prefill([{"sid": "bg", "text": text}])
+    nb = len(probe.states["bg"].table)
+    eng = LLMEngine("d", _CFG, max_len=128, seed=0, paged=True,
+                    block_size=8, num_blocks=nb + 1)  # capacity == nb
+    eng.ALLOC_TIMEOUT = 0.1
+    eng.op_prefill([{"sid": "bg", "text": text}])     # fills the pool
+    with pytest.raises(kvc.OutOfBlocks) as e:
+        eng.op_prefill([{"sid": "s2", "text": " ".join(
+            f"v{i}" for i in range(20))}])
+    msg = str(e.value)
+    for frag in ("diag:", "reserved=", "evictable_radix=", "waiters=",
+                 "resident_seqs="):
+        assert frag in msg, f"missing {frag!r} in {msg!r}"
+
+
+def test_allocator_snapshot_audit_and_waiter_count():
+    a = kvc.BlockAllocator(8)
+    held = kvc.reserve_blocks(a, 3)
+    snap = a.snapshot()
+    assert snap["capacity"] == 7 and snap["used"] == 3
+    assert a.audit()["ok"]
+    # exhaust the pool so the waiter actually blocks
+    rest = kvc.reserve_blocks(a, a.free_blocks())
+    t = threading.Thread(target=lambda: a.wait_for_free(1, timeout=0.3))
+    t.start()
+    time.sleep(0.1)
+    assert a.waiters() == 1
+    t.join()
+    assert a.waiters() == 0              # decremented on timeout too
+    for b in held + rest:
+        a.decref(b)
+    assert a.audit() == {"ok": True, "leaked": 0, "bad_free": 0,
+                         "free": 7, "capacity": 7}
+
+
+# ---------------------------------------------------------------------------
+# Satellite: decode-loop death surfaces the first exception + marks health
+
+def test_injected_crash_mid_decode_fails_sequence_and_marks_dead():
+    eng = SimLLMEngine("llm", max_batch=2)
+    eng.faults = FaultInjector([FaultSpec("crash", "llm", "decode", at=2)])
+    seq = eng.submit_decode("s", 6)
+    with pytest.raises(ReplicaCrash, match="injected crash"):
+        seq.wait(60)
+    assert eng.health == "dead"
+    assert is_recoverable(seq.error)
+    eng.stop_decode_loop()
+
+
+def test_loop_thread_death_is_captured_not_swallowed():
+    """Satellite bugfix: an exception in the loop INFRASTRUCTURE (outside
+    the per-iteration engine call) must surface to every waiter as a
+    'decode loop died' error with the original cause attached, and mark
+    the owning engine suspect — not vanish with the thread."""
+    eng = SimLLMEngine("llm", max_batch=2,
+                       decode_ms_per_step=50.0)
+    loop = eng.start_decode_loop()
+
+    def boom(batch):
+        raise KeyError("loop bookkeeping bug")
+
+    loop._decode_cost = boom
+    seq = eng.submit_decode("s", 4)
+    with pytest.raises(RuntimeError, match="decode loop died"):
+        seq.wait(60)
+    assert isinstance(seq.error.__cause__, KeyError)
+    assert isinstance(loop.fatal_error, KeyError)
+    assert eng.health == "suspect"
+
+
+def test_decode_loop_heartbeat_advances():
+    eng = SimLLMEngine("llm")
+    seq = eng.submit_decode("s", 3)
+    t0 = eng._decode_loop.last_pass
+    assert seq.wait(60)
+    assert eng._decode_loop.last_pass >= t0
+    eng.stop_decode_loop()
+
+
+# ---------------------------------------------------------------------------
+# reclaim_replica: dead-replica block reclamation with refcount audit
+
+def _paged_engine(**kw):
+    kw.setdefault("num_blocks", 32)
+    return LLMEngine("p", _CFG, max_len=256, seed=0, paged=True,
+                     block_size=8, **kw)
+
+
+def test_reclaim_replica_returns_all_blocks_and_audits_clean():
+    eng = _paged_engine(prefix_cache="radix")
+    text = " ".join(f"w{i}" for i in range(16))
+    eng.op_prefill([{"sid": "s0", "text": text + " alpha"},
+                    {"sid": "s1", "text": text + " beta"}])
+    assert eng.alloc.used_blocks() > 0
+    assert eng.radix.num_blocks() > 0    # tree co-owns prefix blocks
+    report = kvc.reclaim_replica(eng)
+    assert report["ok"] and not report["written_off"]
+    assert report["leaked"] == 0
+    assert report["released"] == 2       # both resident sequences
+    assert report["radix_refs"] > 0
+    assert eng.alloc.free_blocks() == eng.alloc.capacity
+    assert eng.alloc.audit()["ok"]
+    assert eng.states == {} and eng.radix.num_blocks() == 0
+
+
+def test_reclaim_replica_writes_off_when_lock_is_hung():
+    eng = _paged_engine()
+    eng.op_prefill([{"sid": "s", "text": "a few words here"}])
+    grabbed, done = threading.Event(), threading.Event()
+
+    def wedge():                         # RLock: must hang from another thread
+        with eng._paged_lock:
+            grabbed.set()
+            done.wait(5)
+
+    t = threading.Thread(target=wedge, daemon=True)
+    t.start()
+    assert grabbed.wait(5)
+    try:
+        report = kvc.reclaim_replica(eng, lock_timeout=0.1)
+    finally:
+        done.set()
+        t.join(5)
+    assert report["written_off"] and not report["ok"]
+    assert "s" in eng.states             # nothing touched after write-off
+
+
+def test_recovery_manager_marks_dead_once_and_reclaims():
+    pool = EnginePool.replicate(
+        SimLLMEngine("llm", paged=True, num_blocks=32), 2, name="llm")
+    sched = types.SimpleNamespace(pool=pool, affinity={},
+                                  _aff_lock=threading.Lock())
+    from repro.serving.faults import RecoveryManager
+    mgr = RecoveryManager(sched, FTConfig(**_FT))
+    mgr.note_failure(1, ReplicaCrash("boom"))
+    assert pool.health(1) == "dead"
+    assert len(mgr.reclaim_reports) == 1
+    mgr.note_failure(1, ReplicaCrash("boom again"))       # no double reclaim
+    assert len(mgr.reclaim_reports) == 1
+    # capacity errors do NOT mark health: the replica is healthy-but-full
+    mgr.note_failure(0, kvc.OutOfBlocks("full"))
+    assert pool.health(0) == "healthy"
+    mgr.note_failure(0, RuntimeError("some bug"))
+    assert pool.health(0) == "suspect"
+    assert mgr.pick_replica(exclude={1}) == 0     # suspect beats dead
+    mgr.stop()
+
+
+# ---------------------------------------------------------------------------
+# recover_decode: token-identical evict-to-recompute replay
+
+def test_recover_decode_token_identical_real_engine():
+    text = "alpha beta gamma delta epsilon zeta"
+    a = _paged_engine()
+    a.op_prefill([{"sid": "s", "text": text}])
+    ref = a.submit_decode("s", 8)
+    assert ref.wait(120)
+    a.stop_decode_loop()
+
+    for cut in (0, 3, 8):                # nothing / mid-flight / finished
+        b = a.clone(1)
+        failed = types.SimpleNamespace(tokens=ref.tokens[:cut])
+        sq = b.recover_decode("s", text, 8, failed)
+        assert sq.wait(120), f"recovery at cut={cut} timed out"
+        assert sq.result == ref.result, f"divergence at cut={cut}"
+        assert sq.tokens == ref.tokens
+        b.stop_decode_loop()
+
+
+def test_recover_decode_without_failed_handle():
+    """Affinity pointed at a replica that died before emitting anything:
+    replay is just prefill + full decode."""
+    text = "one two three four five"
+    a = _paged_engine()
+    a.op_prefill([{"sid": "s", "text": text}])
+    ref = a.submit_decode("s", 6)
+    assert ref.wait(120)
+    a.stop_decode_loop()
+    b = a.clone(1)
+    sq = b.recover_decode("s", text, 6, None)
+    assert sq.wait(120) and sq.result == ref.result
+    b.stop_decode_loop()
+
+
+def test_migration_fault_leaves_source_intact_and_is_retryable():
+    pe = _paged_engine()
+    de = pe.clone(1)
+    pe.op_prefill([{"sid": "s", "text": "some words to migrate over"}])
+    nb = pe.alloc.used_blocks()
+    de.faults = FaultInjector([FaultSpec("migrate_fail", "p.r1",
+                                         "migrate", at=1)])
+    with pytest.raises(MigrationFault):
+        de.import_seq(pe.export_seq("s"))
+    assert "s" in pe.states and pe.alloc.used_blocks() == nb
+    assert de.alloc.used_blocks() == 0
+    # the fault was one-shot: the retry lands the same handle
+    assert de.import_seq(pe.export_seq("s")) is None
+    assert de.alloc.used_blocks() == nb and "s" not in pe.states
+
+
+# ---------------------------------------------------------------------------
+# End-to-end recovery through Teola (sim engines)
+
+def _sim_orch(injector=None, llm_instances=2, ft=None, **cfg):
+    engines = build_sim_engines(llm_instances=llm_instances,
+                                paged_kv=True, **cfg)
+    if injector is not None:
+        injector.arm(engines)
+    from repro.core.apps import naive_rag
+    orch = Teola(naive_rag(engines), engines, continuous_batching=True,
+                 fault_tolerance=ft)
+    return orch, engines
+
+
+def _ftmgr(orch, name="core_llm"):
+    return orch.runtime.scheds[name].ftmgr
+
+
+def test_e2e_sim_crash_recovery_completes_query():
+    inj = FaultInjector([FaultSpec("crash", "core_llm", "decode", at=1)])
+    orch, engines = _sim_orch(inj, ft=FTConfig(**_FT))
+    try:
+        out, ctx = orch.query(dict(Q), timeout=120)
+        assert ctx.error is None and out
+        assert inj.log and inj.log[0][0] == "crash"
+        mgr = _ftmgr(orch)
+        kinds = [e[0] for e in mgr.events]
+        assert "replica_dead" in kinds and "retry" in kinds
+        assert engines["core_llm"].health(0) == "dead"
+        # a second query routes around the dead replica
+        out2, ctx2 = orch.query(dict(Q), timeout=120)
+        assert ctx2.error is None and out2
+    finally:
+        orch.shutdown()
+
+
+def test_e2e_sim_hang_detected_by_watchdog_and_recovered():
+    inj = FaultInjector([FaultSpec("hang", "core_llm", "decode", at=1,
+                                   duration=3.0)])
+    orch, _ = _sim_orch(inj, ft=FTConfig(**_FT))
+    try:
+        out, ctx = orch.query(dict(Q), timeout=120)
+        assert ctx.error is None and out
+        mgr = _ftmgr(orch)
+        assert any(e[0] == "replica_dead" and "heartbeat" in e[2]
+                   for e in mgr.events), mgr.events
+    finally:
+        orch.shutdown()
+
+
+def test_e2e_deadline_fails_structurally_instead_of_hanging():
+    # hang BOTH replicas: load-aware routing may put every decode of the
+    # query on either one, and an unhung replica would finish in time
+    inj = FaultInjector([FaultSpec("hang", "core_llm", "decode", at=1,
+                                   duration=6.0),
+                         FaultSpec("hang", "core_llm.r1", "decode", at=1,
+                                   duration=6.0)])
+    ft = FTConfig(max_retries=0, request_deadline=0.6,
+                  # hang detection slower than the deadline: the request
+                  # must die on ITS clock, not on replica recovery
+                  suspect_after=30.0, dead_after=60.0,
+                  watchdog_period=0.05)
+    orch, _ = _sim_orch(inj, ft=ft)
+    t0 = time.time()
+    try:
+        with pytest.raises(DeadlineExceeded) as e:
+            orch.query(dict(Q), timeout=60)
+        assert time.time() - t0 < 30     # failed loudly, no hang
+        assert e.value.reason == "deadline"
+        assert e.value.qid and e.value.sid
+        assert any(ev[0] == "deadline" for ev in _ftmgr(orch).events)
+    finally:
+        orch.shutdown()
+
+
+def test_e2e_unrecoverable_error_fails_with_structured_error():
+    """max_retries=0 turns the first crash into a loud RequestError with
+    full context, not a bare thread exception."""
+    # crash BOTH replicas: load-aware routing may put the query's decodes
+    # on either one, and the uncrashed replica would serve them cleanly
+    inj = FaultInjector([FaultSpec("crash", "core_llm", "decode", at=1),
+                         FaultSpec("crash", "core_llm.r1", "decode", at=1)])
+    orch, _ = _sim_orch(inj, ft=FTConfig(
+        max_retries=0, backoff=0.01, watchdog_period=0.05))
+    try:
+        with pytest.raises(RequestError) as e:
+            orch.query(dict(Q), timeout=120)
+        assert e.value.qid.startswith("q")
+        assert e.value.replica.startswith("core_llm")
+    finally:
+        orch.shutdown()
+
+
+def test_ft_flag_off_keeps_scheduler_paths_identical():
+    orch, _ = _sim_orch(None, ft=None)
+    try:
+        assert _ftmgr(orch) is None
+        out, ctx = orch.query(dict(Q), timeout=120)
+        assert ctx.error is None and out
+    finally:
+        orch.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Chaos property tests: seeded random schedules; every query either
+# completes or fails with a structured error, and no replica leaks blocks.
+
+def _chaos_trial(seed: int):
+    names = ["core_llm", "core_llm.r1", "lite_llm", "lite_llm.r1"]
+    inj = FaultInjector.random_schedule(
+        names, seed=seed, n_faults=2, kinds=("crash", "slow"),
+        points=("decode", "prefill"), max_at=4)
+    orch, engines = _sim_orch(inj, ft=FTConfig(**_FT))
+    try:
+        ctxs = [orch.submit(dict(Q)) for _ in range(3)]
+        for c in ctxs:
+            assert c.done.wait(120), f"seed {seed}: query hung"
+            if c.error is not None:
+                assert isinstance(c.error, RequestError), \
+                    f"seed {seed}: unstructured {c.error!r}"
+        # block conservation on every replica that is still alive;
+        # reclaimed (dead) replicas were audited by reclaim_replica
+        for name in ("core_llm", "lite_llm"):
+            mgr = _ftmgr(orch, name)
+            for rep in mgr.reclaim_reports:
+                assert rep.get("written_off") or rep.get("leaked") == 0, rep
+            pool = engines[name]
+            for i in range(len(pool)):
+                alloc = getattr(pool[i], "alloc", None)
+                if alloc is not None and pool.health(i) != "dead":
+                    assert alloc.audit()["bad_free"] == 0
+    finally:
+        orch.shutdown()
+
+
+@pytest.mark.parametrize("seed", [11, 23, 47])
+def test_chaos_seeded_random_schedules(seed):
+    _chaos_trial(seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=4, deadline=None)
+    @given(seed=hst.integers(0, 10_000))
+    def test_chaos_hypothesis_schedules(seed):
+        _chaos_trial(seed)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: real engines, 4 replicas, kill one mid-decode — every
+# request completes token-identical to the no-fault baseline and no
+# paged blocks leak.
+
+def _real_pool_run(injector, ft):
+    from repro.core.apps import build_engines, naive_rag
+    engines = build_engines(paged_kv=True)
+    engines = build_pools(engines, {"core_llm": 4})
+    if injector is not None:
+        injector.arm(engines)
+    orch = Teola(naive_rag(engines), engines, continuous_batching=True,
+                 fault_tolerance=ft)
+    try:
+        out, ctx = orch.query(dict(Q), timeout=600)
+        assert ctx.error is None
+        return out, engines, orch
+    finally:
+        orch.shutdown()
+
+
+def test_real_engine_replica_kill_is_token_identical():
+    baseline, _, _ = _real_pool_run(None, None)
+    inj = FaultInjector([FaultSpec("crash", "core_llm", "decode", at=2)])
+    out, engines, orch = _real_pool_run(inj, FTConfig(**_FT_REAL))
+    assert inj.log, "fault never fired (routing changed?)"
+    assert out == baseline               # token-identical recovery
+    pool = engines["core_llm"]
+    assert pool.health(0) == "dead"
+    mgr = orch.runtime.scheds["core_llm"].ftmgr
+    assert any(e[0] == "retry" for e in mgr.events), mgr.events
+    for rep in mgr.reclaim_reports:
+        assert rep["leaked"] == 0 and rep["ok"], rep
+    for i in range(len(pool)):
+        if pool.health(i) != "dead":
+            assert pool[i].alloc.audit()["ok"]
+            assert pool[i].alloc.free_blocks() == pool[i].alloc.capacity
+
+
+# ---------------------------------------------------------------------------
+# serve.py flag validation (table-driven, like the disagg suite)
+
+def _validate(argv):
+    from repro.launch.serve import build_parser, validate_args
+    ap = build_parser()
+    args = ap.parse_args(argv)
+    validate_args(ap, args)
+    return args
+
+
+@pytest.mark.parametrize("argv,msg", [
+    (["--fault-inject", "crash:core_llm:decode:1"],
+     "--continuous-batching"),
+    (["--request-deadline", "5"], "--continuous-batching"),
+    (["--max-retries", "3"], "--continuous-batching"),
+    (["--continuous-batching", "--fault-inject", "x"], "bad fault spec"),
+    (["--continuous-batching", "--fault-inject",
+      "explode:core_llm:decode:1"], "unknown fault kind"),
+    (["--continuous-batching", "--request-deadline", "0"],
+     "--request-deadline must be > 0"),
+    (["--continuous-batching", "--max-retries", "-1"],
+     "--max-retries must be >= 0"),
+    (["--continuous-batching", "--scheme", "LlamaDist-TO",
+      "--max-retries", "1"], "--scheme Teola"),
+])
+def test_serve_rejects_bad_fault_flags(argv, msg, capsys):
+    with pytest.raises(SystemExit) as e:
+        _validate(argv)
+    assert e.value.code == 2
+    assert msg in capsys.readouterr().err
+
+
+def test_serve_accepts_fault_flags():
+    args = _validate(["--continuous-batching", "--fault-inject",
+                      "crash:core_llm.r1:decode:3", "--request-deadline",
+                      "10", "--max-retries", "1"])
+    assert args.fault_tolerance_on
+    args = _validate([])
+    assert not args.fault_tolerance_on   # plain serve untouched
