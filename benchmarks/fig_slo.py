@@ -1,0 +1,204 @@
+"""SLO-aware multi-tenant scheduling (serving/slo.py), emitting
+BENCH_slo.json.
+
+A slot-constrained sim engine serves a MIXED load: a batch tenant
+floods long throughput-bound decodes at t=0, then an interactive tenant
+trickles in short TTFT-bound requests while every decode slot is
+occupied.  Two runs:
+
+  slo_off   the pre-existing FIFO continuous loop — interactive
+            requests queue behind the whole batch flood.
+  slo_on    the SLO policy armed: priority admission ranks interactive
+            first, per-tenant fair share bounds the batch tenant's slot
+            hold, and paged preemption (evict-to-recompute) frees a
+            slot the moment an urgent waiter is deferred.
+
+Reported per class: TTFT / end-to-end percentiles and batch token
+throughput.  A second REAL-engine study proves the preemption path's
+correctness contract end to end: a preempted-and-resumed decode is
+token-identical to an uninterrupted baseline (dense AND paged) and the
+paged block pool audits clean after release.  Acceptance: interactive
+p99 TTFT improves >= 2x under slo_on, batch throughput stays within
+10%, preemptions actually fired, zero leaked blocks, token identity
+holds.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.engines.sim_engines import SimLLMEngine
+from repro.serving.slo import attach_slo, derive_tag
+
+N_BATCH = 8            # batch-tenant flood, long decodes
+BATCH_TOKENS = 160
+N_INTER = 8            # interactive trickle, short decodes
+INTER_TOKENS = 4
+INTER_GAP_S = 0.03
+MAX_BATCH = 4          # decode slots — flood saturates them twice over
+
+
+def _percentiles(xs):
+    if not xs:
+        return {"p50_ms": 0.0, "p99_ms": 0.0}
+    return {"p50_ms": round(float(np.percentile(xs, 50)) * 1e3, 1),
+            "p99_ms": round(float(np.percentile(xs, 99)) * 1e3, 1)}
+
+
+def _run_sim(slo_on: bool):
+    eng = SimLLMEngine("llm", max_batch=MAX_BATCH,
+                       decode_ms_per_step=8.0)
+    if slo_on:
+        attach_slo({"llm": eng}, aging_s=5.0, preempt_cooldown_s=0.1)
+    t0 = time.time()
+    ttft = {}
+
+    def _first_text(sid):
+        def cb(_chunk):
+            ttft.setdefault(sid, time.time())
+        return cb
+
+    batch = []
+    for i in range(N_BATCH):
+        sid = f"b{i}"
+        tag = derive_tag(slo="batch", tenant="tb")
+        batch.append((sid, time.time(), eng.submit_decode(
+            sid, BATCH_TOKENS, on_text=_first_text(sid), slo=tag)))
+    time.sleep(0.1)                      # let the flood occupy the slots
+    inter = []
+    for i in range(N_INTER):
+        sid = f"i{i}"
+        tag = derive_tag(slo="interactive", tenant="ti")
+        inter.append((sid, time.time(), eng.submit_decode(
+            sid, INTER_TOKENS, on_text=_first_text(sid), slo=tag)))
+        time.sleep(INTER_GAP_S)
+    for _sid, _ts, sq in inter + batch:
+        sq.wait(300)
+    batch_wall = max(sq.t_done for _s, _t, sq in batch) - t0
+    i_ttft = [ttft[sid] - ts for sid, ts, _sq in inter]
+    i_e2e = [sq.t_done - ts for _sid, ts, sq in inter]
+    loop = eng._decode_loop
+    row = {
+        "interactive_ttft": _percentiles(i_ttft),
+        "interactive_e2e": _percentiles(i_e2e),
+        "batch_tput_tok_s": round(N_BATCH * BATCH_TOKENS / batch_wall, 1),
+        "batch_wall_s": round(batch_wall, 3),
+        "preemptions": len(loop.preemptions),
+        "tenant_stats": eng.tenant_stats(),
+    }
+    # correctness even in the sim: every decode returned its full text
+    for _sid, _ts, sq in inter + batch:
+        assert sq.result == " ".join(sq.words), "sim decode corrupted"
+    eng.stop_decode_loop()
+    return row
+
+
+# ---------------------------------------------------------------------------
+# real-engine study: preempt -> resume token identity + block-pool audit
+
+def _run_real(paged: bool):
+    from repro.configs.base import get_config
+    from repro.engines.decode_loop import DecodeSeq
+    from repro.engines.llm_engine import LLMEngine
+    cfg = get_config("tiny-lite-llm")
+    kw = dict(max_len=128, seed=0, max_batch=4)
+    if paged:
+        kw.update(paged=True, block_size=8, num_blocks=64)
+
+    def fresh():
+        eng = LLMEngine("t", cfg, **kw)
+        attach_slo({"llm": eng}, preempt_cooldown_s=0.0)
+        eng.op_prefill([{"sid": "s",
+                         "text": "benchmark prompt about slo scheduling"}])
+        seq = DecodeSeq("s", eng.states["s"], 12,
+                        text_fn=lambda q: eng.tok.decode(q.tokens))
+        assert eng.try_admit(seq)
+        eng.note_slot_acquired(seq)
+        return eng, seq
+
+    def drive(eng, seq, iters):
+        for _ in range(iters):
+            before = len(seq.tokens)
+            eng.decode_iteration([seq])
+            seq.steps += max(1, len(seq.tokens) - before)
+
+    eng0, base = fresh()
+    t0 = time.time()
+    drive(eng0, base, 12)
+    base_wall = time.time() - t0
+
+    eng, seq = fresh()
+    t0 = time.time()
+    drive(eng, seq, 5)
+    assert eng.can_preempt(seq)
+    eng.preempt_decode(seq)
+    assert eng.try_admit(seq)
+    eng.note_slot_acquired(seq)
+    drive(eng, seq, 7)
+    wall = time.time() - t0
+
+    identical = seq.tokens == base.tokens
+    for e, s in ((eng, seq), (eng0, base)):
+        e.note_slot_released(s)
+        e.release("s")
+    row = {"token_identical": identical,
+           "preempt_overhead_s": round(wall - base_wall, 3),
+           "preempted": eng.tenant_stats()
+           .get("default/batch", {}).get("preempted", 0)}
+    if paged:
+        rep = eng.alloc.audit()
+        row["blocks_leaked"] = rep["leaked"] + rep["bad_free"]
+        row["pool_restored"] = \
+            eng.alloc.free_blocks() == eng.alloc.capacity
+    return row
+
+
+def run(out_path: Path = None):
+    results = {}
+    off = _run_sim(slo_on=False)
+    on = _run_sim(slo_on=True)
+    results["sim"] = {"slo_off": off, "slo_on": on}
+    for name, row in results["sim"].items():
+        print(f"{name}: interactive ttft p99 "
+              f"{row['interactive_ttft']['p99_ms']}ms, batch "
+              f"{row['batch_tput_tok_s']} tok/s, "
+              f"{row['preemptions']} preemptions")
+
+    real = {"dense": _run_real(paged=False),
+            "paged": _run_real(paged=True)}
+    results["real"] = real
+    print(f"real: dense identical={real['dense']['token_identical']}, "
+          f"paged identical={real['paged']['token_identical']} "
+          f"(leaked={real['paged']['blocks_leaked']})")
+
+    ttft_gain = off["interactive_ttft"]["p99_ms"] / \
+        max(on["interactive_ttft"]["p99_ms"], 1e-9)
+    tput_ratio = on["batch_tput_tok_s"] / max(off["batch_tput_tok_s"],
+                                              1e-9)
+    results["accept"] = {
+        "interactive_ttft_p99_gain_x": round(ttft_gain, 1),
+        "ttft_gain_ge_2x": ttft_gain >= 2.0,
+        "batch_tput_within_10pct": tput_ratio >= 0.9,
+        "preemptions_fired": on["preemptions"] > 0,
+        "real_token_identical": real["dense"]["token_identical"]
+        and real["paged"]["token_identical"],
+        "zero_blocks_leaked": real["paged"]["blocks_leaked"] == 0
+        and real["paged"]["pool_restored"],
+    }
+    results["setup"] = {
+        "n_batch": N_BATCH, "batch_tokens": BATCH_TOKENS,
+        "n_interactive": N_INTER, "inter_tokens": INTER_TOKENS,
+        "max_batch": MAX_BATCH,
+    }
+    print(f"accept={results['accept']}")
+    out_path = out_path or Path(__file__).parent / "BENCH_slo.json"
+    out_path.write_text(json.dumps(results, indent=2))
+    print(f"wrote {out_path}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -21,7 +21,7 @@ def main() -> None:
                             fig9_colocation, fig10_ablation_graph,
                             fig11_ablation_sched, fig12_critical_path,
                             fig_disagg, fig_fault_tolerance, fig_paged_kv,
-                            fig_radix_cache, fig_spec_decode,
+                            fig_radix_cache, fig_slo, fig_spec_decode,
                             instances_scaling, roofline, table3_prefill)
 
     sections = [
@@ -39,6 +39,7 @@ def main() -> None:
         ("fig_fault_tolerance", lambda: fig_fault_tolerance.run()),
         ("fig_paged_kv", lambda: fig_paged_kv.run()),
         ("fig_radix_cache", lambda: fig_radix_cache.run()),
+        ("fig_slo", lambda: fig_slo.run()),
         ("fig_spec_decode", lambda: fig_spec_decode.run()),
         ("instances_scaling", lambda: instances_scaling.run()),
         ("roofline", lambda: roofline.run()),

@@ -243,22 +243,55 @@ class EnginePool:
         fn = getattr(self.replicas[i], "decode_slots_free", None)
         return fn() if fn is not None else None
 
-    def least_loaded_decode(self, indices=None) -> int:
+    def _tenant_slots_held(self, i: int, tenant) -> int:
+        """Decode slots ``tenant`` currently holds on replica i (0 when
+        the replica has no armed SLO policy / slot ledger)."""
+        pol = getattr(self.replicas[i], "slo", None)
+        if tenant is None or pol is None or \
+                getattr(pol, "slots", None) is None:
+            return 0
+        return pol.slots.usage_of(tenant)
+
+    def least_loaded_decode(self, indices=None, tenant=None) -> int:
         """Replica for a new continuous-batching decode: a replica with a
         free decode slot starts the sequence NEXT iteration, while a full
         loop queues it behind a whole sequence — so free-slot replicas
         win outright; a block-exhausted paged pool demotes a replica the
         same way (its loop would defer admission); ties fall back to
         token load. ``indices`` restricts the candidate set
-        (role-specialized dispatch)."""
+        (role-specialized dispatch). ``tenant`` (SLO scheduling) spreads
+        one tenant's sequences across replicas: among equally-free
+        replicas, the one where the tenant holds the fewest decode slots
+        wins — per-replica fair-share ledgers then see balanced holdings
+        instead of one replica absorbing the whole tenant. ``tenant``
+        None (flag off) keeps the key byte-identical."""
         def key(i):
             slots = self.decode_slots_free(i)
             blocks = self.kv_free_blocks(i)
             has_free = (slots is None or slots > 0) and \
                 (blocks is None or blocks > 0)
-            return (self._suspect_rank(i),
-                    0 if has_free else 1, self.load(i))
+            return (self._suspect_rank(i), 0 if has_free else 1,
+                    self._tenant_slots_held(i, tenant), self.load(i))
         return min(self.healthy_indices(indices), key=key)
+
+    def tenant_stats(self) -> Dict[str, dict]:
+        """Pool-level per-tenant/per-class stats: replica snapshots
+        merged (counts sum; latency percentiles keep the max — a
+        conservative pool tail bound). Empty when no replica has an
+        armed SLO policy."""
+        out: Dict[str, dict] = {}
+        for r in self.replicas:
+            fn = getattr(r, "tenant_stats", None)
+            if fn is None:
+                continue
+            for key, row in fn().items():
+                dst = out.setdefault(key, {})
+                for f, v in row.items():
+                    if f.endswith("_ms"):
+                        dst[f] = max(dst.get(f, 0.0), v)
+                    else:
+                        dst[f] = dst.get(f, 0) + v
+        return out
 
     def loads(self) -> List[float]:
         return [self.load(i) for i in range(len(self.replicas))]

@@ -104,6 +104,25 @@ def _prefill_payload(prim, ctx) -> List[dict]:
     return [{"sid": _sid(prim, ctx), "text": _prompt_text(prim, store)}]
 
 
+def _slo_tag(task, engine):
+    """SLO tag for one task's sequences — built only when the routed
+    engine has an armed policy (``engine.slo``), so flag-off call sites
+    are byte-identical (no extra kwarg reaches the engine). The tag
+    carries the query's SLO class / legacy priority / tenant plus the
+    PRIMITIVE's e-graph depth: a deep decode has more downstream work
+    hanging off it, so it ranks ahead of a shallow one of the same
+    class (critical-path slack from ``depth()``)."""
+    if getattr(engine, "slo", None) is None:
+        return None
+    from repro.serving.slo import derive_tag
+    ctx = task.ctx
+    return derive_tag(slo=getattr(ctx, "slo", None),
+                      priority=getattr(ctx, "priority", 0),
+                      tenant=getattr(ctx, "tenant", "default"),
+                      depth=task.prim.depth,
+                      t_submit=ctx.t_submit)
+
+
 def rebuild_full_prompt(engine_name: str, ctx, sid: str):
     """Reconstruct a sequence's WHOLE prompt from the query e-graph. A
     prompt split by the causal-prefill pass lives in two primitives —
@@ -412,6 +431,9 @@ def submit_prefill_task(engine, task, done, on_fail=None, ft=None):
 
     def _submit(j, eng, prev):
         p = _continuation_payload(prim, ctx, eng, [payload[j]])[0]
+        tag = _slo_tag(task, eng)
+        if tag is not None:
+            p = {**p, "slo": tag}
         job = eng.submit_prefill(p,
                                  on_done=lambda job, j=j: job_done(j, job))
         if ft is not None:
@@ -534,13 +556,16 @@ def submit_decode_task(engine, task, done, on_fail=None, ft=None):
     def _submit(j, eng, prev):
         sid, max_new = entries[j]
         cb = lambda seq, j=j: seq_done(j, seq)   # noqa: E731
+        tag = _slo_tag(task, eng)
+        extra = {} if tag is None else {"slo": tag}
         if ft is not None and (prev is not None or
                                sid not in getattr(eng, "states", {})):
             seq = eng.recover_decode(sid, ft.prompt_for(sid), max_new,
-                                     prev, on_text=on_text, on_done=cb)
+                                     prev, on_text=on_text, on_done=cb,
+                                     **extra)
         else:
             seq = eng.submit_decode(sid, max_new, on_text=on_text,
-                                    on_done=cb)
+                                    on_done=cb, **extra)
         if ft is not None:
             ft.note_submitted(j, seq)
 

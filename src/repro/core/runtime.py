@@ -58,12 +58,17 @@ _qid = itertools.count()
 
 class QueryContext:
     def __init__(self, graph: Graph, inputs: Dict[str, Any],
-                 output_key: str = "answer", priority: int = 0):
+                 output_key: str = "answer", priority: int = 0,
+                 slo: Optional[str] = None, tenant: str = "default"):
         self.qid = f"q{next(_qid)}"
         self.graph = graph
         self.store: Dict[str, Any] = dict(inputs)
         self.output_key = output_key
         self.priority = priority    # higher = served first (paper §7.2)
+        # SLO class ("interactive" | "batch" | None) and tenant identity
+        # for the serving/slo policy layer; None defers to priority
+        self.slo = slo
+        self.tenant = tenant
         self.done = threading.Event()
         self.t_submit = time.time()
         self.t_done: Optional[float] = None
@@ -424,6 +429,13 @@ class PooledEngineScheduler(threading.Thread):
     def _dc_idx(self):
         return self.pool.route_decode_indices() if self.disagg else None
 
+    def _slo_tenant(self, t: NodeTask):
+        """Tenant identity for decode routing — only when the replicas
+        carry an armed SLO policy (None keeps routing byte-identical)."""
+        if getattr(self.pool[0], "slo", None) is None:
+            return None
+        return getattr(t.ctx, "tenant", "default")
+
     def forget(self, qid: str):
         """Drop a finished query's sequence-affinity entries."""
         with self._aff_lock:
@@ -502,7 +514,7 @@ class PooledEngineScheduler(threading.Thread):
                             idx = self.pool.least_loaded(self._pf_idx())
                     else:
                         idx = self.pool.least_loaded_decode(
-                            self._dc_idx())
+                            self._dc_idx(), tenant=self._slo_tenant(t))
                     if key is not None:
                         self.affinity[key] = idx
             if self.disagg and not is_prefill and \
@@ -564,7 +576,8 @@ class PooledEngineScheduler(threading.Thread):
         loop's iteration cadence — resident decodes never stop ticking
         while a handoff is in flight."""
         from repro.core.executors import decode_entries
-        dst_idx = self.pool.least_loaded_decode(self._dc_idx())
+        dst_idx = self.pool.least_loaded_decode(
+            self._dc_idx(), tenant=self._slo_tenant(t))
         if dst_idx == src_idx:
             # degraded pool: the whole decode side is dead and routing
             # demoted to colocated mode — the KV already lives here
@@ -759,9 +772,11 @@ class Runtime:
         self._lock = threading.Lock()
 
     def submit(self, graph: Graph, inputs: Dict[str, Any],
-               output_key: str = "answer",
-               priority: int = 0) -> QueryContext:
-        ctx = QueryContext(graph, inputs, output_key, priority=priority)
+               output_key: str = "answer", priority: int = 0,
+               slo: Optional[str] = None,
+               tenant: str = "default") -> QueryContext:
+        ctx = QueryContext(graph, inputs, output_key, priority=priority,
+                           slo=slo, tenant=tenant)
         with self._lock:
             self.queries.append(ctx)
         ctx.indegree = {pid: len(n.parents)

@@ -59,14 +59,18 @@ class Teola:
         return g
 
     def submit(self, query: dict, C: Optional[dict] = None,
-               priority: int = 0) -> QueryContext:
+               priority: int = 0, slo: Optional[str] = None,
+               tenant: str = "default") -> QueryContext:
         g = self.build_egraph(query, C)
         inputs = {k: v for k, v in query.items() if k != "id"}
-        return self.runtime.submit(g, inputs, priority=priority)
+        return self.runtime.submit(g, inputs, priority=priority,
+                                   slo=slo, tenant=tenant)
 
     def query(self, query: dict, C: Optional[dict] = None, timeout=120,
-              priority: int = 0):
-        ctx = self.submit(query, C, priority=priority)
+              priority: int = 0, slo: Optional[str] = None,
+              tenant: str = "default"):
+        ctx = self.submit(query, C, priority=priority, slo=slo,
+                          tenant=tenant)
         out = ctx.result(timeout)
         return out, ctx
 

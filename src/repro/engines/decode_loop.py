@@ -57,13 +57,21 @@ class DecodeSeq:
     def __init__(self, sid: str, state, n: int, *,
                  text_fn: Callable[["DecodeSeq"], str],
                  on_text: Optional[Callable[[str], None]] = None,
-                 on_done: Optional[Callable[["DecodeSeq"], None]] = None):
+                 on_done: Optional[Callable[["DecodeSeq"], None]] = None,
+                 slo=None):
         self.sid = sid
         self.state = state
         self.n = int(n)
         self.text_fn = text_fn
         self.on_text = on_text
         self.on_done = on_done
+        # SLO scheduling metadata (serving/slo.SLOTag) — None means
+        # untagged; the loop only consults it when the engine has an
+        # attached SLOPolicy
+        self.slo = slo
+        # set by the engine when this sequence was preempted
+        # (evict-to-recompute) and must have its KV rebuilt on re-entry
+        self.slo_preempted = False
         self.tokens: list = []
         self.steps = 0
         self.result: Optional[str] = None
@@ -101,8 +109,9 @@ class PrefillJob:
 
     def __init__(self, sid: str, state, tokens: list, *,
                  on_done: Optional[Callable[["PrefillJob"], None]] = None,
-                 ptoks: Optional[list] = None):
+                 ptoks: Optional[list] = None, slo=None):
         self.sid = sid
+        self.slo = slo
         self.state = state
         self.tokens = list(tokens)
         # tokens already resident when the job was created (radix/COW
@@ -188,9 +197,16 @@ class ContinuousDecodeLoop(threading.Thread):
         self.callback_errors: List[tuple] = []   # (sid, exception)
         self.prefill_chunks: List[tuple] = []    # (sid, iteration, ntokens)
         self.mixed_log: List[tuple] = []    # (decode_cost, prefill_tokens)
+        self.preemptions: List[tuple] = []  # (sid, iteration, steps_kept)
+        # SLO mode: set by _admit_locked when an urgent (interactive or
+        # aged) waiter was deferred this pass — the preemption trigger
+        self._slo_deferred_urgent = False
 
     # -- producer side ------------------------------------------------------
     def submit(self, seq: DecodeSeq) -> DecodeSeq:
+        pol = getattr(self.engine, "slo", None)
+        if pol is not None:
+            pol.stats.bump(pol.tag_of(seq), "submitted")
         with self.cv:
             self.waiting.append(seq)
             self.cv.notify()
@@ -264,7 +280,15 @@ class ContinuousDecodeLoop(threading.Thread):
             return []
         room = self.token_budget - decode_cost
         items = []
-        for job in self.prefill_waiting:
+        pol = getattr(self.engine, "slo", None)
+        # SLO mode: interactive chunks pack first (per-class FIFO behind
+        # that, aging promotes starved batch jobs). A batch PrefillJob
+        # skipped while interactive jobs drain the budget is PAUSED at
+        # its cursor — resuming is free, the cursor is the state. FIFO
+        # (byte-identical) when no policy is armed.
+        queue = self.prefill_waiting if pol is None else \
+            pol.admission_order(list(self.prefill_waiting))
+        for job in queue:
             if room <= 0:
                 break
             n = min(self.prefill_chunk, job.remaining(), room)
@@ -344,8 +368,11 @@ class ContinuousDecodeLoop(threading.Thread):
         """Admit waiters into free slots; returns sequences that timed
         out waiting for engine admission (evicted by the caller OUTSIDE
         the condition variable — eviction hooks may take engine locks)."""
-        expired = []
         admit_hook = getattr(self.engine, "try_admit", None)
+        pol = getattr(self.engine, "slo", None)
+        if pol is not None:
+            return self._admit_slo_locked(admit_hook, pol)
+        expired = []
         while self.waiting and len(self.active) < self.max_slots:
             seq = self.waiting[0]
             # engine-level admission control (paged KV backpressure: the
@@ -370,6 +397,65 @@ class ContinuousDecodeLoop(threading.Thread):
                 hook(seq)
         return expired
 
+    def _admit_slo_locked(self, admit_hook, pol):
+        """SLO-mode admission: rank waiters (class, priority, e-graph
+        depth, arrival — aging promotes starved batch work), consult the
+        per-tenant slot fair share, and record whether an urgent waiter
+        was deferred (the preemption trigger). Unlike FIFO mode a
+        non-admissible waiter is SKIPPED, not head-of-line blocking —
+        admission order is the rank order, so there is no FIFO contract
+        to preserve behind it."""
+        expired = []
+        now = time.time()
+        self._slo_deferred_urgent = False
+        pol.note_live(pol.tag_of(s).tenant for s in self.waiting)
+        demand = pol.slot_demand(self.waiting, self.active)
+        for seq in pol.admission_order(list(self.waiting), now):
+            deferred = False
+            if len(self.active) >= self.max_slots:
+                deferred = True
+            elif not pol.may_take_slot(pol.tag_of(seq), demand):
+                # over slot fair share while another tenant has unmet
+                # demand — hold this one back, keep scanning (a
+                # different tenant further down may still fit)
+                deferred = True
+            elif admit_hook is not None and not admit_hook(seq):
+                deferred = True          # engine (KV) backpressure
+            if deferred:
+                if self.admit_timeout is not None and \
+                        now - seq.t_submit > self.admit_timeout:
+                    self.waiting.remove(seq)
+                    expired.append(seq)
+                elif pol.is_urgent(seq, now):
+                    self._slo_deferred_urgent = True
+                continue
+            self.waiting.remove(seq)
+            seq.t_admit = time.time()
+            self.active.append(seq)
+            self.admissions.append((seq.sid, self.iterations))
+            pol.note_admit(seq)
+            hook = getattr(self.engine, "note_slot_acquired", None)
+            if hook is not None:
+                hook(seq)
+        return expired
+
+    def _plan_preempt_locked(self):
+        """SLO mode: when this pass deferred an urgent waiter while
+        non-urgent sequences are resident, ask the policy's governor for
+        a victim (cooldown + per-seq cap = hysteresis). Victims are
+        pulled out of ``active`` here; the caller frees their KV and
+        re-queues them OUTSIDE the condition variable (engine locks)."""
+        pol = getattr(self.engine, "slo", None)
+        if pol is None or not self._slo_deferred_urgent:
+            return []
+        can = getattr(self.engine, "can_preempt", None)
+        cands = self.active if can is None else \
+            [s for s in self.active if can(s)]
+        victims = pol.plan_preemption(cands)
+        for v in victims:
+            self.active.remove(v)
+        return victims
+
     def _evict(self, seq: DecodeSeq, error: Optional[Exception] = None):
         seq.t_done = time.time()
         if error is None:
@@ -379,6 +465,9 @@ class ContinuousDecodeLoop(threading.Thread):
                 error = e
         seq.error = error
         self.evictions.append((seq.sid, self.iterations, seq.steps))
+        pol = getattr(self.engine, "slo", None)
+        if pol is not None:
+            pol.note_evict(seq, failed=error is not None)
         hook = getattr(self.engine, "note_slot_released", None)
         if hook is not None:
             hook(seq)
@@ -432,7 +521,8 @@ class ContinuousDecodeLoop(threading.Thread):
                 if not self.running:
                     break
                 expired = self._admit_locked()
-                if not self.active and not expired and \
+                victims = self._plan_preempt_locked()
+                if not self.active and not expired and not victims and \
                         not self.prefill_waiting:
                     self.cv.wait(timeout=self.idle_wait)
                     continue
@@ -447,6 +537,32 @@ class ContinuousDecodeLoop(threading.Thread):
                 self._evict(seq, error=TimeoutError(
                     f"decode {seq.sid} not admitted within "
                     f"{self.admit_timeout}s (KV pool backpressure)"))
+            if victims:
+                # evict-to-recompute: free each victim's KV (engine call
+                # — outside the cv), then re-queue it with its emitted
+                # tokens intact; on re-admission the engine rebuilds KV
+                # by re-prefilling prompt+emitted, so the continuation
+                # is token-identical. The pass restarts so the freed
+                # slots/blocks go to the urgent waiter immediately.
+                pol = getattr(self.engine, "slo", None)
+                with self.cv:
+                    self._inflight_prefill = frozenset()
+                    self.cv.notify_all()
+                for v in victims:
+                    try:
+                        self.engine.preempt_decode(v)
+                    except Exception as e:  # noqa: BLE001
+                        self._evict(v, error=e)
+                        continue
+                    self.preemptions.append((v.sid, self.iterations,
+                                             v.steps))
+                    if pol is not None:
+                        pol.note_preempted(v)
+                    v.t_submit = time.time()   # fresh admission clock
+                    with self.cv:
+                        self.waiting.append(v)
+                        self.cv.notify()
+                continue
             if pwaiting and not pitems:
                 # prefill queued but no chunk planned — either resident
                 # decodes consume the whole budget every pass (room
@@ -512,8 +628,12 @@ class ContinuousDecodeLoop(threading.Thread):
                         f"decode {seq.sid} not admitted within "
                         f"{self.admit_timeout}s (KV pool backpressure)"))
             finished, errored = [], []
+            pol = getattr(self.engine, "slo", None)
             for seq, n_before in zip(batch, before):
                 seq.steps += max(1, len(seq.tokens) - n_before)
+                if pol is not None:
+                    # TTFT on the first pass, TBT per pass after that
+                    pol.note_tokens(seq)
                 # a failing per-sequence emission (on_text runs stream
                 # plumbing and the first-chunk early-release hook) fails
                 # THAT sequence, never the shared loop

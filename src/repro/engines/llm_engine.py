@@ -181,6 +181,15 @@ class LLMEngine(DecodeLoopMixin):
         # view takes the worse of the two)
         self.faults = None
         self.health = "healthy"
+        # SLO scheduling (serving/slo.py): policy attached by attach_slo
+        # (None = every scheduling path byte-identical to pre-SLO code).
+        # _slo_ptoks records each sid's prefilled token context so a
+        # preempted sequence can rebuild its KV by replay; the block
+        # charge mirrors try_admit reservations into the fair-share
+        # ledger.
+        self.slo = None
+        self._slo_ptoks: Dict[str, list] = {}
+        self._slo_block_charge: Dict[str, tuple] = {}
         self._reset_batch_cache()
 
     def clone(self, idx: int = 1) -> "LLMEngine":
@@ -243,6 +252,9 @@ class LLMEngine(DecodeLoopMixin):
         c.spec = None                    # re-attach per replica if wanted
         c.faults = None                  # armed per replica (FaultInjector)
         c.health = "healthy"
+        c.slo = None                     # armed per replica (attach_slo)
+        c._slo_ptoks = {}
+        c._slo_block_charge = {}
         c._reset_batch_cache()
         return c
 
@@ -821,10 +833,11 @@ class LLMEngine(DecodeLoopMixin):
     # -- iteration-level continuous batching --------------------------------
     # (loop lifecycle — start/stop/slots — comes from DecodeLoopMixin)
     def submit_decode(self, sid: str, max_new: int, on_text=None,
-                      on_done=None) -> DecodeSeq:
+                      on_done=None, slo=None) -> DecodeSeq:
         """Admit sequence `sid` into the continuous decode loop for
         `max_new` tokens. on_text(text_so_far) fires every iteration;
-        on_done(seq) fires at eviction. Returns the DecodeSeq handle."""
+        on_done(seq) fires at eviction. ``slo`` is the request's SLO tag
+        (ignored unless a policy is armed). Returns the DecodeSeq."""
         st = self.states[sid]
         max_new = self._clamp_new(st, max_new)
         if self.paged and \
@@ -835,11 +848,12 @@ class LLMEngine(DecodeLoopMixin):
                 f"never fit the {self.alloc.capacity}-block pool")
         seq = DecodeSeq(sid, st, max_new,
                         text_fn=lambda s: self.tok.decode(s.tokens),
-                        on_text=on_text, on_done=on_done)
+                        on_text=on_text, on_done=on_done, slo=slo)
         return self.start_decode_loop().submit(seq)
 
     def recover_decode(self, sid: str, text: str, max_new: int,
-                       failed=None, on_text=None, on_done=None) -> DecodeSeq:
+                       failed=None, on_text=None, on_done=None,
+                       slo=None) -> DecodeSeq:
         """Token-identical replay of a sequence lost on a DEAD replica
         (fault-tolerance path): re-prefill the prompt from the e-graph's
         payload, teacher-force the tokens the dead replica already
@@ -873,7 +887,7 @@ class LLMEngine(DecodeLoopMixin):
             self.prefill_batch([(st, feed)])
         seq = DecodeSeq(sid, st, n,
                         text_fn=lambda s: self.tok.decode(s.tokens),
-                        on_text=on_text, on_done=on_done)
+                        on_text=on_text, on_done=on_done, slo=slo)
         seq.tokens = list(emitted)
         seq.steps = len(emitted)
         if seq.steps >= seq.n:
@@ -917,7 +931,8 @@ class LLMEngine(DecodeLoopMixin):
             if on_done is not None:
                 on_done(job)
 
-        job = PrefillJob(sid, st, toks, on_done=_done, ptoks=ptoks)
+        job = PrefillJob(sid, st, toks, on_done=_done, ptoks=ptoks,
+                         slo=task.get("slo"))
         if not toks:
             # prompt fully covered by the forked instruction prefix —
             # nothing to write; complete without touching the loop
@@ -1028,7 +1043,20 @@ class LLMEngine(DecodeLoopMixin):
         if not self._paged_lock.acquire(blocking=False):
             return False
         try:
-            needed = self._blocks_needed(seq.state, seq.n)
+            if getattr(seq, "slo_preempted", False):
+                # preempted sequence re-entering: its table is empty and
+                # the whole replay horizon (recorded prompt context +
+                # teacher-forced emitted tokens + remaining steps) must
+                # be re-written — reserve for all of it
+                horizon = len(self._slo_ptoks.get(seq.sid, ())) + seq.n
+                needed = kvc.blocks_for(horizon, self.block_size)
+            else:
+                needed = self._blocks_needed(seq.state, seq.n)
+            pol = self.slo
+            if pol is not None and pol.blocks is not None:
+                tenant = pol.tag_of(seq).tenant
+                if not pol.may_take_blocks(tenant, needed):
+                    return False    # over block fair share — defer
             avail = self.alloc.free_blocks() - self._reserved_locked()
             if needed > avail and self.radix is not None:
                 # cached leaves never count AGAINST admission: they are
@@ -1037,6 +1065,9 @@ class LLMEngine(DecodeLoopMixin):
                 avail += self.radix.evict(needed - avail)
             if needed <= avail:
                 self._decode_reserved[seq.sid] = needed
+                if pol is not None and pol.blocks is not None:
+                    pol.blocks.acquire(tenant, needed)
+                    self._slo_block_charge[seq.sid] = (tenant, needed)
                 return True
             return False
         finally:
@@ -1045,10 +1076,19 @@ class LLMEngine(DecodeLoopMixin):
     def note_slot_acquired(self, seq: DecodeSeq):
         self.meter.acquire_slot(seq.sid)
 
+    def _slo_drop_block_charge(self, sid: str):
+        """Return a sequence's KV-block charge to the fair-share ledger
+        (eviction, preemption, or release — whichever comes first)."""
+        charge = self._slo_block_charge.pop(sid, None)
+        if charge is not None and self.slo is not None and \
+                self.slo.blocks is not None:
+            self.slo.blocks.release(*charge)
+
     def note_slot_released(self, seq: DecodeSeq):
         if self.paged:
             with self._paged_lock:
                 dropped = self._decode_reserved.pop(seq.sid, None)
+            self._slo_drop_block_charge(seq.sid)
             if dropped:
                 # headroom improved without a decref — wake prefill waiters
                 self.alloc.notify_waiters()
@@ -1057,6 +1097,100 @@ class LLMEngine(DecodeLoopMixin):
             # before the slot is reused (its sid may decode again later)
             self._flush_batch_cache()
         self.meter.release_slot(seq.sid)
+
+    # -- SLO preemption (serving/slo.py): evict-to-recompute ---------------
+    def can_preempt(self, seq: DecodeSeq) -> bool:
+        """A sequence is preemptable only when its full KV context is
+        reconstructible from the recorded prompt tokens plus its emitted
+        tokens (single-decode lifecycles; a multi-turn state whose
+        earlier partial-decode tokens were never recorded, or a
+        migrated-in sequence with no record here, is excluded — losing
+        KV we cannot rebuild would break token identity)."""
+        rec = self._slo_ptoks.get(seq.sid)
+        if rec is None:
+            return False
+        return seq.state.pos == len(rec) + len(seq.tokens)
+
+    def preempt_decode(self, seq: DecodeSeq):
+        """Evict-to-recompute (loop thread): free ALL of the sequence's
+        KV — paged: trim its block table to position 0 (shared/radix
+        blocks just decref); dense: drop the per-sequence cache — and
+        release its decode slot, reservation and fair-share charge. The
+        loop re-queues the same DecodeSeq (tokens/steps intact); on
+        re-admission ``_slo_resume`` rebuilds the KV by replay."""
+        sid, st = seq.sid, seq.state
+        if self.paged:
+            with self._paged_lock:
+                kvc.trim_table(self.alloc, st.table, 0, self.block_size)
+                dropped = self._decode_reserved.pop(sid, None)
+            self._slo_drop_block_charge(sid)
+            if dropped:
+                self.alloc.notify_waiters()
+        else:
+            # write the shared batch cache back first (residency is
+            # changing), then drop this sequence's KV arrays
+            self._flush_batch_cache()
+            st.cache = kvc.init_cache(self.cfg, 1, self.max_len)
+        st.pos = 0
+        st.last_token = 1                # replay re-derives it
+        seq.slo_preempted = True
+        self.meter.release(sid)          # tokens gone from memory
+        self.meter.release_slot(sid)
+
+    def _slo_resume(self, seq: DecodeSeq):
+        """Rebuild a preempted sequence's KV before it rejoins a decode
+        pass: re-prefill the recorded prompt context, then teacher-force
+        the already-emitted tokens — the same construction as
+        ``recover_decode``, so causal attention recreates the exact
+        pre-preemption state and the continuation is token-identical.
+        Paged writes draw down the sequence's re-admission reservation
+        (sized for the whole replay horizon in try_admit)."""
+        sid, st = seq.sid, seq.state
+        seq.slo_preempted = False
+        toks = list(self._slo_ptoks.get(sid, []))
+        if toks:
+            self._slo_replay_write(sid, st, toks)
+        emitted = [int(x) for x in seq.tokens]
+        if emitted:
+            self._slo_replay_write(sid, st,
+                                   [st.last_token] + emitted[:-1])
+
+    def _slo_replay_write(self, sid: str, st, toks: list):
+        """Prefill ``toks`` for a resuming sequence, bucketed-chunk by
+        chunk. Paged mode bypasses free-block admission: the blocks come
+        out of the sequence's own decode reservation."""
+        t0 = time.time()
+        i = 0
+        while i < len(toks):
+            chunk = toks[i:i + BUCKETS_S[-1]]
+            i += len(chunk)
+            B = _bucket(1, BUCKETS_B)
+            S = _bucket(len(chunk), BUCKETS_S)
+            grid, last_idx = self._prefill_toks([(st, chunk)], B, S)
+            if self.paged:
+                with self._paged_lock:
+                    got = self._prepare_write(st, len(chunk))
+                    if got:
+                        resv = self._decode_reserved.get(sid)
+                        if resv is not None:
+                            self._decode_reserved[sid] = max(0,
+                                                             resv - got)
+                    logits = self._paged_prefill_exec(
+                        [st], B, S, grid, last_idx)
+            else:
+                logits = self._dense_prefill_exec([st], B, grid, last_idx)
+            st.pos += len(chunk)
+            st.last_token = int(jnp.argmax(logits[0]))
+            self.meter.advance(sid, len(chunk))
+        with self._stats_lock:
+            self.stats["prefill_tokens"] += len(toks)
+            self.stats["calls"] += 1
+            self.stats["busy_s"] += time.time() - t0
+
+    def tenant_stats(self) -> dict:
+        """Per-(tenant, class) scheduling stats (empty when SLO
+        scheduling is not armed on this replica)."""
+        return self.slo.tenant_stats() if self.slo is not None else {}
 
     def _pad_states(self, k: int) -> List[SeqState]:
         while len(self._pads) < k:
@@ -1084,6 +1218,10 @@ class LLMEngine(DecodeLoopMixin):
         emitted tokens); the rest — and everything, with it disabled —
         take the legacy single-token step."""
         self._fault("decode")
+        if self.slo is not None:
+            for r in seqs:
+                if getattr(r, "slo_preempted", False):
+                    self._slo_resume(r)
         if self.spec is not None:
             return self.spec.decode_iteration(seqs)
         return self._decode_iteration_base(seqs)
@@ -1232,8 +1370,17 @@ class LLMEngine(DecodeLoopMixin):
             # prompt == cached instruction: the forked state is already
             # complete (pos and last_token carried over) — prefilling a
             # spurious SEP would diverge from the cold path
-            return st, [], ptoks
-        return st, toks or [HashTokenizer.SEP], ptoks
+            out = []
+        else:
+            out = toks or [HashTokenizer.SEP]
+        if self.slo is not None:
+            # preemption replay record: every token that becomes part of
+            # this sid's KV context through a prefill path (cached
+            # prefixes included — replay re-prefills them fresh, same
+            # numerics)
+            self._slo_ptoks.setdefault(sid, []).extend(
+                list(ptoks) + list(out))
+        return st, out, ptoks
 
     def op_prefill(self, task_batch):
         """task_batch: list of dicts with keys:
@@ -1355,6 +1502,8 @@ class LLMEngine(DecodeLoopMixin):
                 dropped = self._decode_reserved.pop(sid, None)
             if dropped:
                 self.alloc.notify_waiters()
+        self._slo_drop_block_charge(sid)
+        self._slo_ptoks.pop(sid, None)
         self.meter.release(sid)
 
     # -- sequence migration (disaggregated prefill/decode handoff) ---------

@@ -144,6 +144,9 @@ class SimLLMEngine(DecodeLoopMixin):
         # fault tolerance: injector hook + replica health (see LLMEngine)
         self.faults = None
         self.health = "healthy"
+        # SLO scheduling policy (attached per replica by slo.attach_slo;
+        # None keeps every scheduling path byte-identical)
+        self.slo = None
 
     def _fault(self, point: str):
         inj = self.faults
@@ -354,7 +357,8 @@ class SimLLMEngine(DecodeLoopMixin):
         if not self.chunked_prefill:
             raise RuntimeError(f"{self.name}: chunked_prefill is disabled")
         st, n = self._prefill_task_len(task)
-        job = PrefillJob(task["sid"], st, list(range(n)), on_done=on_done)
+        job = PrefillJob(task["sid"], st, list(range(n)), on_done=on_done,
+                         slo=task.get("slo"))
         return self.start_decode_loop().submit_prefill(job)
 
     def decode_token_cost(self, seqs) -> int:
@@ -433,7 +437,7 @@ class SimLLMEngine(DecodeLoopMixin):
     # -- iteration-level continuous batching --------------------------------
     # (loop lifecycle — start/stop/slots — comes from DecodeLoopMixin)
     def submit_decode(self, sid: str, max_new: int, on_text=None,
-                      on_done=None) -> DecodeSeq:
+                      on_done=None, slo=None) -> DecodeSeq:
         """Admit `sid` into the continuous decode loop. The sim has no
         real sampling, so the final text is fixed at submit time exactly
         as the legacy path fixes it (same state/pos advance — continuous
@@ -447,12 +451,49 @@ class SimLLMEngine(DecodeLoopMixin):
             text = _ptext(sid + str(st["pos"]), max_new)
         seq = DecodeSeq(sid, st, max_new,
                         text_fn=lambda s: " ".join(s.tokens),
-                        on_text=on_text, on_done=on_done)
+                        on_text=on_text, on_done=on_done, slo=slo)
         seq.words = text.split()
         return self.start_decode_loop().submit(seq)
 
+    # -- SLO preemption (sim form): the output words are fixed at submit
+    # time, so evict-to-recompute only has to model the MEMORY release
+    # and the replay cost — token identity is free by construction.
+    def can_preempt(self, seq) -> bool:
+        return True
+
+    def preempt_decode(self, seq):
+        """Free the sequence's modeled KV (pos → 0 releases its blocks
+        from kv_blocks/kv_free_blocks accounting); the loop re-queues
+        the DecodeSeq with its emitted words intact."""
+        with self._lock:
+            seq._slo_saved_pos = seq.state.get("pos", 0)
+            seq.state["pos"] = 0
+        seq.slo_preempted = True
+
+    def _slo_resume(self, seq):
+        """Charge the replay prefill (recorded prompt + emitted tokens —
+        what the real engine re-prefills) and restore the position."""
+        seq.slo_preempted = False
+        with self._lock:
+            seq.state["pos"] = getattr(seq, "_slo_saved_pos", 0)
+        # saved pos pre-charged the whole decode; resident at preemption
+        # was prompt + steps
+        replay = max(1, getattr(seq, "_slo_saved_pos", seq.n)
+                     - seq.n + seq.steps)
+        dur = self.pf_setup + self.pf_tok * replay
+        _sleep(dur)
+        with self._stats_lock:
+            self.stats["prefill_tokens"] += replay
+            self.stats["calls"] += 1
+            self.stats["busy_ms"] += dur
+
+    def tenant_stats(self) -> dict:
+        """Per-(tenant, class) scheduling stats (empty unless armed)."""
+        return self.slo.tenant_stats() if self.slo is not None else {}
+
     def recover_decode(self, sid: str, text: str, max_new: int,
-                       failed=None, on_text=None, on_done=None) -> DecodeSeq:
+                       failed=None, on_text=None, on_done=None,
+                       slo=None) -> DecodeSeq:
         """Sim form of ``LLMEngine.recover_decode``: replay a sequence
         lost on a dead replica. The replay prefill's modeled cost is
         charged on the caller's thread (recovery latency is visible to
@@ -478,7 +519,7 @@ class SimLLMEngine(DecodeLoopMixin):
             self.stats["busy_ms"] += dur
         seq = DecodeSeq(sid, st, max_new,
                         text_fn=lambda s: " ".join(s.tokens),
-                        on_text=on_text, on_done=on_done)
+                        on_text=on_text, on_done=on_done, slo=slo)
         seq.words = words
         emitted = list(getattr(failed, "tokens", [])) if failed is not None \
             else []
@@ -502,6 +543,10 @@ class SimLLMEngine(DecodeLoopMixin):
         the mean exactly) — the loop advances each sequence by the
         emitted count, exactly like the real SpeculativeDecoder."""
         self._fault("decode")
+        if self.slo is not None:
+            for r in seqs:
+                if getattr(r, "slo_preempted", False):
+                    self._slo_resume(r)
         b = len(seqs)
         emitted = 0
         if self.speculative:

@@ -39,6 +39,16 @@ sequence's paged KV blocks into a decode replica's pool
 into that replica's continuous loop — prefill/decode interference is
 removed entirely instead of time-sliced; outputs stay token-identical
 to unified serving.
+--slo-sched (requires --continuous-batching) arms SLO-aware
+multi-tenant scheduling on every LLM replica: queries are stamped with
+an SLO class (interactive vs batch, alternating here) and a tenant
+identity; each replica's continuous loop then admits by
+(class, priority, e-graph depth, arrival) rank with an --slo-aging
+starvation bound, enforces weighted max-min fair shares of decode
+slots and KV blocks per tenant, and under pressure preempts a batch
+sequence via evict-to-recompute (paged KV freed, continuation replayed
+token-identically on re-admission). Per-tenant/per-class stats print at
+exit.
 --fault-inject / --request-deadline / --max-retries enable the
 fault-tolerance layer (requires --continuous-batching): a seeded
 deterministic FaultInjector crashes/hangs/slows replicas at exact call
@@ -130,6 +140,17 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--decode-replicas", type=int, default=None,
                     help="decode-specialist replicas per LLM pool "
                          "(default 1; requires --disaggregate)")
+    ap.add_argument("--slo-sched", action="store_true",
+                    help="SLO-aware multi-tenant scheduling: priority "
+                         "admission by (class, priority, depth, arrival), "
+                         "per-tenant fair-share decode slots / KV blocks, "
+                         "paged preemption of batch work under pressure "
+                         "(requires --continuous-batching)")
+    ap.add_argument("--slo-aging", type=float, default=None,
+                    metavar="SECONDS",
+                    help="starvation bound: a batch-class item older than "
+                         "this ranks as urgent (default 5.0; requires "
+                         "--slo-sched)")
     ap.add_argument("--fault-inject", default=None, metavar="SPEC",
                     help="deterministic fault schedule, comma-separated "
                          "kind:engine:point:at[:duration] entries, e.g. "
@@ -228,6 +249,20 @@ def validate_args(ap: argparse.ArgumentParser, args) -> None:
         if args.prefill_replicas is not None else 1
     args.decode_replicas = args.decode_replicas \
         if args.decode_replicas is not None else 1
+    if args.slo_aging is not None and not args.slo_sched:
+        ap.error("--slo-aging requires --slo-sched")
+    if args.slo_sched:
+        if args.scheme != "Teola":
+            ap.error("--slo-sched requires --scheme Teola (the SLO "
+                     "policy lives in the continuous-loop admission "
+                     "pass)")
+        if not args.continuous_batching:
+            ap.error("--slo-sched requires --continuous-batching "
+                     "(priority admission and preemption run in the "
+                     "persistent decode loops)")
+        if args.slo_aging is not None and args.slo_aging < 0:
+            ap.error(f"--slo-aging must be >= 0, got {args.slo_aging}")
+    args.slo_aging = args.slo_aging if args.slo_aging is not None else 5.0
     ft_on = (args.fault_inject is not None
              or args.request_deadline is not None
              or args.max_retries is not None)
@@ -292,6 +327,11 @@ def main():
                 draft="lite_llm" if args.spec_drafter == "lite_llm"
                 else None,
                 k=args.draft_k)
+    if args.slo_sched:
+        from repro.serving.slo import attach_slo
+        pols = attach_slo(engines, aging_s=args.slo_aging)
+        print(f"[serve] SLO scheduling armed on {len(pols)} replicas "
+              f"(aging {args.slo_aging:.1f}s)")
     ft = None
     injector = None
     if args.fault_tolerance_on:
@@ -322,8 +362,15 @@ def main():
     ctxs = []
     t0 = time.time()
     for i in range(args.queries):
-        ctxs.append(orch.submit({
-            "question": f"what is fact {i} about optics", "docs": docs}))
+        q = {"question": f"what is fact {i} about optics", "docs": docs}
+        if args.slo_sched:
+            # two tenants, alternating SLO classes: tenant t0 is the
+            # interactive user, t1 the throughput-bound batch tenant
+            ctxs.append(orch.submit(
+                q, slo="interactive" if i % 2 == 0 else "batch",
+                tenant=f"t{i % 2}"))
+        else:
+            ctxs.append(orch.submit(q))
         time.sleep(float(rng.exponential(1.0 / args.rate)))
     for c in ctxs:
         c.done.wait(600)
@@ -342,6 +389,11 @@ def main():
                       f"{mgr.events}")
     if injector is not None and injector.log:
         print(f"[serve] injected faults: {injector.log}")
+    if args.slo_sched:
+        from repro.serving.slo import pool_tenant_stats
+        for key, row in sorted(pool_tenant_stats(engines).items()):
+            print(f"[serve] tenant {key}: "
+                  + " ".join(f"{k}={v}" for k, v in sorted(row.items())))
     orch.shutdown()
 
 

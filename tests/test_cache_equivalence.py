@@ -230,6 +230,59 @@ def test_matrix_mid_stream_admission_and_eviction():
 
 
 # ---------------------------------------------------------------------------
+# SLO-armed cells: the same token-identity contract must survive SLO-aware
+# scheduling (serving/slo.py) — admission reordering, per-tenant fair share,
+# and evict-to-recompute preemption change WHEN sequences decode, never WHAT
+# they decode.
+
+def _run_slo_cell(*, paged, chunked, spec, max_batch):
+    from repro.serving.slo import attach_slo, derive_tag
+    eng = LLMEngine("m", _MCFG, max_len=256, seed=0, max_batch=max_batch,
+                    paged=paged, block_size=8,
+                    chunked_prefill=chunked, prefill_chunk=24)
+    if spec:
+        eng.enable_speculative(draft=None, k=3)
+    attach_slo({"m": eng}, preempt_cooldown_s=0.0)   # armed BEFORE prefill
+    for sid, text in _MPROMPTS:
+        eng.op_prefill([{"sid": sid, "text": text}])
+    seqs = []
+    for i, (sid, _) in enumerate(_MPROMPTS):
+        tag = derive_tag(slo="interactive" if i % 2 == 0 else "batch",
+                         tenant=f"t{i % 2}")
+        seqs.append((sid, eng.submit_decode(sid, 10, slo=tag)))
+    outs = {}
+    for sid, sq in seqs:
+        assert sq.wait(120), f"decode {sid} timed out"
+        outs[sid] = sq.result
+    stats = eng.tenant_stats()
+    eng.stop_decode_loop()
+    if paged:
+        for sid in list(eng.states):
+            eng.release(sid)
+        rep = eng.alloc.audit()
+        assert rep["leaked"] == 0 and rep["bad_free"] == 0
+    return outs, stats
+
+
+@pytest.mark.parametrize("paged,chunked,spec,max_batch", [
+    (False, False, False, 4),
+    (True, True, False, 4),
+    (True, False, True, 4),
+    # max_batch=2 < 4 sequences: admission is genuinely SLO-ordered and
+    # slot pressure exercises the fair-share / preemption paths
+    (True, False, False, 2),
+    (False, False, False, 2),
+])
+def test_matrix_mixed_slo_token_identity(paged, chunked, spec, max_batch):
+    outs, stats = _run_slo_cell(paged=paged, chunked=chunked, spec=spec,
+                                max_batch=max_batch)
+    assert outs == _baseline()
+    # both tenants' work was admitted and finished under the policy
+    assert stats["t0/interactive"]["done"] == 2
+    assert stats["t1/batch"]["done"] == 2
+
+
+# ---------------------------------------------------------------------------
 # Disaggregated prefill/decode: the paged cells re-run split across two
 # replicas — prefill lands on a prefill specialist, the sequence migrates
 # (paged KV block handoff), decode runs on a decode specialist. Token

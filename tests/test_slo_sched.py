@@ -1,0 +1,465 @@
+"""SLO-aware multi-tenant scheduling (serving/slo.py): priority
+admission ranking, fair-share ledger properties vs a brute-force
+weighted max-min oracle, paged/dense preempt->resume token identity,
+the aging starvation bound, the QueryContext.priority continuous-path
+regression, and flag-off byte-identity."""
+import itertools
+import time
+
+from repro.configs.base import get_config
+from repro.core.engine_pool import EnginePool
+from repro.engines.decode_loop import ContinuousDecodeLoop, DecodeSeq
+from repro.engines.llm_engine import LLMEngine
+from repro.engines.sim_engines import SimLLMEngine
+from repro.serving.slo import (BATCH, INTERACTIVE, FairShareLedger,
+                               SLOPolicy, SLOTag, attach_slo, derive_tag,
+                               pool_tenant_stats)
+
+
+def _wait(pred, timeout=30.0):
+    t0 = time.time()
+    while time.time() - t0 < timeout:
+        if pred():
+            return True
+        time.sleep(0.002)
+    return False
+
+
+# ---------------------------------------------------------------------------
+# FairShareLedger vs a brute-force weighted max-min oracle
+
+def _oracle_unweighted_maxmin(capacity, demand):
+    """Exact integer max-min optimum for EQUAL weights: the ascending-
+    sorted share vector that is lexicographically maximal (leximin) over
+    all feasible allocations.  With equal weights progressive filling is
+    plain round-robin and realizes exactly this optimum."""
+    tenants = sorted(t for t, d in demand.items() if d > 0)
+    if not tenants or capacity <= 0:
+        return None
+    total = min(capacity, sum(demand[t] for t in tenants))
+    best = None
+    for alloc in itertools.product(
+            *(range(demand[t] + 1) for t in tenants)):
+        if sum(alloc) != total:
+            continue
+        vec = sorted(alloc)
+        if best is None or vec > best:
+            best = vec
+    return best
+
+
+def test_shares_match_unweighted_maxmin_oracle():
+    """Exhaustive small grid + assorted larger cells: the ledger's
+    shares equal the brute-force integer leximin optimum whenever
+    weights are equal."""
+    cases = [(4, {"a": 3, "b": 3}), (5, {"a": 1, "b": 9}),
+             (8, {"a": 4, "b": 4, "c": 4}), (7, {"a": 5, "b": 2, "c": 6}),
+             (3, {"a": 2, "b": 2, "c": 2}), (8, {"a": 2, "b": 0, "c": 7})]
+    for cap in (1, 2, 3, 5):
+        for da in range(0, 4):
+            for db in range(0, 4):
+                cases.append((cap, {"a": da, "b": db}))
+    for cap, demand in cases:
+        led = FairShareLedger(cap)
+        share = led.shares(demand)
+        # feasibility invariants
+        assert sum(share.values()) == min(
+            cap, sum(d for d in demand.values() if d > 0))
+        for t, s in share.items():
+            assert 0 <= s <= demand[t]
+        want = _oracle_unweighted_maxmin(cap, demand)
+        if want is None:
+            assert sum(share.values()) == 0
+            continue
+        assert sorted(share.values()) == want, (cap, demand, share)
+
+
+def test_weighted_shares_proportional_and_monotone():
+    """Weighted filling is weighted round-robin: under saturated demand
+    shares track ``capacity * w / sum(w)`` within one unit, and raising
+    a tenant's weight never lowers its share (all else equal)."""
+    for cap in (4, 6, 9, 12):
+        for wa, wb in ((1.0, 1.0), (1.0, 2.0), (1.0, 3.0), (2.0, 3.0)):
+            led = FairShareLedger(cap, {"a": wa, "b": wb})
+            share = led.shares({"a": cap, "b": cap})   # both saturated
+            assert sum(share.values()) == cap
+            tot = wa + wb
+            assert abs(share["a"] - cap * wa / tot) <= 1.0, (cap, wa, wb)
+            assert abs(share["b"] - cap * wb / tot) <= 1.0, (cap, wa, wb)
+    # monotonicity in weight
+    prev = -1
+    for w in (0.5, 1.0, 2.0, 4.0):
+        led = FairShareLedger(6, {"a": w, "b": 1.0})
+        s = led.shares({"a": 6, "b": 6})["a"]
+        assert s >= prev
+        prev = s
+
+
+def test_may_take_work_conserving_and_bounded():
+    led = FairShareLedger(4)
+    # alone: no other tenant has unmet demand -> unlimited (work
+    # conservation never idles capacity)
+    for _ in range(4):
+        assert led.may_take("a", 1, {"a": 4})
+        led.acquire("a")
+    assert led.usage_of("a") == 4
+    # contender appears with unmet demand: a is over its 2-slot share
+    assert not led.may_take("a", 1, {"a": 5, "b": 4})
+    # b is within its share
+    assert led.may_take("b", 1, {"a": 5, "b": 4})
+    led.release("a", 3)
+    assert led.may_take("a", 1, {"a": 2, "b": 4})
+
+
+def test_ledger_release_floors_at_zero():
+    led = FairShareLedger(4)
+    led.acquire("a", 2)
+    led.release("a", 5)
+    assert led.usage_of("a") == 0
+    assert led.snapshot() == {}
+
+
+# ---------------------------------------------------------------------------
+# ranking: priority admission, aging bound, depth tie-break
+
+def _seq(cls=BATCH, prio=0, depth=0, age=0.0, sid="s"):
+    s = DecodeSeq(sid, None, 4, text_fn=lambda q: "")
+    s.slo = SLOTag(cls=cls, priority=prio, depth=depth,
+                   t_submit=time.time() - age)
+    return s
+
+
+def test_admission_order_class_priority_depth_fifo():
+    pol = SLOPolicy(slots=4, aging_s=1e9)
+    it = _seq(INTERACTIVE, sid="i")
+    hi = _seq(BATCH, prio=7, sid="hp")
+    deep = _seq(BATCH, depth=5, sid="deep")
+    old = _seq(BATCH, age=0.5, sid="old")
+    new = _seq(BATCH, sid="new")
+    order = [s.sid for s in
+             pol.admission_order([new, old, deep, hi, it])]
+    # interactive first; then batch by priority desc, depth desc, FIFO
+    assert order == ["i", "hp", "deep", "old", "new"]
+
+
+def test_aging_bound_promotes_starved_batch():
+    pol = SLOPolicy(slots=4, aging_s=0.05)
+    aged = _seq(BATCH, age=0.2, sid="aged")
+    fresh_i = _seq(INTERACTIVE, sid="i")
+    assert pol.is_urgent(aged)
+    # both urgent -> FIFO within the urgent band: the aged batch item
+    # (earlier submit) goes FIRST — batch can never starve
+    assert [s.sid for s in pol.admission_order([fresh_i, aged])] == \
+        ["aged", "i"]
+
+
+def test_derive_tag_folds_legacy_priority():
+    """Satellite regression: the QueryContext.priority knob (previously
+    only honored by legacy form_batch) maps into the SLO class that
+    orders the continuous path."""
+    assert derive_tag(priority=3).cls == INTERACTIVE
+    assert derive_tag(priority=0).cls == BATCH
+    assert derive_tag(slo="batch", priority=3).cls == BATCH  # explicit wins
+    assert derive_tag(slo="interactive").cls == INTERACTIVE
+
+
+class _FakeEngine:
+    """Minimal engine for driving loop admission without threads."""
+
+    def __init__(self, pol=None):
+        self.name = "fake"
+        self.slo = pol
+
+
+def test_loop_priority_admission_orders_continuous_path():
+    """The continuous loop's admission pass honors the rank: a
+    higher-priority later arrival is admitted before an earlier batch
+    waiter (the satellite-1 gap, closed)."""
+    pol = SLOPolicy(slots=1, aging_s=1e9)
+    loop = ContinuousDecodeLoop(_FakeEngine(pol), max_slots=1)
+    lo = _seq(BATCH, sid="lo")
+    hi = _seq(BATCH, prio=5, sid="hi")   # derive: prio>0 -> interactive
+    hi.slo = derive_tag(priority=5)
+    loop.waiting.extend([lo, hi])
+    with loop.cv:
+        expired = loop._admit_locked()
+    assert expired == []
+    assert [s.sid for s in loop.active] == ["hi"]
+    assert [s.sid for s in loop.waiting] == ["lo"]
+    # urgent waiter got the slot -> no preemption pressure recorded
+    assert not loop._slo_deferred_urgent
+
+
+def test_loop_fifo_admission_when_unarmed():
+    """Flag off (engine.slo is None): admission is the legacy FIFO
+    head-of-line pass, regardless of tags on the sequences."""
+    loop = ContinuousDecodeLoop(_FakeEngine(None), max_slots=1)
+    lo = _seq(BATCH, sid="lo")
+    hi = _seq(INTERACTIVE, prio=5, sid="hi")
+    loop.waiting.extend([lo, hi])
+    with loop.cv:
+        loop._admit_locked()
+    assert [s.sid for s in loop.active] == ["lo"]
+
+
+def test_loop_slot_fair_share_across_tenants():
+    """With both tenants demanding slots, neither may exceed its
+    max-min share: tenant a's third sequence defers while b is owed."""
+    pol = SLOPolicy(slots=4, aging_s=1e9)
+    loop = ContinuousDecodeLoop(_FakeEngine(pol), max_slots=4)
+    seqs = []
+    for i in range(4):
+        s = _seq(BATCH, sid=f"a{i}")
+        s.slo = SLOTag(cls=BATCH, tenant="ta",
+                       t_submit=time.time() - 1 + i * 1e-4)
+        seqs.append(s)
+    b0 = _seq(BATCH, sid="b0")
+    b0.slo = SLOTag(cls=BATCH, tenant="tb", t_submit=time.time())
+    loop.waiting.extend(seqs + [b0])
+    with loop.cv:
+        loop._admit_locked()
+    admitted = sorted(s.sid for s in loop.active)
+    # a gets its 2-share + work-conserving extras only AFTER b's demand
+    # is met: b0 must be among the 4 admitted
+    assert "b0" in admitted
+    assert len(loop.active) == 4
+    assert pol.slots.usage_of("tb") == 1
+
+
+# ---------------------------------------------------------------------------
+# preempt -> resume token identity (real engine, dense and paged)
+
+def _drive(eng, seq, iters):
+    for _ in range(iters):
+        before = len(seq.tokens)
+        eng.decode_iteration([seq])
+        seq.steps += max(1, len(seq.tokens) - before)
+
+
+def _preempt_resume_run(paged):
+    cfg = get_config("tiny-lite-llm")
+    kw = dict(max_len=128, seed=0, max_batch=4)
+    if paged:
+        kw.update(paged=True, block_size=8, num_blocks=64)
+
+    def fresh():
+        eng = LLMEngine("t", cfg, **kw)
+        attach_slo({"llm": eng}, preempt_cooldown_s=0.0)
+        eng.op_prefill([{"sid": "s", "text":
+                         "some moderately long prompt words here"}])
+        st = eng.states["s"]
+        seq = DecodeSeq("s", st, 10,
+                        text_fn=lambda q: eng.tok.decode(q.tokens))
+        assert eng.try_admit(seq)
+        eng.note_slot_acquired(seq)
+        return eng, seq
+
+    # baseline: 10 uninterrupted iterations
+    eng0, base = fresh()
+    _drive(eng0, base, 10)
+    baseline = list(base.tokens)
+
+    # preempted run: 4 iterations, evict-to-recompute, then finish
+    eng, seq = fresh()
+    _drive(eng, seq, 4)
+    assert eng.can_preempt(seq)
+    if paged:
+        used_before = eng.num_blocks - eng.alloc.free_blocks()
+    eng.preempt_decode(seq)
+    if paged:
+        # ALL of the sequence's blocks were freed (prompt + 4 steps)
+        assert eng.num_blocks - eng.alloc.free_blocks() < used_before
+        assert seq.state.pos == 0 and len(seq.state.table) == 0
+    # re-admission re-reserves for the whole replay horizon
+    assert eng.try_admit(seq)
+    eng.note_slot_acquired(seq)
+    _drive(eng, seq, 6)     # resume happens inside the first iteration
+    assert not seq.slo_preempted
+    assert seq.tokens == baseline, (seq.tokens, baseline)
+    # teardown parity: release and audit for leaks
+    eng.note_slot_released(seq)
+    eng.release("s")
+    eng0.note_slot_released(base)
+    eng0.release("s")
+    if paged:
+        rep = eng.alloc.audit()
+        assert rep["bad_free"] == 0 and rep["leaked"] == 0
+        assert eng.alloc.free_blocks() == eng.alloc.capacity
+    return eng.slo
+
+
+def test_preempt_resume_token_identical_dense():
+    _preempt_resume_run(paged=False)
+
+
+def test_preempt_resume_token_identical_paged():
+    _preempt_resume_run(paged=True)
+
+
+def test_can_preempt_excludes_unrecorded_sequences():
+    """A sequence whose prompt context was never recorded (prefilled
+    before the policy was armed / migrated in) must not be preempted —
+    its KV could not be rebuilt."""
+    cfg = get_config("tiny-lite-llm")
+    eng = LLMEngine("t", cfg, max_len=128, seed=0)
+    eng.op_prefill([{"sid": "s", "text": "prompt words"}])   # unarmed
+    attach_slo({"llm": eng})
+    seq = DecodeSeq("s", eng.states["s"], 4,
+                    text_fn=lambda q: eng.tok.decode(q.tokens))
+    assert not eng.can_preempt(seq)
+
+
+# ---------------------------------------------------------------------------
+# loop-driven preemption under pressure (sim engine)
+
+def test_pressure_preempts_batch_for_interactive():
+    """One decode slot, a long batch resident, an interactive arrival:
+    the loop preempts the batch sequence (evict-to-recompute), serves
+    the interactive one, then resumes the batch sequence — both outputs
+    exactly what an uncontended run would produce."""
+    eng = SimLLMEngine("llm", max_batch=1, decode_ms_per_step=20.0)
+    attach_slo({"llm": eng}, preempt_cooldown_s=0.0)
+    btag = derive_tag(slo="batch", tenant="tb")
+    itag = derive_tag(slo="interactive", tenant="ti")
+    batch = eng.submit_decode("long", 40, slo=btag)
+    expect_batch = " ".join(batch.words)
+    assert _wait(lambda: batch.t_admit is not None and batch.steps > 2)
+    inter = eng.submit_decode("quick", 4, slo=itag)
+    out_i = inter.wait(60)
+    out_b = batch.wait(60)
+    loop = eng._decode_loop
+    assert [p[0] for p in loop.preemptions] == ["long"]
+    assert out_b == expect_batch      # token-identical despite preemption
+    assert out_i == " ".join(inter.words)
+    # interactive finished while the batch sequence was still out
+    assert inter.t_done <= batch.t_done
+    stats = eng.tenant_stats()
+    assert stats["tb/batch"]["preempted"] == 1
+    assert stats["ti/interactive"]["admitted"] == 1
+    assert stats["ti/interactive"]["ttft_p99_ms"] > 0
+    eng.stop_decode_loop()
+
+
+def test_preemption_hysteresis_cap():
+    """A sequence preempted max_preempts_per_seq times runs to
+    completion — the governor refuses to nominate it again."""
+    pol = SLOPolicy(slots=1, aging_s=1e9, preempt_cooldown_s=0.0,
+                    max_preempts_per_seq=1)
+    v = _seq(BATCH, sid="v")
+    v.t_admit = time.time()
+    assert pol.plan_preemption([v]) == [v]
+    assert pol.plan_preemption([v]) == []      # cap reached
+
+
+def test_preemption_cooldown():
+    pol = SLOPolicy(slots=1, aging_s=1e9, preempt_cooldown_s=30.0,
+                    max_preempts_per_seq=10)
+    a, b = _seq(BATCH, sid="a"), _seq(BATCH, sid="b")
+    a.t_admit = b.t_admit = time.time()
+    assert pol.plan_preemption([a, b]) != []
+    assert pol.plan_preemption([a, b]) == []   # inside the cooldown
+
+
+def test_urgent_sequences_never_preempted():
+    pol = SLOPolicy(slots=1, aging_s=1e9, preempt_cooldown_s=0.0)
+    i = _seq(INTERACTIVE, sid="i")
+    i.t_admit = time.time()
+    assert pol.plan_preemption([i]) == []
+
+
+# ---------------------------------------------------------------------------
+# per-tenant stats + pool surfaces
+
+def test_tenant_stats_rollup_across_pool():
+    pool = EnginePool.replicate(SimLLMEngine("llm", max_batch=4), 2,
+                                name="llm")
+    attach_slo({"llm": pool})
+    t0 = derive_tag(slo="interactive", tenant="t0")
+    t1 = derive_tag(slo="batch", tenant="t1")
+    pool[0].submit_decode("a", 3, slo=t0).wait(60)
+    pool[1].submit_decode("b", 3, slo=t1).wait(60)
+    merged = pool.tenant_stats()
+    assert merged["t0/interactive"]["done"] == 1
+    assert merged["t1/batch"]["done"] == 1
+    # name->engine mapping rollup (serve.py exit surface)
+    top = pool_tenant_stats({"llm": pool})
+    assert top == merged
+    for r in pool:
+        r.stop_decode_loop()
+
+
+def test_tenant_aware_pool_routing():
+    """Among equally-free replicas the router prefers the one where the
+    tenant holds fewer decode slots; tenant=None is byte-identical to
+    the legacy key."""
+    pool = EnginePool.replicate(SimLLMEngine("llm", max_batch=4), 2,
+                                name="llm")
+    attach_slo({"llm": pool})
+    assert pool.least_loaded_decode() == 0            # legacy tie -> min
+    pool[0].slo.slots.acquire("t0", 2)
+    assert pool.least_loaded_decode(tenant="t0") == 1
+    assert pool.least_loaded_decode(tenant="t1") == 0
+    assert pool.least_loaded_decode() == 0            # unchanged unarmed
+
+
+# ---------------------------------------------------------------------------
+# flag-off byte-identity
+
+def test_flag_off_paths_untouched():
+    """Without attach_slo every surface reports the pre-SLO shape:
+    admission is FIFO, no stats, no preemptions, routing identical."""
+    eng = SimLLMEngine("llm", max_batch=2, decode_ms_per_step=5.0)
+    assert eng.slo is None
+    tag = derive_tag(slo="interactive", tenant="t0")
+    a = eng.submit_decode("a", 4, slo=tag)     # tags carried, ignored
+    b = eng.submit_decode("b", 4)
+    a.wait(60)
+    b.wait(60)
+    assert eng.tenant_stats() == {}
+    assert eng._decode_loop.preemptions == []
+    admitted = [s for s, _ in eng._decode_loop.admissions]
+    assert admitted == ["a", "b"]              # FIFO
+    eng.stop_decode_loop()
+
+
+def test_clone_does_not_inherit_policy():
+    eng = SimLLMEngine("llm", max_batch=2)
+    attach_slo({"llm": eng})
+    assert eng.slo is not None
+    assert eng.clone(1).slo is None            # armed per replica
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: runtime threads tags into the loop
+
+def test_runtime_threads_slo_metadata_to_engine():
+    from repro.core import primitives as P
+    from repro.core.primitives import Graph, Primitive
+    from repro.core.runtime import Runtime
+
+    def gen_graph():
+        g = Graph(query_id="q")
+        pre = Primitive(op=P.PREFILL, engine="llm", component="gen",
+                        consumes={"question"}, produces={"state:s"},
+                        config={"sid": "s", "instruction": "hello",
+                                "parts": [("instr", None),
+                                          ("q", "question")]})
+        dec = Primitive(op=P.DECODE, engine="llm", component="gen",
+                        consumes={"state:s"}, produces={"draft"},
+                        config={"sid": "s", "max_new": 4})
+        g.add(pre)
+        g.add(dec)
+        g.edge(pre, dec)
+        g.assign_depths()
+        return g
+
+    eng = SimLLMEngine("llm", decode_ms_per_step=5.0)
+    attach_slo({"llm": eng})
+    rt = Runtime({"llm": eng}, policy="to", continuous_batching=True)
+    ctx = rt.submit(gen_graph(), {"question": "x"}, output_key="draft",
+                    slo="interactive", tenant="acme")
+    assert ctx.done.wait(60)
+    assert ctx.error is None
+    stats = eng.tenant_stats()
+    assert stats["acme/interactive"]["done"] == 1
+    rt.shutdown()
