@@ -20,9 +20,10 @@ def main() -> None:
     from benchmarks import (fig1_breakdown, fig4_batching, fig8_end_to_end,
                             fig9_colocation, fig10_ablation_graph,
                             fig11_ablation_sched, fig12_critical_path,
-                            fig_disagg, fig_fault_tolerance, fig_paged_kv,
-                            fig_radix_cache, fig_slo, fig_spec_decode,
-                            instances_scaling, roofline, table3_prefill)
+                            fig_disagg, fig_fault_tolerance, fig_overload,
+                            fig_paged_kv, fig_radix_cache, fig_slo,
+                            fig_spec_decode, instances_scaling, roofline,
+                            table3_prefill)
 
     sections = [
         ("fig1_breakdown", lambda: fig1_breakdown.run()),
@@ -37,6 +38,7 @@ def main() -> None:
         ("chunked_prefill", lambda: table3_prefill.run_chunked()),
         ("fig_disagg", lambda: fig_disagg.run()),
         ("fig_fault_tolerance", lambda: fig_fault_tolerance.run()),
+        ("fig_overload", lambda: fig_overload.run()),
         ("fig_paged_kv", lambda: fig_paged_kv.run()),
         ("fig_radix_cache", lambda: fig_radix_cache.run()),
         ("fig_slo", lambda: fig_slo.run()),

@@ -75,7 +75,8 @@ def naive_rag(engines, *, num_chunks: int = 32, top_k: int = 3,
                   config={"top_k": top_k, "num_queries": 1})
     gen = Node("llm_generate", "core_llm", name="synthesize",
                config={"mode": "tree", "num_context": tree_k,
-                       "context_key": "retrieved"})
+                       "context_key": "retrieved",
+                       "degrade": {"min_new": 8}})
     chunk >> index >> qemb >> search >> gen
     app.update_template([chunk, index, qemb, search, gen])
     return app
@@ -95,13 +96,16 @@ def advanced_rag(engines, *, num_chunks: int = 32, num_expanded: int = 3,
                 config={"in_key": "expanded_queries",
                         "num_queries": num_expanded})
     search = Node("vector_search", "vectordb",
-                  config={"top_k": search_k, "num_queries": num_expanded})
+                  config={"top_k": search_k, "num_queries": num_expanded,
+                          "degrade": {"min_top_k": 2}})
     rerank = Node("rerank", "rerank",
                   config={"top_k": top_k,
-                          "num_candidates": search_k * num_expanded})
+                          "num_candidates": search_k * num_expanded,
+                          "degrade": {"skippable": True, "min_top_k": 1}})
     gen = Node("llm_generate", "core_llm", name="synthesize",
                config={"mode": "refine", "num_context": top_k,
-                       "context_key": "top_chunks"})
+                       "context_key": "top_chunks",
+                       "degrade": {"min_new": 8, "chunk_cap": 64}})
     chunk >> index >> expand >> qemb >> search >> rerank >> gen
     app.update_template([chunk, index, expand, qemb, search, rerank, gen])
     return app
@@ -115,7 +119,7 @@ def search_gen(engines, *, web_k: int = 4) -> APP:
     sapi = Node("search_api", "search_api", config={"top_k": web_k})
     gen = Node("llm_generate", "core_llm", name="synthesize",
                config={"mode": "oneshot", "context_key": "web_results",
-                       "max_new": 32})
+                       "max_new": 32, "degrade": {"min_new": 8}})
     judge >> sapi >> gen
     app.update_template([judge, sapi, gen])
     return app
@@ -134,9 +138,11 @@ def contextual_retrieval(engines, *, num_chunks: int = 32, search_k: int = 8,
     search = Node("vector_search", "vectordb",
                   config={"top_k": search_k, "num_queries": 1})
     rerank = Node("rerank", "rerank",
-                  config={"top_k": top_k, "num_candidates": search_k})
+                  config={"top_k": top_k, "num_candidates": search_k,
+                          "degrade": {"skippable": True, "min_top_k": 1}})
     gen = Node("llm_generate", "core_llm", name="synthesize",
-               config={"mode": "oneshot", "context_key": "top_chunks"})
+               config={"mode": "oneshot", "context_key": "top_chunks",
+                       "degrade": {"min_new": 8}})
     chunk >> ctx >> index >> qemb >> search >> rerank >> gen
     app.update_template([chunk, ctx, index, qemb, search, rerank, gen])
     return app

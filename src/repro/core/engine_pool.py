@@ -296,6 +296,12 @@ class EnginePool:
     def loads(self) -> List[float]:
         return [self.load(i) for i in range(len(self.replicas))]
 
+    def outstanding_tokens(self) -> float:
+        """Total outstanding token-work across the pool (queued +
+        in-flight + discounted resident) — the queue-backlog signal the
+        overload layer's admission controller reads at the front door."""
+        return float(sum(self.loads()))
+
     def __repr__(self):
         return f"<EnginePool {self.name} x{len(self.replicas)}>"
 

@@ -73,6 +73,37 @@ def _prompt_text(prim, store) -> str:
     return " ".join(x for x in pieces if x)
 
 
+def _overload_plan(prim, ctx):
+    """Degradation overrides for one primitive of one query — None on
+    every off path (no overload manager / degradation disabled / ladder
+    at level 0 / no annotation), which keeps execution token-identical.
+    Cached per (query, pid): the brown-out ladder may move between
+    calls, but one primitive must see ONE consistent decision."""
+    ov = getattr(ctx, "overload", None)
+    if ov is None:
+        return None
+    plans = getattr(ctx, "_ov_plans", None)
+    if plans is None:
+        plans = ctx._ov_plans = {}
+    if prim.pid not in plans:
+        plans[prim.pid] = ov.degrade_plan(prim, ctx)
+    return plans[prim.pid]
+
+
+def _degraded_max_new(prim, ctx, default: int) -> int:
+    plan = _overload_plan(prim, ctx)
+    if plan and "max_new" in plan:
+        return plan["max_new"]
+    return default
+
+
+def _degraded_top_k(prim, ctx, default: int) -> int:
+    plan = _overload_plan(prim, ctx)
+    if plan and "top_k" in plan:
+        return plan["top_k"]
+    return default
+
+
 def decode_entries(prim, ctx) -> List[tuple]:
     """(sid, max_new) per sequence of one decode task — shared by the
     loop dispatch below and the scheduler's disaggregated handoff (which
@@ -82,11 +113,13 @@ def decode_entries(prim, ctx) -> List[tuple]:
     if prim.config.get("per_item_seq"):
         rng = prim.config.get("item_range")
         lo = rng[0] if rng else 0
+        mn = _degraded_max_new(prim, ctx, prim.config.get("max_new", 12))
         for i in range(prim.num_requests):
-            entries.append((_sid(prim, ctx, lo + i),
-                            prim.config.get("max_new", 12)))
+            entries.append((_sid(prim, ctx, lo + i), mn))
     else:
-        entries.append((_sid(prim, ctx), prim.config.get("max_new", 24)))
+        entries.append((_sid(prim, ctx),
+                        _degraded_max_new(prim, ctx,
+                                          prim.config.get("max_new", 24))))
     return entries
 
 
@@ -120,7 +153,8 @@ def _slo_tag(task, engine):
                       priority=getattr(ctx, "priority", 0),
                       tenant=getattr(ctx, "tenant", "default"),
                       depth=task.prim.depth,
-                      t_submit=ctx.t_submit)
+                      t_submit=ctx.t_submit,
+                      deadline=getattr(ctx, "deadline", None))
 
 
 def rebuild_full_prompt(engine_name: str, ctx, sid: str):
@@ -223,9 +257,11 @@ def execute_batch(engine, tasks: List):
             vecs = qsrc["vectors"] if isinstance(qsrc, dict) else qsrc
             vecs = np.atleast_2d(np.asarray(vecs))
             spans.append((len(payload), len(payload) + len(vecs)))
+            top_k = _degraded_top_k(t.prim, t.ctx,
+                                    t.prim.config.get("top_k", 3))
             for v in vecs:
                 payload.append({"collection": t.ctx.qid, "query_vec": v,
-                                "top_k": t.prim.config.get("top_k", 3)})
+                                "top_k": top_k})
         res = engine.op_search(payload)
         for t, (a, b) in zip(tasks, spans):
             hits = [h for r in res[a:b] for h in r]
@@ -235,7 +271,7 @@ def execute_batch(engine, tasks: List):
         return
 
     if op == P.RERANKING:
-        payload = []
+        payload, ranked = [], []
         for t in tasks:
             cands = []
             for k in t.prim.consumes:
@@ -247,11 +283,23 @@ def execute_batch(engine, tasks: List):
                 if c["text"] not in seen:
                     seen.add(c["text"])
                     uniq.append(c)
+            plan = _overload_plan(t.prim, t.ctx) or {}
+            top_k = plan.get("top_k", t.prim.config.get("top_k", 3))
+            if plan.get("skip"):
+                # degraded passthrough: forward the first top_k deduped
+                # candidates unscored — graph shape and store layout are
+                # preserved, only the scoring pass is shed
+                r = uniq[:top_k]
+                main = _out_key(t.prim)
+                t.ctx.store[main] = r
+                _write_slots(t.ctx.store, t.prim, main, r)
+                continue
+            ranked.append(t)
             payload.append({"question": t.ctx.store.get("question", ""),
                             "candidates": uniq,
-                            "top_k": t.prim.config.get("top_k", 3)})
-        res = engine.op_rerank(payload)
-        for t, r in zip(tasks, res):
+                            "top_k": top_k})
+        res = engine.op_rerank(payload) if payload else []
+        for t, r in zip(ranked, res):
             main = _out_key(t.prim)
             t.ctx.store[main] = r
             _write_slots(t.ctx.store, t.prim, main, r)
@@ -294,14 +342,17 @@ def execute_batch(engine, tasks: List):
                 n_items = prim.num_requests
                 lo = src_prefill_range[0] if src_prefill_range else 0
                 spans.append((len(payload), len(payload) + n_items))
+                mn = _degraded_max_new(prim, t.ctx,
+                                       prim.config.get("max_new", 12))
                 for i in range(n_items):
                     payload.append({"sid": _sid(prim, t.ctx, lo + i),
-                                    "max_new": prim.config.get("max_new",
-                                                               12)})
+                                    "max_new": mn})
             else:
                 spans.append((len(payload), len(payload) + 1))
                 payload.append({"sid": _sid(prim, t.ctx),
-                                "max_new": prim.config.get("max_new", 24)})
+                                "max_new": _degraded_max_new(
+                                    prim, t.ctx,
+                                    prim.config.get("max_new", 24))})
                 if t.stream is not None:
                     slot_streams[len(payload) - 1] = t.stream
         if slot_streams and "on_chunk" in inspect.signature(
@@ -436,6 +487,11 @@ def submit_prefill_task(engine, task, done, on_fail=None, ft=None):
             p = {**p, "slo": tag}
         job = eng.submit_prefill(p,
                                  on_done=lambda job, j=j: job_done(j, job))
+        plan = _overload_plan(prim, ctx)
+        if plan and plan.get("chunk_cap"):
+            # degraded mode: the loop lands smaller chunks for this job
+            # (best-effort — a chunk already taken stays at full size)
+            job.chunk_cap = int(plan["chunk_cap"])
         if ft is not None:
             ft.note_submitted(j, job)
 

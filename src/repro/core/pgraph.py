@@ -21,10 +21,13 @@ _sid = itertools.count()
 
 
 def _llm_seq(g: Graph, comp: Node, *, parts, out_key, max_new, num_items=1,
-             splittable=False, consumes_extra=(), instruction=None):
+             splittable=False, consumes_extra=(), instruction=None,
+             degrade=None):
     """Prefill + Decode primitive pair for one LLM sequence.
     parts: ordered list of (part_name, data_key_or_None) — None means the
-    part is static text available at query arrival (instruction etc.)."""
+    part is static text available at query arrival (instruction etc.).
+    ``degrade`` (optional dict) annotates both primitives with their
+    graceful-degradation contract (overload layer: min_new, chunk_cap)."""
     sid = f"s{next(_sid)}"
     pf_consumes = {k for _, k in parts if k is not None}
     pf = g.add(Primitive(
@@ -40,6 +43,9 @@ def _llm_seq(g: Graph, comp: Node, *, parts, out_key, max_new, num_items=1,
         splittable=splittable,
         config={"sid": sid, "state_v": 2, "out_key": out_key,
                 "max_new": max_new, "num_items": num_items}))
+    if degrade:
+        pf.config["degrade"] = dict(degrade)
+        dc.config["degrade"] = dict(degrade)
     g.edge(pf, dc)
     return pf, dc
 
@@ -89,6 +95,8 @@ def decompose_component(g: Graph, comp: Node, C: dict,
             batchable=True, num_requests=cc.get("num_queries", 1),
             config={"top_k": cc.get("top_k", 3), "items_key": "query_vecs",
                     "itemizable": True}))
+        if cc.get("degrade"):
+            n.config["degrade"] = dict(cc["degrade"])
         return n, n
 
     if kind == "rerank":
@@ -97,6 +105,8 @@ def decompose_component(g: Graph, comp: Node, C: dict,
             consumes={"retrieved", "question"}, produces={"top_chunks"},
             batchable=True, num_requests=cc.get("num_candidates", 16),
             config={"top_k": cc.get("top_k", 3)}))
+        if cc.get("degrade"):
+            n.config["degrade"] = dict(cc["degrade"])
         return n, n
 
     if kind == "llm_expand":
@@ -106,7 +116,8 @@ def decompose_component(g: Graph, comp: Node, C: dict,
             parts=[("instruction", None), ("question", "question")],
             out_key="expanded_queries", max_new=cc.get("max_new", 24),
             num_items=k, splittable=(comp.anno == "splittable"),
-            instruction=cc.get("instruction", INSTRUCTIONS["expand"]))
+            instruction=cc.get("instruction", INSTRUCTIONS["expand"]),
+            degrade=cc.get("degrade"))
         return pf, dc
 
     if kind == "llm_judge":
@@ -160,7 +171,8 @@ def decompose_component(g: Graph, comp: Node, C: dict,
                 parts=[("instruction", None), ("question", "question"),
                        ("context", ctx_key)],
                 out_key="answer", max_new=cc.get("max_new", 32),
-                instruction=cc.get("instruction", INSTRUCTIONS["oneshot"]))
+                instruction=cc.get("instruction", INSTRUCTIONS["oneshot"]),
+                degrade=cc.get("degrade"))
             return pf, dc
         if mode == "refine":
             head = None
@@ -175,7 +187,8 @@ def decompose_component(g: Graph, comp: Node, C: dict,
                     g, comp, parts=parts,
                     out_key="answer" if i == k - 1 else f"answer@{i}",
                     max_new=cc.get("max_new", 32),
-                    instruction=cc.get("instruction", INSTRUCTIONS["refine"]))
+                    instruction=cc.get("instruction", INSTRUCTIONS["refine"]),
+                    degrade=cc.get("degrade"))
                 if head is None:
                     head = pf
                 if prev_dc is not None:
@@ -193,7 +206,8 @@ def decompose_component(g: Graph, comp: Node, C: dict,
                             ctx_key)],
                     out_key=f"leaf_answer@{i}",
                     max_new=cc.get("max_new", 24),
-                    instruction=cc.get("instruction", INSTRUCTIONS["tree"]))
+                    instruction=cc.get("instruction", INSTRUCTIONS["tree"]),
+                    degrade=cc.get("degrade"))
                 leaves.append((pf, dc))
             agg = g.add(Primitive(
                 op=P.AGGREGATE, engine="control", component=comp.name,
@@ -206,7 +220,8 @@ def decompose_component(g: Graph, comp: Node, C: dict,
                 parts=[("instruction", None), ("question", "question"),
                        ("drafts", "leaf_answers")],
                 out_key="answer", max_new=cc.get("max_new", 32),
-                instruction=cc.get("instruction", INSTRUCTIONS["combine"]))
+                instruction=cc.get("instruction", INSTRUCTIONS["combine"]),
+                degrade=cc.get("degrade"))
             g.edge(agg, pf)
             return leaves[0][0], dc
         raise ValueError(f"unknown llm_generate mode {mode}")

@@ -72,6 +72,10 @@ class QueryContext:
         self.done = threading.Event()
         self.t_submit = time.time()
         self.t_done: Optional[float] = None
+        # absolute query deadline (stamped by the overload layer; None =
+        # no deadline). The FT watchdog, SLO urgency test and the
+        # degradation ladder all derive their clocks from this one value.
+        self.deadline: Optional[float] = None
         self.node_spans: Dict[str, tuple] = {}     # pid -> (t0, t1)
         self.sids: set = set()
         self.lock = threading.Lock()
@@ -313,7 +317,7 @@ class _ReplicaWorker(threading.Thread):
             batch, tokens = item
             pool.note_started(self.idx, tokens)
             try:
-                self.sched.executor(self.engine, batch)
+                fire = self.sched._execute_routed(self, batch, tokens)
             except Exception as e:  # noqa: BLE001
                 if not self.sched._retry_routed(self, batch, tokens, e):
                     _fail_batch(batch,
@@ -322,6 +326,8 @@ class _ReplicaWorker(threading.Thread):
                 continue
             finally:
                 pool.note_finished(self.idx, tokens)
+            if not fire:
+                continue   # hedge machinery already fired completions
             for t in batch:
                 try:
                     self.sched.on_complete(t)
@@ -360,13 +366,17 @@ class PooledEngineScheduler(threading.Thread):
 
     def __init__(self, pool: EnginePool, executor, policy: str = "topo",
                  period: float = 0.002, continuous: bool = False,
-                 fault_tolerance=None):
+                 fault_tolerance=None, overload=None):
         super().__init__(daemon=True)
         self.pool = pool
         self.engine = pool[0]          # profile source (max_batch, kind)
         self.executor = executor
         self.policy = policy
         self.period = period
+        # overload layer (OverloadManager): hedged dispatch for
+        # idempotent non-LLM routed batches. None (the default) keeps
+        # _execute_routed a plain executor call — byte-identical.
+        self.overload = overload
         self.continuous = continuous and hasattr(pool[0], "submit_decode")
         self.chunked = self.continuous and chunked_prefill_enabled(pool[0])
         # fault tolerance (FTConfig): a RecoveryManager owns replica
@@ -649,6 +659,111 @@ class PooledEngineScheduler(threading.Thread):
                                 tokens))
             self.workers[idx].q.put((tasks, tokens))
 
+    # -- hedged execution of routed batches ---------------------------------
+    def _hedge_delay(self, batch: List[NodeTask]):
+        """Backup-issue delay for a routed batch, or None not to hedge:
+        requires an armed overload manager, an idempotent op, >1 healthy
+        replica and an armed trigger (fixed or percentile)."""
+        ov = self.overload
+        if ov is None or len(self.pool) < 2:
+            return None
+        from repro.serving.overload import HEDGEABLE_OPS
+        if batch[0].prim.op not in HEDGEABLE_OPS:
+            return None
+        return ov.hedge.trigger_delay(batch[0].prim.op)
+
+    def _execute_routed(self, worker, batch: List[NodeTask],
+                        tokens: int) -> bool:
+        """Run one routed batch on its replica, optionally hedged.
+        Returns True when the CALLER should fire the completion hooks
+        (plain path / primary won), False when the hedge machinery
+        already fired them (backup won)."""
+        op = batch[0].prim.op
+        ov = self.overload
+        delay = self._hedge_delay(batch)
+        if delay is None:
+            t0 = time.time()
+            self.executor(worker.engine, batch)
+            if ov is not None:
+                from repro.serving.overload import HEDGEABLE_OPS
+                if op in HEDGEABLE_OPS:
+                    ov.hedge.note_latency(op, time.time() - t0)
+            return True
+        # hedged: first-result-wins. Both executions write identical
+        # values into the query store (the ops are deterministic and
+        # idempotent), so the "winner" decides only WHO fires the
+        # completion hooks — exactly once, guarded by `st`.
+        st = {"winner": None, "launched": False}
+        lock = threading.Lock()
+        primary_done = threading.Event()
+
+        def _fire():
+            for t in batch:
+                try:
+                    self.on_complete(t)
+                except Exception as e:  # noqa: BLE001
+                    _fail_batch([t], e)
+
+        def _backup():
+            if primary_done.wait(delay):
+                return                      # primary beat the trigger
+            cands = [i for i in self.pool.healthy_indices()
+                     if i != worker.idx]
+            if not cands:
+                return
+            bidx = self.pool.least_loaded(cands)
+            with lock:
+                if st["winner"] is not None:
+                    return
+                st["launched"] = True
+            ov.hedge.note_issued()
+            self.pool.note_queued(bidx, tokens)
+            self.pool.note_started(bidx, tokens)
+            try:
+                self.executor(self.pool[bidx], batch)
+            except Exception:  # noqa: BLE001
+                # a hedge failure is NEVER double-counted: no health
+                # mark, no retry charge — the primary path stands alone
+                ov.hedge.note_backup_failure()
+                return
+            finally:
+                self.pool.note_finished(bidx, tokens)
+            with lock:
+                if st["winner"] is not None:
+                    ov.hedge.note_loss()    # primary already won
+                    return
+                st["winner"] = "backup"
+            ov.hedge.note_win()
+            _fire()
+
+        th = threading.Thread(target=_backup, daemon=True,
+                              name=f"hedge:{batch[0].ctx.qid}:{op}")
+        th.start()
+        t0 = time.time()
+        try:
+            self.executor(worker.engine, batch)
+        except Exception:
+            primary_done.set()
+            with lock:
+                launched = st["launched"]
+            if launched:
+                # the backup may still rescue the batch — wait for its
+                # verdict before failing the tasks
+                th.join(timeout=120)
+                with lock:
+                    if st["winner"] == "backup":
+                        ov.hedge.note_rescue()
+                        return False   # hedge completed the batch
+            raise
+        primary_done.set()
+        ov.hedge.note_latency(op, time.time() - t0)
+        with lock:
+            if st["winner"] is not None:
+                ov.hedge.note_loss()       # backup beat us; discard ours
+                return False
+            st["winner"] = "primary"
+        return True
+
     def _retry_routed(self, worker, batch: List[NodeTask], tokens: int,
                       err: Exception) -> bool:
         """A routed (run-to-completion) batch blew up on a replica.
@@ -747,13 +862,18 @@ class Runtime:
     def __init__(self, engines: Dict[str, Any], policy: str = "topo",
                  streaming: bool = False,
                  continuous_batching: bool = False,
-                 fault_tolerance=None):
+                 fault_tolerance=None, overload=None):
         from repro.core.executors import execute_batch
         self.engines = engines
         self.policy = policy
         self.streaming = streaming
         self.continuous_batching = continuous_batching
         self.fault_tolerance = fault_tolerance
+        # overload layer (serving/overload.OverloadManager): front-door
+        # admission control + deadline stamping here, hedged dispatch in
+        # the pooled schedulers, degradation hooks in the executors.
+        # None (the default) keeps every path byte-identical.
+        self.overload = overload
         self.scheds: Dict[str, Any] = {}
         for name, eng in engines.items():
             if isinstance(eng, list):
@@ -761,7 +881,14 @@ class Runtime:
             if isinstance(eng, EnginePool):
                 s = PooledEngineScheduler(eng, execute_batch, policy,
                                           continuous=continuous_batching,
-                                          fault_tolerance=fault_tolerance)
+                                          fault_tolerance=fault_tolerance,
+                                          overload=overload)
+                if overload is not None and \
+                        hasattr(eng[0], "submit_decode"):
+                    # LLM pools feed the admission controller's queue-
+                    # delay estimate (non-LLM pools are never the
+                    # capacity bottleneck the front door guards)
+                    overload.admission.register_pool(eng)
             else:
                 s = EngineScheduler(eng, execute_batch, policy,
                                     continuous=continuous_batching)
@@ -779,6 +906,19 @@ class Runtime:
                            slo=slo, tenant=tenant)
         with self._lock:
             self.queries.append(ctx)
+        if self.overload is not None:
+            from repro.serving.overload import query_class
+            cls = query_class(slo, priority)
+            self.overload.stamp(ctx, graph, cls)
+            err = self.overload.admit(ctx, cls)
+            if err is not None:
+                # load shed at the front door: the query never consumes
+                # engine capacity — structured error, done immediately
+                ctx.indegree = {}
+                ctx.error = err
+                ctx.t_done = time.time()
+                ctx.done.set()
+                return ctx
         ctx.indegree = {pid: len(n.parents)
                         for pid, n in graph.nodes.items()}
         for n in graph.roots():
@@ -863,6 +1003,9 @@ class Runtime:
             return
         ctx.t_done = time.time()
         ctx.done.set()
+        if self.overload is not None:
+            # feed the admission controller's service-rate estimate
+            self.overload.note_query_done(ctx)
         # release LLM sequence state on every replica of every pool
         for name, eng in self.engines.items():
             for inst in replicas_of(eng):

@@ -25,13 +25,14 @@ class Teola:
     def __init__(self, app: APP, engines: Dict, *, policy: str = "topo",
                  passes=ALL_PASSES, streaming: bool = False,
                  continuous_batching: bool = False,
-                 fault_tolerance=None):
+                 fault_tolerance=None, overload=None):
         self.app = app
         self.engines = engines
         self.passes = passes
         self.runtime = Runtime(engines, policy=policy, streaming=streaming,
                                continuous_batching=continuous_batching,
-                               fault_tolerance=fault_tolerance)
+                               fault_tolerance=fault_tolerance,
+                               overload=overload)
         self._egraph_cache: Dict[str, Graph] = {}
 
     def _cache_key(self, query: dict):

@@ -37,7 +37,17 @@ class EngineSpec:
 
 
 class Node:
-    """A workflow template component."""
+    """A workflow template component.
+
+    config may carry a ``degrade`` annotation — the component's graceful-
+    degradation contract, activated stepwise by the overload layer's
+    brown-out ladder (serving/overload.py) and ignored otherwise:
+      ``{"min_top_k": k}``   retrieval/rerank top_k may shrink to k (L1)
+      ``{"skippable": True}`` the component may be skipped outright (L2,
+                             rerank: unscored candidate passthrough)
+      ``{"min_new": m}``      generation max_new may halve down to m (L3)
+      ``{"chunk_cap": c}``    chunked prefill capped to c tokens/pass (L3)
+    """
 
     def __init__(self, kind: str, engine: str, name: Optional[str] = None,
                  anno: Optional[str] = None, config: Optional[dict] = None):

@@ -291,7 +291,14 @@ class ContinuousDecodeLoop(threading.Thread):
         for job in queue:
             if room <= 0:
                 break
-            n = min(self.prefill_chunk, job.remaining(), room)
+            limit = self.prefill_chunk
+            cap = getattr(job, "chunk_cap", 0)
+            if cap:
+                # degraded mode (overload layer): this job's chunks are
+                # capped below the engine-wide chunk size, trading its
+                # own prefill latency for co-resident decode TBT
+                limit = min(limit, int(cap))
+            n = min(limit, job.remaining(), room)
             if n > 0:
                 items.append((job, n))
                 room -= n

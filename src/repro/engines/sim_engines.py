@@ -609,12 +609,22 @@ class SimEmbeddingEngine:
         self.setup = setup_ms
         self.per_req = per_req_ms
         self.stats = {"requests": 0, "calls": 0, "busy_ms": 0.0}
+        # fault tolerance / overload: injector hook + replica health so
+        # pooled encoders participate in burst studies and hedging
+        self.faults = None
+        self.health = "healthy"
+
+    def _fault(self, point: str):
+        inj = self.faults
+        if inj is not None:
+            inj.fire(self, point)
 
     def clone(self, idx: int = 1) -> "SimEmbeddingEngine":
         return SimEmbeddingEngine(f"{self.name}.r{idx}", self.max_batch,
                                   self.setup, self.per_req)
 
     def op_embed(self, tasks):
+        self._fault("encode")
         n = sum(len(t["texts"]) for t in tasks)
         # setup cost per underlying model call (ceil(n/max_batch) calls)
         dur = self.setup * max(1, -(-n // self.max_batch)) + self.per_req * n
@@ -639,12 +649,20 @@ class SimRerankEngine:
         self.setup = setup_ms
         self.per_pair = per_pair_ms
         self.stats = {"requests": 0, "calls": 0, "busy_ms": 0.0}
+        self.faults = None
+        self.health = "healthy"
+
+    def _fault(self, point: str):
+        inj = self.faults
+        if inj is not None:
+            inj.fire(self, point)
 
     def clone(self, idx: int = 1) -> "SimRerankEngine":
         return SimRerankEngine(f"{self.name}.r{idx}", self.max_batch,
                                self.setup, self.per_pair)
 
     def op_rerank(self, tasks):
+        self._fault("encode")
         n = sum(len(t["candidates"]) for t in tasks)
         dur = self.setup * max(1, -(-n // self.max_batch)) + self.per_pair * n
         _sleep(dur)
@@ -690,7 +708,8 @@ def build_sim_engines(*, llm_max_batch: int = 8, core_decode_ms: float = 25.0,
                       prefix_cache: str = "none",
                       disaggregate: bool = False,
                       prefill_replicas: int = 1,
-                      decode_replicas: int = 1) -> dict:
+                      decode_replicas: int = 1,
+                      encoder_instances: int = 1) -> dict:
     """Engine set with paper-calibrated profiles. lite_llm (gemma-2-2B
     contextualizer / llama-7B judge) is ~4x faster than the core LLM.
     llm_instances>1 puts the LLM engines behind EnginePools (the paper's
@@ -701,7 +720,9 @@ def build_sim_engines(*, llm_max_batch: int = 8, core_decode_ms: float = 25.0,
     spec_draft_cost = lite_scale). ``disaggregate`` puts each LLM behind
     a DisaggregatedEnginePool of prefill_replicas prefill specialists +
     decode_replicas decode specialists with modeled KV-handoff cost
-    (mutually exclusive with llm_instances > 1)."""
+    (mutually exclusive with llm_instances > 1). ``encoder_instances>1``
+    pools the embedding/rerank encoders too — the substrate hedged
+    dispatch needs for backup requests."""
     from repro.core.engine_pool import DisaggregatedEnginePool, EnginePool
 
     core = SimLLMEngine("core_llm", max_batch=llm_max_batch,
@@ -739,11 +760,20 @@ def build_sim_engines(*, llm_max_batch: int = 8, core_decode_ms: float = 25.0,
     if n > 1:
         core = EnginePool.replicate(core, n, name="core_llm")
         lite = EnginePool.replicate(lite, n, name="lite_llm")
+    embedding = SimEmbeddingEngine()
+    rerank = SimRerankEngine()
+    if encoder_instances > 1:
+        # pooled encoders: the hedged-dispatch substrate (a backup embed/
+        # rerank needs a second healthy replica to land on)
+        embedding = EnginePool.replicate(embedding, encoder_instances,
+                                         name="embedding")
+        rerank = EnginePool.replicate(rerank, encoder_instances,
+                                      name="rerank")
     return {
         "core_llm": core,
         "lite_llm": lite,
-        "embedding": SimEmbeddingEngine(),
-        "rerank": SimRerankEngine(),
+        "embedding": embedding,
+        "rerank": rerank,
         "vectordb": SimVectorDB(),
         "chunker": ChunkerEngine(),
         "search_api": SimSearchAPI(),

@@ -57,6 +57,19 @@ dead replicas' KV blocks are reclaimed, and in-flight sequences are
 replayed onto healthy replicas via evict-to-recompute — greedy decode
 makes the recovered output token-identical. Requests past the deadline
 fail with a structured error instead of hanging.
+--overload-control (requires --scheme Teola and --continuous-batching)
+arms the overload-control/graceful-degradation layer: per-query
+deadlines (--query-deadline) decomposed along the e-graph into
+per-primitive budgets, front-door load shedding against the estimated
+pool queue delay (--shed-queue-tokens; interactive queries keep a
+protected share), hedged dispatch of idempotent encoder/search
+primitives onto a second healthy replica (--hedge-after; needs pooled
+encoders, --encoder-instances 2 with --sim), and a brown-out
+degradation ladder (--degrade) that activates per-node degrade
+annotations — shrink top_k, skip rerank, halve max_new, cap prefill
+chunks — stepwise with hysteresis. Shed queries fail fast with a
+structured Overloaded error; all knobs off is byte-identical to the
+layer absent.
 """
 from __future__ import annotations
 
@@ -153,10 +166,10 @@ def build_parser() -> argparse.ArgumentParser:
                          "--slo-sched)")
     ap.add_argument("--fault-inject", default=None, metavar="SPEC",
                     help="deterministic fault schedule, comma-separated "
-                         "kind:engine:point:at[:duration] entries, e.g. "
-                         "crash:core_llm.r1:decode:3 — kinds: crash, "
-                         "hang, slow, migrate_fail, alloc_fail; implies "
-                         "fault tolerance (requires --continuous-"
+                         "kind:engine:point:at[:duration[:width]] entries, "
+                         "e.g. crash:core_llm.r1:decode:3 — kinds: crash, "
+                         "hang, slow, burst, migrate_fail, alloc_fail; "
+                         "implies fault tolerance (requires --continuous-"
                          "batching)")
     ap.add_argument("--request-deadline", type=float, default=None,
                     metavar="SECONDS",
@@ -166,6 +179,36 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--max-retries", type=int, default=None,
                     help="recovery attempts per request before failing "
                          "loudly (default 2; enables fault tolerance)")
+    ap.add_argument("--overload-control", action="store_true",
+                    help="overload control + graceful degradation: "
+                         "deadline propagation, admission control, hedged "
+                         "dispatch, brown-out ladder (requires --scheme "
+                         "Teola and --continuous-batching)")
+    ap.add_argument("--query-deadline", type=float, default=None,
+                    metavar="SECONDS",
+                    help="per-query end-to-end deadline, decomposed into "
+                         "per-primitive budgets along the e-graph "
+                         "(requires --overload-control)")
+    ap.add_argument("--shed-queue-tokens", type=float, default=None,
+                    help="admission control: shed batch queries when the "
+                         "estimated engine backlog exceeds this many "
+                         "tokens; interactive queries get a 3x allowance "
+                         "(requires --overload-control)")
+    ap.add_argument("--hedge-after", type=float, default=None,
+                    metavar="SECONDS",
+                    help="hedged dispatch: send a backup for idempotent "
+                         "encoder/search batches still unfinished after "
+                         "this delay, first result wins (requires "
+                         "--overload-control and a second replica)")
+    ap.add_argument("--degrade", action="store_true",
+                    help="brown-out degradation ladder: under deadline "
+                         "pressure activate per-node degrade annotations "
+                         "stepwise (requires --overload-control and "
+                         "--query-deadline)")
+    ap.add_argument("--encoder-instances", type=int, default=None,
+                    help="EnginePool replicas for the embedding/rerank "
+                         "encoders (sim engines only; default 1, use 2+ "
+                         "to give hedged dispatch a backup target)")
     return ap
 
 
@@ -286,6 +329,42 @@ def validate_args(ap: argparse.ArgumentParser, args) -> None:
             except ValueError as e:
                 ap.error(f"--fault-inject: {e}")
     args.fault_tolerance_on = ft_on
+    for flag, name in ((args.query_deadline, "--query-deadline"),
+                       (args.shed_queue_tokens, "--shed-queue-tokens"),
+                       (args.hedge_after, "--hedge-after")):
+        if flag is not None and not args.overload_control:
+            ap.error(f"{name} requires --overload-control")
+    if args.degrade and not args.overload_control:
+        ap.error("--degrade requires --overload-control")
+    if args.overload_control:
+        if args.scheme != "Teola":
+            ap.error("--overload-control requires --scheme Teola (the "
+                     "admission/degradation hooks live in the managed "
+                     "runtime)")
+        if not args.continuous_batching:
+            ap.error("--overload-control requires --continuous-batching "
+                     "(queue-delay estimation reads the pooled decode "
+                     "loops' load signals)")
+        if args.query_deadline is not None and args.query_deadline <= 0:
+            ap.error(f"--query-deadline must be > 0, got "
+                     f"{args.query_deadline}")
+        if args.shed_queue_tokens is not None and args.shed_queue_tokens <= 0:
+            ap.error(f"--shed-queue-tokens must be > 0, got "
+                     f"{args.shed_queue_tokens}")
+        if args.hedge_after is not None and args.hedge_after < 0:
+            ap.error(f"--hedge-after must be >= 0, got {args.hedge_after}")
+        if args.degrade and args.query_deadline is None:
+            ap.error("--degrade requires --query-deadline (the brown-out "
+                     "ladder steps on per-query deadline slack)")
+    if args.encoder_instances is not None:
+        if not args.sim:
+            ap.error("--encoder-instances requires --sim (real encoder "
+                     "pooling is not wired into this launcher)")
+        if args.encoder_instances < 1:
+            ap.error(f"--encoder-instances must be >= 1, got "
+                     f"{args.encoder_instances}")
+    args.encoder_instances = args.encoder_instances \
+        if args.encoder_instances is not None else 1
 
 
 def main():
@@ -305,7 +384,8 @@ def main():
                                     prefix_cache=args.prefix_cache,
                                     disaggregate=args.disaggregate,
                                     prefill_replicas=args.prefill_replicas,
-                                    decode_replicas=args.decode_replicas)
+                                    decode_replicas=args.decode_replicas,
+                                    encoder_instances=args.encoder_instances)
     else:
         engines = build_engines(paged_kv=args.paged_kv,
                                 chunked_prefill=args.chunked_prefill,
@@ -342,14 +422,31 @@ def main():
             request_deadline=args.request_deadline)
         if args.fault_inject is not None:
             injector = FaultInjector.parse(args.fault_inject, seed=0)
-            armed = injector.arm(engines)
+            armed = injector.arm(engines,
+                                 encoders=args.overload_control)
             print(f"[serve] fault injector armed on {armed}")
+    overload = None
+    if args.overload_control:
+        from repro.serving.overload import OverloadConfig, OverloadManager
+        ov_cfg = OverloadConfig(
+            deadline_s=args.query_deadline,
+            shed=args.shed_queue_tokens is not None,
+            max_queue_tokens=args.shed_queue_tokens
+            if args.shed_queue_tokens is not None else 4096.0,
+            hedge=args.hedge_after is not None,
+            hedge_after_s=args.hedge_after,
+            degrade=args.degrade)
+        overload = OverloadManager(ov_cfg)
+        print(f"[serve] overload control armed "
+              f"(deadline={args.query_deadline} "
+              f"shed={ov_cfg.shed} hedge={ov_cfg.hedge} "
+              f"degrade={ov_cfg.degrade})")
     app = ALL_APPS[args.app](engines)
     cls, policy = SCHEMES[args.scheme]
     if cls is Teola:
         orch = cls(app, engines, policy=policy, streaming=args.streaming,
                    continuous_batching=args.continuous_batching,
-                   fault_tolerance=ft)
+                   fault_tolerance=ft, overload=overload)
     else:
         orch = cls(app, engines, policy=policy)
 
@@ -363,7 +460,7 @@ def main():
     t0 = time.time()
     for i in range(args.queries):
         q = {"question": f"what is fact {i} about optics", "docs": docs}
-        if args.slo_sched:
+        if args.slo_sched or args.overload_control:
             # two tenants, alternating SLO classes: tenant t0 is the
             # interactive user, t1 the throughput-bound batch tenant
             ctxs.append(orch.submit(
@@ -394,6 +491,23 @@ def main():
         for key, row in sorted(pool_tenant_stats(engines).items()):
             print(f"[serve] tenant {key}: "
                   + " ".join(f"{k}={v}" for k, v in sorted(row.items())))
+    if overload is not None:
+        from repro.core.engine_pool import replicas_of
+        from repro.serving.overload import Overloaded
+        shed = sum(1 for c in ctxs if isinstance(c.error, Overloaded))
+        snap = overload.snapshot()
+        print(f"[serve] overload: shed={shed} "
+              f"admission={snap['admission']} hedge={snap['hedge']} "
+              f"degrade={snap['degrade']}")
+        leaked = bad = 0
+        for eng in engines.values():
+            for inst in replicas_of(eng):
+                alloc = getattr(inst, "alloc", None)
+                if alloc is not None and hasattr(alloc, "audit"):
+                    rep = alloc.audit()
+                    leaked += rep["leaked"]
+                    bad += rep["bad_free"]
+        print(f"[serve] kv audit: leaked={leaked} bad_free={bad}")
     orch.shutdown()
 
 

@@ -96,20 +96,23 @@ def is_recoverable(err) -> bool:
 # fault injection
 
 
-_KINDS = ("crash", "hang", "slow", "migrate_fail", "alloc_fail")
-_POINTS = ("decode", "prefill", "migrate", "alloc")
+_KINDS = ("crash", "hang", "slow", "migrate_fail", "alloc_fail", "burst")
+_POINTS = ("decode", "prefill", "migrate", "alloc", "encode")
 
 
 @dataclass
 class FaultSpec:
     """One scheduled fault: trigger `kind` on replica `engine` at the
     `at`-th call of hook `point` (1-based). `duration` is the sleep for
-    hang/slow."""
+    hang/slow/burst; `width` is the number of consecutive calls a
+    ``burst`` (arrival-rate spike: every call in the window queues behind
+    `duration` of extra backlog) stays hot."""
     kind: str
     engine: str
     point: str
     at: int = 1
     duration: float = 0.5
+    width: int = 8
 
     def __post_init__(self):
         if self.kind not in _KINDS:
@@ -120,6 +123,8 @@ class FaultSpec:
                              f"(choose from {_POINTS})")
         if self.at < 1:
             raise ValueError("fault trigger index `at` is 1-based")
+        if self.width < 1:
+            raise ValueError("burst `width` must be >= 1")
 
 
 class FaultInjector:
@@ -144,8 +149,8 @@ class FaultInjector:
 
     @classmethod
     def parse(cls, text: str, seed: int = 0) -> "FaultInjector":
-        """Parse ``kind:engine:point:at[:duration]`` specs, comma
-        separated — e.g. ``crash:core_llm.r1:decode:5,slow:lite_llm:prefill:1:0.2``."""
+        """Parse ``kind:engine:point:at[:duration[:width]]`` specs, comma
+        separated — e.g. ``crash:core_llm.r1:decode:5,burst:lite_llm:prefill:1:0.05:6``."""
         specs = []
         for part in text.split(","):
             part = part.strip()
@@ -154,11 +159,13 @@ class FaultInjector:
             bits = part.split(":")
             if len(bits) < 3:
                 raise ValueError(
-                    f"bad fault spec {part!r}: want kind:engine:point[:at[:duration]]")
+                    f"bad fault spec {part!r}: want "
+                    f"kind:engine:point[:at[:duration[:width]]]")
             kind, engine, point = bits[0], bits[1], bits[2]
             at = int(bits[3]) if len(bits) > 3 else 1
             duration = float(bits[4]) if len(bits) > 4 else 0.5
-            specs.append(FaultSpec(kind, engine, point, at, duration))
+            width = int(bits[5]) if len(bits) > 5 else 8
+            specs.append(FaultSpec(kind, engine, point, at, duration, width))
         return cls(specs, seed=seed)
 
     @classmethod
@@ -172,16 +179,20 @@ class FaultInjector:
                  for _ in range(n_faults)]
         return cls(specs, seed=seed)
 
-    def arm(self, engines) -> list:
+    def arm(self, engines, encoders: bool = False) -> list:
         """Attach this injector to every LLM replica reachable from an
-        engines mapping (or an iterable of engines/pools). Returns the
+        engines mapping (or an iterable of engines/pools). With
+        ``encoders=True`` also arm embed/rerank replicas (the "encode"
+        hook point — burst/slow faults on non-LLM engines). Returns the
         armed replica names."""
         from repro.core.engine_pool import replicas_of
         vals = engines.values() if hasattr(engines, "values") else engines
         armed = []
         for eng in vals:
             for rep in replicas_of(eng):
-                if hasattr(rep, "submit_decode"):
+                if hasattr(rep, "submit_decode") or (
+                        encoders and (hasattr(rep, "op_embed")
+                                      or hasattr(rep, "op_rerank"))):
                     rep.faults = self
                     armed.append(rep.name)
         return armed
@@ -202,7 +213,9 @@ class FaultInjector:
             self._counts[(name, point)] = k
             hits = [s for s in self.specs
                     if s.engine == name and s.point == point
-                    and (k == s.at or (s.kind == "slow" and k >= s.at))]
+                    and (k == s.at or (s.kind == "slow" and k >= s.at)
+                         or (s.kind == "burst"
+                             and s.at <= k < s.at + s.width))]
         for s in hits:
             self._trigger(s, engine, name, point, k)
 
@@ -218,7 +231,7 @@ class FaultInjector:
                 pass
             raise ReplicaCrash(
                 f"{name}: injected crash at {point} call #{k}")
-        if spec.kind in ("hang", "slow"):
+        if spec.kind in ("hang", "slow", "burst"):
             time.sleep(spec.duration)
             return
         if spec.kind == "migrate_fail":
@@ -440,8 +453,16 @@ class TaskRecovery:
         self.task = task
         self.route = route          # {"idx": int, "tokens": int} — mutable
         self.kind = kind            # "decode" | "prefill"
-        self.deadline = (time.time() + self.cfg.request_deadline
-                         if self.cfg.request_deadline else None)
+        # unified deadline: the watchdog enforces whichever is tighter —
+        # the per-task FT budget or the query-level deadline stamped by
+        # the overload layer (they share one clock; see serving/overload)
+        dls = []
+        if self.cfg.request_deadline:
+            dls.append(time.time() + self.cfg.request_deadline)
+        qdl = getattr(task.ctx, "deadline", None)
+        if qdl is not None:
+            dls.append(float(qdl))
+        self.deadline = min(dls) if dls else None
         self._lock = threading.Lock()
         self.cancelled = False
         self.settled = False
@@ -601,7 +622,7 @@ class TaskRecovery:
         attempts = max(self.attempts.values(), default=0)
         err = DeadlineExceeded(
             f"request {self.qid}:{self.task.prim.pid} exceeded its "
-            f"{self.cfg.request_deadline}s deadline after {attempts} "
+            f"deadline after {attempts} "
             f"recovery attempt(s); sequences: {self._sids}",
             qid=self.qid, sid=self._sids[0] if self._sids else "",
             reason="deadline", attempts=attempts,

@@ -56,15 +56,19 @@ class SLOTag:
     ``cls`` is the SLO class (`interactive` / `batch`), ``priority`` the
     legacy application priority knob (higher = sooner), ``tenant`` the
     isolation/accounting domain, ``depth`` the primitive's e-graph
-    critical-path depth (more downstream work = more urgency) and
-    ``t_submit`` the query submit time (aging + TTFT baseline).
+    critical-path depth (more downstream work = more urgency),
+    ``t_submit`` the query submit time (aging + TTFT baseline) and
+    ``deadline`` the absolute query deadline stamped by the overload
+    layer (None = no deadline — the pre-overload behavior).
     """
 
-    __slots__ = ("cls", "priority", "tenant", "depth", "t_submit")
+    __slots__ = ("cls", "priority", "tenant", "depth", "t_submit",
+                 "deadline")
 
     def __init__(self, cls: str = BATCH, priority: int = 0,
                  tenant: str = "default", depth: int = 0,
-                 t_submit: Optional[float] = None):
+                 t_submit: Optional[float] = None,
+                 deadline: Optional[float] = None):
         if cls not in (INTERACTIVE, BATCH):
             raise ValueError(f"unknown SLO class {cls!r} "
                              f"(expected {INTERACTIVE!r} or {BATCH!r})")
@@ -74,6 +78,7 @@ class SLOTag:
         self.depth = int(depth)
         self.t_submit = float(t_submit) if t_submit is not None \
             else time.time()
+        self.deadline = float(deadline) if deadline is not None else None
 
     def __repr__(self):
         return (f"<SLOTag {self.cls} tenant={self.tenant} "
@@ -82,7 +87,8 @@ class SLOTag:
 
 def derive_tag(*, slo: Optional[str] = None, priority: int = 0,
                tenant: str = "default", depth: int = 0,
-               t_submit: Optional[float] = None) -> SLOTag:
+               t_submit: Optional[float] = None,
+               deadline: Optional[float] = None) -> SLOTag:
     """Build a tag from request metadata.  When no explicit SLO class is
     given the legacy ``priority`` knob decides: any positive priority
     means a user is waiting on it (interactive); priority 0 is
@@ -92,7 +98,7 @@ def derive_tag(*, slo: Optional[str] = None, priority: int = 0,
     cls = slo if slo is not None else \
         (INTERACTIVE if priority > 0 else BATCH)
     return SLOTag(cls=cls, priority=priority, tenant=tenant, depth=depth,
-                  t_submit=t_submit)
+                  t_submit=t_submit, deadline=deadline)
 
 
 # --------------------------------------------------------------------------
@@ -270,10 +276,12 @@ class SLOPolicy:
     def __init__(self, *, slots: int = 0, blocks: int = 0,
                  weights: Optional[Dict[str, float]] = None,
                  aging_s: float = 5.0, preempt_cooldown_s: float = 0.25,
-                 max_preempts_per_seq: int = 2):
+                 max_preempts_per_seq: int = 2,
+                 deadline_slack_s: float = 1.0):
         self.slots = FairShareLedger(slots, weights) if slots else None
         self.blocks = FairShareLedger(blocks, weights) if blocks else None
         self.aging_s = float(aging_s)
+        self.deadline_slack_s = float(deadline_slack_s)
         self.preempt_cooldown_s = float(preempt_cooldown_s)
         self.max_preempts_per_seq = int(max_preempts_per_seq)
         self.stats = TenantStats()
@@ -299,11 +307,17 @@ class SLOPolicy:
         return tag
 
     def is_urgent(self, obj, now: Optional[float] = None) -> bool:
-        """Interactive class, or batch promoted by the aging bound."""
+        """Interactive class, batch promoted by the aging bound, or ANY
+        class whose unified query deadline (overload layer) is within
+        ``deadline_slack_s`` of expiring — urgency and the FT watchdog
+        now read the same clock."""
         tag = self.tag_of(obj)
         now = time.time() if now is None else now
-        return tag.cls == INTERACTIVE or \
-            (self.aging_s > 0 and now - tag.t_submit >= self.aging_s)
+        if tag.cls == INTERACTIVE or \
+                (self.aging_s > 0 and now - tag.t_submit >= self.aging_s):
+            return True
+        dl = getattr(tag, "deadline", None)
+        return dl is not None and dl - now <= self.deadline_slack_s
 
     def rank_key(self, obj, now: Optional[float] = None) -> tuple:
         tag = self.tag_of(obj)
@@ -452,7 +466,8 @@ def _decode_replicas(obj) -> list:
 
 def attach_slo(engines, *, weights: Optional[Dict[str, float]] = None,
                aging_s: float = 5.0, preempt_cooldown_s: float = 0.25,
-               max_preempts_per_seq: int = 2) -> list:
+               max_preempts_per_seq: int = 2,
+               deadline_slack_s: float = 1.0) -> list:
     """Arm SLO scheduling on every decode-capable replica in ``engines``
     (a name→engine/pool mapping, as built by ``apps.build_engines`` /
     ``build_sim_engines``).  Each replica gets its OWN policy — slot and
@@ -470,7 +485,8 @@ def attach_slo(engines, *, weights: Optional[Dict[str, float]] = None,
                 slots=int(getattr(rep, "max_batch", 0) or 0),
                 blocks=blocks, weights=weights, aging_s=aging_s,
                 preempt_cooldown_s=preempt_cooldown_s,
-                max_preempts_per_seq=max_preempts_per_seq)
+                max_preempts_per_seq=max_preempts_per_seq,
+                deadline_slack_s=deadline_slack_s)
             rep.slo = pol
             policies.append(pol)
     return policies

@@ -388,3 +388,61 @@ def test_disagg_mid_migration_eviction_and_admission():
     de.radix.evict(10 ** 6)
     assert pe.alloc.free_blocks() == pe.alloc.capacity
     assert de.alloc.free_blocks() == de.alloc.capacity
+
+
+# ---------------------------------------------------------------------------
+# Overload layer armed-but-idle: the runtime with every overload
+# mechanism switched on but under zero pressure (huge thresholds, no
+# deadline stress) must produce the exact tokens of the unarmed runtime
+# — the flag-off contract of serving/overload.py, end to end.
+
+_OV_BASELINE = {}
+
+
+def _run_overload_cell(overload):
+    from repro.core.apps import build_engines, search_gen
+    from repro.core.teola import Teola
+    engines = build_engines(paged_kv=True)
+    orch = Teola(search_gen(engines), engines, continuous_batching=True,
+                 overload=overload)
+    try:
+        out, ctx = orch.query({"question": "what is fact 1 about optics"},
+                              timeout=600)
+        assert ctx.error is None
+        return out
+    finally:
+        orch.shutdown()
+
+
+def _overload_baseline():
+    if "out" not in _OV_BASELINE:
+        _OV_BASELINE["out"] = _run_overload_cell(None)
+    return _OV_BASELINE["out"]
+
+
+def _armed_no_deadline():
+    """Shed + hedge + degrade armed; no deadline -> no slack pressure."""
+    from repro.serving.overload import OverloadConfig, OverloadManager
+    return OverloadManager(OverloadConfig(
+        shed=True, max_queue_tokens=1e12, hedge=True, hedge_after_s=1e6,
+        degrade=True))
+
+
+def _armed_with_deadline():
+    """Deadline stamped and decomposed into per-primitive budgets, but
+    so loose that slack never goes negative (ladder stays at level 0)."""
+    from repro.serving.overload import OverloadConfig, OverloadManager
+    return OverloadManager(OverloadConfig(
+        deadline_s=1e6, shed=True, max_queue_tokens=1e12, degrade=True))
+
+
+@pytest.mark.parametrize("mk", [_armed_no_deadline, _armed_with_deadline])
+def test_overload_armed_idle_is_token_identical(mk):
+    ov = mk()
+    out = _run_overload_cell(ov)
+    assert out == _overload_baseline()
+    snap = ov.snapshot()
+    assert snap["admission"]["interactive"]["shed"] == 0
+    assert snap["admission"]["batch"]["shed"] == 0
+    assert snap["hedge"]["issued"] == 0
+    assert snap["degrade"]["level"] == 0 and not snap["degrade"]["steps"]

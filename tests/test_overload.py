@@ -1,0 +1,544 @@
+"""Overload control & graceful degradation (serving/overload.py):
+e-graph deadline decomposition, unified SLO/FT deadlines, front-door
+admission control with structured shedding, deterministic seeded burst
+faults, hedged dispatch with first-result-wins, and the brown-out
+degradation ladder (hysteresis, per-query attribution, chunk caps) —
+plus end-to-end runs proving shed queries fail loudly, hedged queries
+stay token-identical, and degraded paged prefill leaks no blocks."""
+import itertools
+import threading
+import time
+import types
+
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.engine_pool import replicas_of
+from repro.core.primitives import Graph, Primitive
+from repro.core import primitives as P
+from repro.core.teola import Teola
+from repro.engines.decode_loop import ContinuousDecodeLoop, PrefillJob
+from repro.engines.llm_engine import LLMEngine
+from repro.engines.sim_engines import build_sim_engines
+from repro.serving.faults import FaultInjector, FaultSpec, FTConfig, \
+    TaskRecovery
+from repro.serving.overload import (AdmissionController, DegradationPolicy,
+                                    HedgePolicy, Overloaded, OverloadConfig,
+                                    OverloadManager, decompose_deadline,
+                                    query_class, query_token_estimate)
+from repro.serving.slo import BATCH, INTERACTIVE, SLOPolicy, derive_tag
+from repro.training.data import doc_corpus
+
+Q = {"question": "what is fact 3 about optics", "docs": doc_corpus(2)}
+
+
+def _ctx(qid="q0"):
+    return types.SimpleNamespace(qid=qid, done=threading.Event())
+
+
+# ---------------------------------------------------------------------------
+# Deadline decomposition along the e-graph
+
+def _chain_graph():
+    """embed(8 tok) -> prefill(64) -> decode(24); critical path 96."""
+    g = Graph(query_id="q")
+    a = g.add(Primitive(op=P.EMBEDDING, engine="emb", component="qe"))
+    b = g.add(Primitive(op=P.PREFILL, engine="llm", component="gen"))
+    c = g.add(Primitive(op=P.DECODE, engine="llm", component="gen",
+                        config={"max_new": 24}))
+    g.edge(a, b)
+    g.edge(b, c)
+    return g, a, b, c
+
+
+def test_decompose_deadline_chain_fractions():
+    g, a, b, c = _chain_graph()
+    frac = decompose_deadline(g)
+    assert frac[c.pid] == pytest.approx(1.0)          # sink gets full budget
+    assert frac[b.pid] == pytest.approx(72 / 96)      # 24 downstream tokens
+    assert frac[a.pid] == pytest.approx(8 / 96)       # 88 downstream tokens
+
+
+def test_decompose_deadline_diamond_takes_heaviest_branch():
+    g = Graph(query_id="q")
+    a = g.add(Primitive(op=P.EMBEDDING, engine="e", component="a"))
+    b = g.add(Primitive(op=P.PREFILL, engine="l", component="b"))    # 64
+    c = g.add(Primitive(op=P.EMBEDDING, engine="e", component="c"))  # 8
+    d = g.add(Primitive(op=P.DECODE, engine="l", component="d",
+                        config={"max_new": 24}))
+    for x in (b, c):
+        g.edge(a, x)
+        g.edge(x, d)
+    frac = decompose_deadline(g)
+    # a's downstream critical cost goes through b (64+24), not c (8+24)
+    assert frac[a.pid] == pytest.approx(8 / 96)
+    assert frac[b.pid] == frac[c.pid] == pytest.approx(72 / 96)
+    assert frac[d.pid] == pytest.approx(1.0)
+    # budgets are monotone along every edge
+    for n in g.nodes.values():
+        for cpid in n.children:
+            assert frac[n.pid] <= frac[cpid]
+    assert frac[a.pid] < frac[b.pid] < frac[d.pid]
+
+
+def test_decompose_deadline_empty_graph():
+    assert decompose_deadline(Graph(query_id="q")) == {}
+
+
+def test_query_token_estimate_skips_control_ops():
+    g = Graph(query_id="q")
+    g.add(Primitive(op=P.EMBEDDING, engine="e", component="a"))      # 8
+    g.add(Primitive(op=P.DECODE, engine="l", component="b",
+                    config={"max_new": 24}))                         # 24
+    g.add(Primitive(op=P.CONDITION, engine="control", component="c"))
+    assert query_token_estimate(g) == pytest.approx(32.0)
+
+
+def test_query_class_matches_slo_derivation():
+    assert query_class(None, 0) == BATCH
+    assert query_class(None, 3) == INTERACTIVE
+    assert query_class("interactive", 0) == INTERACTIVE
+    assert query_class("batch", 9) == BATCH
+
+
+# ---------------------------------------------------------------------------
+# Satellite: unified SLO-urgency / FT-watchdog deadline
+
+def test_unified_deadline_urgent_by_slo_before_ft_deadline():
+    """Regression: a query whose deadline is INSIDE the SLO slack window
+    must rank urgent for scheduling while the FT watchdog (whose own
+    request_deadline is far looser) has NOT expired it."""
+    now = time.time()
+    ctx = types.SimpleNamespace(deadline=now + 0.5, qid="q")
+    task = types.SimpleNamespace(ctx=ctx)
+    mgr = types.SimpleNamespace(cfg=FTConfig(request_deadline=10.0))
+    tr = TaskRecovery(mgr, task, {"idx": 0, "tokens": 1}, "decode")
+    # the watchdog enforces the TIGHTER query deadline, not the FT budget
+    assert abs(tr.deadline - ctx.deadline) < 0.05
+    assert tr.deadline > time.time()          # ... but it has not fired yet
+    # the SLO layer already treats the same clock as urgent
+    pol = SLOPolicy(deadline_slack_s=1.0)
+    tagged = types.SimpleNamespace(
+        slo=derive_tag(slo="batch", deadline=ctx.deadline))
+    assert pol.is_urgent(tagged, now=now)
+    far = types.SimpleNamespace(
+        slo=derive_tag(slo="batch", deadline=now + 100.0))
+    assert not pol.is_urgent(far, now=now)
+
+
+def test_unified_deadline_fallbacks():
+    task = types.SimpleNamespace(
+        ctx=types.SimpleNamespace(deadline=None, qid="q"))
+    mgr = types.SimpleNamespace(cfg=FTConfig(request_deadline=2.0))
+    tr = TaskRecovery(mgr, task, {"idx": 0, "tokens": 1}, "decode")
+    assert abs(tr.deadline - (time.time() + 2.0)) < 0.1   # FT budget only
+    mgr = types.SimpleNamespace(cfg=FTConfig(request_deadline=None))
+    tr = TaskRecovery(mgr, task, {"idx": 0, "tokens": 1}, "decode")
+    assert tr.deadline is None                            # neither armed
+
+
+# ---------------------------------------------------------------------------
+# Admission control / load shedding
+
+def test_admission_off_never_sheds():
+    ac = AdmissionController(OverloadConfig(shed=False,
+                                            max_queue_tokens=0.0))
+    for i in range(4):
+        assert ac.admit(_ctx(f"q{i}"), BATCH, 1000.0) is None
+    assert ac.counts[BATCH]["admitted"] == 4
+    assert ac.counts[BATCH]["shed"] == 0
+
+
+def test_admission_sheds_batch_beyond_threshold_with_structured_error():
+    ac = AdmissionController(OverloadConfig(shed=True,
+                                            max_queue_tokens=50.0))
+    assert ac.admit(_ctx("q0"), BATCH, 100.0) is None  # empty queue admits
+    err = ac.admit(_ctx("q1"), BATCH, 10.0)
+    assert isinstance(err, Overloaded)
+    assert err.reason == "overloaded"
+    assert err.qid == "q1" and err.cls == BATCH
+    assert err.outstanding == pytest.approx(100.0)
+    assert ac.snapshot()[BATCH] == {"admitted": 1, "shed": 1}
+
+
+def test_admission_interactive_headroom_factor():
+    ac = AdmissionController(OverloadConfig(
+        shed=True, max_queue_tokens=50.0, interactive_factor=3.0))
+    assert ac.admit(_ctx("q0"), BATCH, 100.0) is None
+    assert isinstance(ac.admit(_ctx("q1"), BATCH, 1.0), Overloaded)
+    # interactive keeps 3x the allowance: 100 <= 150
+    assert ac.admit(_ctx("q2"), INTERACTIVE, 1.0) is None
+
+
+def test_admission_unmeetable_deadline_sheds_any_class():
+    ac = AdmissionController(OverloadConfig(shed=True,
+                                            max_queue_tokens=1e9))
+    err = ac.admit(_ctx(), INTERACTIVE, 1.0, slack_s=-0.1)
+    assert isinstance(err, Overloaded)
+
+
+def test_admission_ledger_prunes_completed_queries():
+    ac = AdmissionController(OverloadConfig(shed=True))
+    c = _ctx()
+    ac.admit(c, BATCH, 100.0)
+    assert ac.outstanding_tokens() == pytest.approx(100.0)
+    c.done.set()
+    assert ac.outstanding_tokens() == pytest.approx(0.0)
+
+
+def test_admission_pool_signal_rate_and_deadline_tightening():
+    ac = AdmissionController(OverloadConfig(shed=True,
+                                            max_queue_tokens=100.0))
+    ac.register_pool(types.SimpleNamespace(
+        outstanding_tokens=lambda: 75.0))
+    assert ac.outstanding_tokens() == pytest.approx(75.0)
+    assert ac.queue_delay_s() is None          # no rate observed yet
+    ac.note_done(100.0, 2.0)
+    assert ac.service_rate == pytest.approx(50.0)
+    assert ac.queue_delay_s() == pytest.approx(1.5)
+    # static threshold admits (75 <= 100) ...
+    ok, out, delay = ac.decide(BATCH, slack_s=None)
+    assert ok and out == pytest.approx(75.0)
+    # ... but a 1s deadline tightens the allowance to rate*slack = 50
+    ok, out, delay = ac.decide(BATCH, slack_s=1.0)
+    assert not ok and delay == pytest.approx(1.5)
+    # a dying pool never blocks admission
+    ac.register_pool(types.SimpleNamespace(
+        outstanding_tokens=lambda: (_ for _ in ()).throw(RuntimeError())))
+    assert ac.outstanding_tokens() == pytest.approx(75.0)
+
+
+# ---------------------------------------------------------------------------
+# Hedge trigger policy
+
+def test_hedge_trigger_fixed_then_quantile():
+    assert HedgePolicy(OverloadConfig(hedge=False)) \
+        .trigger_delay("Embedding") is None
+    hp = HedgePolicy(OverloadConfig(hedge=True, hedge_after_s=0.02))
+    assert hp.trigger_delay("Embedding") == pytest.approx(0.02)
+    hp = HedgePolicy(OverloadConfig(hedge=True, hedge_min_samples=4,
+                                    hedge_quantile=0.5))
+    assert hp.trigger_delay("Embedding") is None   # not enough samples
+    for dt in (0.04, 0.01, 0.03, 0.02):
+        hp.note_latency("Embedding", dt)
+    assert hp.trigger_delay("Embedding") == pytest.approx(0.03)
+    assert hp.trigger_delay("Reranking") is None   # per-op history
+
+
+# ---------------------------------------------------------------------------
+# Satellite: seeded burst faults
+
+def test_burst_spec_parse_roundtrip_and_validation():
+    inj = FaultInjector.parse("burst:embedding:encode:2:0.05:3")
+    (s,) = inj.specs
+    assert (s.kind, s.engine, s.point, s.at, s.duration, s.width) == \
+        ("burst", "embedding", "encode", 2, 0.05, 3)
+    with pytest.raises(ValueError):
+        FaultSpec("burst", "e", "encode", at=1, width=0)
+
+
+def test_burst_fires_on_consecutive_call_window_deterministically():
+    def trial():
+        eng = types.SimpleNamespace(name="e0", health="healthy")
+        inj = FaultInjector([FaultSpec("burst", "e0", "encode", at=2,
+                                       duration=0.001, width=3)])
+        for _ in range(6):
+            inj.fire(eng, "encode")
+        assert eng.health == "healthy"     # a burst slows, never kills
+        return inj.log
+    log1, log2 = trial(), trial()
+    assert log1 == log2                    # same spec -> same schedule
+    assert [k for (_kind, _e, _p, k) in log1] == [2, 3, 4]
+
+
+def test_arm_encoders_flag_reaches_pooled_encoder_replicas():
+    engines = build_sim_engines(encoder_instances=2)
+    inj = FaultInjector()
+    armed = inj.arm(engines, encoders=True)
+    assert {"embedding", "embedding.r1"} <= set(armed)
+    assert any(n.startswith("rerank") for n in armed)
+    assert all(r.faults is inj for r in replicas_of(engines["embedding"]))
+    # default arm stays LLM-only (pre-existing behavior preserved)
+    armed2 = FaultInjector().arm(build_sim_engines(encoder_instances=2))
+    assert not any(n.startswith(("embedding", "rerank")) for n in armed2)
+
+
+# ---------------------------------------------------------------------------
+# Degradation ladder: hysteresis, cooldown, plans, attribution
+
+def test_ladder_hysteresis_and_cooldown():
+    cfg = OverloadConfig(degrade=True, degrade_after=2, recover_after=2,
+                         cooldown_s=1.0, max_level=3)
+    dp = DegradationPolicy(cfg)
+    t = 1000.0
+    assert dp.note_slack(-1.0, now=t) == 0           # one sample: no move
+    assert dp.note_slack(-1.0, now=t + 0.1) == 1     # streak of 2: step up
+    assert dp.note_slack(-1.0, now=t + 0.2) == 1     # cooldown holds it
+    assert dp.note_slack(-1.0, now=t + 0.3) == 1
+    assert dp.note_slack(-1.0, now=t + 1.2) == 2     # cooldown expired
+    # positive samples recover, same hysteresis
+    assert dp.note_slack(1.0, now=t + 1.3) == 2
+    assert dp.note_slack(1.0, now=t + 1.4) == 2      # cooldown holds
+    assert dp.note_slack(1.0, now=t + 2.3) == 1
+    assert dp.note_slack(1.0, now=t + 2.4) == 1
+    assert dp.note_slack(1.0, now=t + 3.5) == 0
+    assert dp.note_slack(1.0, now=t + 9.0) == 0      # floor at 0
+
+
+def test_ladder_streak_resets_on_sign_flip_and_caps_at_max_level():
+    dp = DegradationPolicy(OverloadConfig(
+        degrade=True, degrade_after=2, recover_after=99, cooldown_s=0.0,
+        max_level=1))
+    t = 0.0
+    assert dp.note_slack(-1.0, now=t) == 0
+    assert dp.note_slack(1.0, now=t + 0.1) == 0      # flip resets streak
+    assert dp.note_slack(-1.0, now=t + 0.2) == 0
+    assert dp.note_slack(-1.0, now=t + 0.3) == 1
+    for i in range(4):                               # capped at max_level
+        assert dp.note_slack(-1.0, now=t + 1.0 + i) == 1
+
+
+def test_plan_levels_and_floors():
+    dp = DegradationPolicy(OverloadConfig(degrade=True))
+    ann = {"min_top_k": 2, "skippable": True, "min_new": 8,
+           "chunk_cap": 64}
+    cfg = {"top_k": 8, "max_new": 32}
+    assert dp.plan(ann, cfg, level=0) is None
+    assert dp.plan(None, cfg, level=3) is None
+    assert dp.plan(ann, cfg, level=1) == {"top_k": 4}
+    assert dp.plan(ann, cfg, level=2) == {"top_k": 4, "skip": True}
+    assert dp.plan(ann, cfg, level=3) == {"top_k": 4, "skip": True,
+                                          "max_new": 16, "chunk_cap": 64}
+    # floors: already at (or below) the minimum -> nothing fires
+    assert dp.plan({"min_top_k": 2}, {"top_k": 2}, level=1) is None
+    assert dp.plan({"min_new": 8}, {"max_new": 8}, level=3) is None
+    # min_new floor binds the halving
+    assert dp.plan({"min_new": 8}, {"max_new": 12}, level=3) == \
+        {"max_new": 8}
+
+
+def test_attribution_is_idempotent_per_query():
+    dp = DegradationPolicy(OverloadConfig(degrade=True))
+    dp.attribute("q0", ["skip", "top_k"])
+    dp.attribute("q0", ["skip"])                     # no double count
+    dp.attribute("q1", ["skip"])
+    assert dp.step_counts == {"skip": 2, "top_k": 1}
+    assert dp.snapshot()["queries_degraded"] == 2
+    assert dp.degraded_queries()["q0"] == {"skip", "top_k"}
+
+
+# ---------------------------------------------------------------------------
+# OverloadManager: stamping, per-task slack, degrade hook
+
+def test_stamp_and_task_slack_follow_decomposed_budgets():
+    ov = OverloadManager(OverloadConfig(deadline_s=10.0,
+                                        interactive_deadline_s=2.0))
+    assert ov.deadline_for(INTERACTIVE) == pytest.approx(2.0)
+    assert ov.deadline_for(BATCH) == pytest.approx(10.0)
+    g, a, b, c = _chain_graph()
+    ctx = types.SimpleNamespace(qid="q", t_submit=1000.0,
+                                done=threading.Event())
+    ov.stamp(ctx, g, BATCH)
+    assert ctx.deadline == pytest.approx(1010.0)
+    assert ctx.ov_tokens == pytest.approx(96.0)
+    # the sink's budget expires exactly at the query deadline
+    assert ov.task_slack(c, ctx, now=1010.0) == pytest.approx(0.0)
+    # the first hop must finish within its critical-path share
+    assert ov.task_slack(a, ctx, now=1000.0) == pytest.approx(10 * 8 / 96)
+    assert ov.task_slack(b, ctx, now=1010.0) < 0.0   # behind schedule
+    # no deadline configured -> no slack accounting at all
+    ov2 = OverloadManager(OverloadConfig())
+    ctx2 = types.SimpleNamespace(qid="q", t_submit=1000.0,
+                                 done=threading.Event())
+    ov2.stamp(ctx2, g, BATCH)
+    assert getattr(ctx2, "deadline", None) is None
+    assert ov2.task_slack(c, ctx2) is None
+
+
+def test_degrade_plan_hook_steps_ladder_and_attributes():
+    now = time.time()
+    ov = OverloadManager(OverloadConfig(
+        deadline_s=1.0, degrade=True, degrade_after=1, cooldown_s=0.0))
+    prim = Primitive(op=P.RERANKING, engine="rerank", component="rr",
+                     config={"top_k": 8, "degrade": {"min_top_k": 2}})
+    ctx = types.SimpleNamespace(qid="qx", t_submit=now - 10.0,
+                                deadline=now - 5.0,
+                                budget_frac={prim.pid: 1.0})
+    assert ov.degrade_plan(prim, ctx) == {"top_k": 4}
+    assert ov.degrade.snapshot()["queries_degraded"] == 1
+    assert ctx.degraded_steps == {"top_k"}
+    # gate: cfg.degrade off -> hook is inert even behind schedule
+    ov_off = OverloadManager(OverloadConfig(deadline_s=1.0, degrade=False))
+    assert ov_off.degrade_plan(prim, ctx) is None
+
+
+# ---------------------------------------------------------------------------
+# Chunk-cap: degraded prefill chunk planning + paged block hygiene
+
+def test_chunk_cap_bounds_prefill_take_per_job():
+    loop = ContinuousDecodeLoop(types.SimpleNamespace(name="e"),
+                                max_slots=4, prefill_chunk=32,
+                                token_budget=128)
+    j1 = PrefillJob("a", None, list(range(100)))
+    j2 = PrefillJob("b", None, list(range(100)))
+    j2.chunk_cap = 8                        # degraded job
+    j3 = PrefillJob("c", None, list(range(100)))
+    j3.chunk_cap = 512                      # cap above chunk: no-op
+    loop.prefill_waiting.extend([j1, j2, j3])
+    took = {j.sid: n for j, n in loop._take_prefill_locked(0)}
+    assert took == {"a": 32, "b": 8, "c": 32}
+
+
+def test_degraded_chunk_cap_token_identical_and_zero_leaked_blocks():
+    cfg = get_config("tiny-lite-llm")
+    text = " ".join(f"w{i}" for i in range(40))
+
+    def run(cap):
+        eng = LLMEngine("d", cfg, max_len=256, seed=0, max_batch=4,
+                        paged=True, block_size=8, chunked_prefill=True,
+                        prefill_chunk=32)
+        job = eng.submit_prefill({"sid": "s", "text": text})
+        if cap:
+            job.chunk_cap = cap
+        job.wait(120)
+        sq = eng.submit_decode("s", 8)
+        assert sq.wait(120)
+        toks = list(sq.tokens)
+        eng.stop_decode_loop()
+        eng.release("s")
+        rep = eng.alloc.audit()
+        assert rep["leaked"] == 0 and rep["bad_free"] == 0, rep
+        assert eng.alloc.free_blocks() == eng.alloc.capacity
+        return toks
+
+    assert run(8) == run(0)                 # degraded prefill: same tokens
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: shed, hedge, degrade through Teola on sim engines
+
+def _fresh_sids():
+    """Sim decode text depends on the engine-side sequence ids, which
+    embed the global qid and sid streams; resetting both makes runs
+    within one process comparable."""
+    import repro.core.pgraph as pg
+    import repro.core.runtime as rt
+    pg._sid = itertools.count()
+    rt._qid = itertools.count()
+
+
+def test_e2e_shed_fails_loudly_with_structured_error():
+    from repro.core.apps import search_gen
+    engines = build_sim_engines()
+    ov = OverloadManager(OverloadConfig(shed=True, max_queue_tokens=-1.0))
+    orch = Teola(search_gen(engines), engines, continuous_batching=True,
+                 overload=ov)
+    try:
+        ctx = orch.submit({"question": "hello"})
+        assert ctx.done.is_set()             # rejected synchronously
+        assert isinstance(ctx.error, Overloaded)
+        assert ctx.error.reason == "overloaded"
+        assert not ctx.node_spans            # nothing was dispatched
+        with pytest.raises(Overloaded):
+            ctx.result(1)
+        assert ov.admission.counts[BATCH]["shed"] == 1
+    finally:
+        orch.shutdown()
+
+
+def test_e2e_hedge_first_result_wins_token_identical_ledger_drained():
+    from repro.core.apps import naive_rag
+
+    def run(inj, ov):
+        _fresh_sids()
+        engines = build_sim_engines(encoder_instances=2)
+        if inj is not None:
+            inj.arm(engines, encoders=True)
+        orch = Teola(naive_rag(engines), engines,
+                     continuous_batching=True, overload=ov)
+        try:
+            out, ctx = orch.query(dict(Q), timeout=120)
+            assert ctx.error is None and out
+            # loser hygiene: the straggling primary still drains the
+            # pool ledger (queued/started/finished net to zero)
+            pool = engines["embedding"]
+            deadline = time.time() + 5.0
+            while any(pool.loads()) and time.time() < deadline:
+                time.sleep(0.02)
+            assert not any(pool.loads()), pool.loads()
+            return out
+        finally:
+            orch.shutdown()
+
+    base = run(None, None)
+    inj = FaultInjector([FaultSpec("slow", "embedding", "encode", at=1,
+                                   duration=0.8)])
+    ov = OverloadManager(OverloadConfig(hedge=True, hedge_after_s=0.05))
+    out = run(inj, ov)
+    assert inj.log, "fault never fired (routing changed?)"
+    assert out == base                       # first-result-wins, same text
+    snap = ov.hedge.snapshot()
+    assert snap["issued"] >= 1
+    assert snap["wins"] >= 1                 # the backup beat the slow primary
+    assert snap["backup_failures"] == 0
+
+
+def test_e2e_degraded_mode_fires_and_query_still_completes():
+    from repro.core.apps import advanced_rag
+    engines = build_sim_engines()
+    ov = OverloadManager(OverloadConfig(
+        deadline_s=0.01, degrade=True, degrade_after=1, cooldown_s=0.0))
+    orch = Teola(advanced_rag(engines), engines, continuous_batching=True,
+                 overload=ov)
+    try:
+        out, ctx = orch.query(dict(Q), timeout=120)
+        assert ctx.error is None and out     # degraded, never dropped
+        snap = ov.degrade.snapshot()
+        assert snap["level"] >= 1
+        assert snap["queries_degraded"] == 1
+        assert getattr(ctx, "degraded_steps", set())
+    finally:
+        orch.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# serve.py flag validation
+
+def _validate(argv):
+    from repro.launch.serve import build_parser, validate_args
+    ap = build_parser()
+    args = ap.parse_args(argv)
+    validate_args(ap, args)
+    return args
+
+
+@pytest.mark.parametrize("argv,msg", [
+    (["--continuous-batching", "--query-deadline", "5"],
+     "--overload-control"),
+    (["--continuous-batching", "--shed-queue-tokens", "64"],
+     "--overload-control"),
+    (["--continuous-batching", "--hedge-after", "0.1"],
+     "--overload-control"),
+    (["--continuous-batching", "--degrade"], "--overload-control"),
+    (["--overload-control"], "--continuous-batching"),
+    (["--continuous-batching", "--overload-control",
+      "--query-deadline", "0"], "--query-deadline must be > 0"),
+    (["--continuous-batching", "--overload-control", "--degrade"],
+     "--degrade requires --query-deadline"),
+    (["--encoder-instances", "2"], "--sim"),
+])
+def test_serve_rejects_bad_overload_flags(argv, msg, capsys):
+    with pytest.raises(SystemExit) as e:
+        _validate(argv)
+    assert e.value.code == 2
+    assert msg in capsys.readouterr().err
+
+
+def test_serve_accepts_overload_flags():
+    args = _validate(["--sim", "--continuous-batching",
+                      "--overload-control", "--query-deadline", "5",
+                      "--shed-queue-tokens", "256", "--hedge-after",
+                      "0.05", "--degrade", "--encoder-instances", "2"])
+    assert args.overload_control and args.degrade
+    args = _validate([])
+    assert not args.overload_control         # plain serve untouched
